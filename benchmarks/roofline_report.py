@@ -1,0 +1,59 @@
+"""Roofline table from the dry-run JSONs (results/*.json) — EXPERIMENTS.md
+§Roofline reads this output.  One row per (arch x shape x mesh) cell with
+the three terms, bottleneck, and MODEL_FLOPS/HLO_FLOPs ratio."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS_DIR", "results")
+
+
+def load_cells(results_dir: str = RESULTS_DIR) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def table(cells: list[dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':6s} {'kind':7s} "
+           f"{'compute_ms':>10s} {'memory_ms':>10s} {'coll_ms':>9s} "
+           f"{'bottleneck':>10s} {'useful':>7s} {'mem/chip':>9s}")
+    lines = [hdr, "-" * len(hdr)]
+    for d in cells:
+        lines.append(
+            f"{d['arch']:24s} {d['shape']:12s} {d['mesh']:6s} "
+            f"{d.get('kind','?'):7s} "
+            f"{d['compute_s']*1e3:10.3f} {d['memory_s']*1e3:10.3f} "
+            f"{d['collective_s']*1e3:9.3f} {d['bottleneck']:>10s} "
+            f"{d['useful_ratio']:7.2%} "
+            f"{d['bytes_per_device']/2**30:8.2f}G")
+    return "\n".join(lines)
+
+
+def main(csv: bool = True) -> list[tuple]:
+    cells = load_cells()
+    rows = []
+    for d in cells:
+        dominant_ms = max(d["compute_s"], d["memory_s"],
+                          d["collective_s"]) * 1e3
+        rows.append((
+            f"roofline_{d['arch']}_{d['shape']}_{d['mesh']}",
+            dominant_ms * 1e3,
+            f"bottleneck={d['bottleneck']} compute={d['compute_s']*1e3:.2f}ms "
+            f"memory={d['memory_s']*1e3:.2f}ms "
+            f"coll={d['collective_s']*1e3:.2f}ms useful={d['useful_ratio']:.2%}"))
+    if csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.2f},{derived}")
+        if not rows:
+            print("roofline_no_results,0.0,run repro.launch.dryrun --all first")
+    return rows
+
+
+if __name__ == "__main__":
+    print(table(load_cells()))

@@ -1,0 +1,34 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV rows:
+    bag_cache_*     — paper Fig 6 (ROSBag memory cache vs disk)
+    scalability_*   — paper Fig 7 + §4.2 extrapolation
+    binpipe_*       — paper Fig 4 (BinPipedRDD stage throughput)
+    roofline_*      — dry-run roofline terms per (arch x shape x mesh)
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import bag_cache, binpipe, roofline_report, scalability
+    failures = 0
+    for mod in (bag_cache, scalability, binpipe, roofline_report):
+        try:
+            mod.main(csv=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            name = mod.__name__.split(".")[-1]
+            print(f"{name}_FAILED,0.0,{traceback.format_exc(limit=1)!r}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""The paper's headline scenario at benchmark scale: distributed playback
+simulation with fault injection and straggler mitigation.
+
+A recorded multi-topic drive is partitioned across a worker pool; each
+worker replays its partition through the ROSBag memory cache into a
+perception-latency user logic.  Mid-job we kill a worker and add two
+elastic replacements; the scheduler's lineage-based retry + speculative
+execution must deliver every message exactly once to the output bags.
+
+    PYTHONPATH=src python examples/distributed_playback.py
+"""
+
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.core import Bag, Scheduler
+from repro.core.bag import partition_bag
+from repro.core.simulation import _run_partition
+
+FRAMES = 1200
+WORKERS = 4
+PARTITIONS = 12
+
+tmp = tempfile.mkdtemp(prefix="playback")
+bag_path = os.path.join(tmp, "drive.bag")
+rng = np.random.RandomState(7)
+with Bag.open_write(bag_path, chunk_bytes=32 * 1024) as bag:
+    for i in range(FRAMES):
+        bag.write("/camera", i * 33_000_000, rng.bytes(1024))
+
+def user_logic(msg):
+    return ("/det", msg.data[:8])
+
+src = Bag.open_read(bag_path)
+parts = partition_bag(src, PARTITIONS)
+src.close()
+
+t0 = time.monotonic()
+with Scheduler(num_workers=WORKERS, heartbeat_timeout=0.5,
+               speculation=True) as sched:
+    sched.add_worker("flaky", fail_after=2)          # dies on its 2nd task
+    for lo, hi in parts:
+        sched.submit(_run_partition, bag_path, (lo, hi), user_logic, True,
+                     0.002, lineage=("bag", bag_path, lo, hi))
+
+    def chaos():
+        time.sleep(0.15)
+        sched.kill_worker("w0")                      # node loss mid-job
+        sched.add_worker("elastic1")                 # elastic scale-up
+        sched.add_worker("elastic2")
+
+    threading.Thread(target=chaos, daemon=True).start()
+    results = sched.run(timeout=120)
+    stats = dict(sched.stats)
+
+wall = time.monotonic() - t0
+total_in = sum(r[0] for r in results.values())
+total_out = sum(r[1] for r in results.values())
+print(f"partitions={len(parts)} replayed={total_in} detections={total_out} "
+      f"wall={wall:.2f}s")
+print(f"scheduler: {stats}")
+assert total_in == FRAMES, "lost messages!"
+assert total_out == FRAMES
+print("OK: every frame survived a worker crash + node loss "
+      f"(retries={stats['retries']}, "
+      f"speculative={stats['speculative_launches']}, "
+      f"deaths={stats['worker_deaths']})")

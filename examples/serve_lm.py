@@ -1,0 +1,16 @@
+"""Batched serving example: prefill + decode with a request queue on a
+small LM (see repro/launch/serve.py for the driver; this example runs it
+at a demo scale and prints throughput).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import subprocess
+import sys
+
+cmd = [sys.executable, "-m", "repro.launch.serve",
+       "--arch", "qwen3-4b", "--tiny",
+       "--requests", "16", "--batch", "8",
+       "--prompt-len", "16", "--gen", "16"]
+print(">>", " ".join(cmd))
+subprocess.run(cmd, check=True)

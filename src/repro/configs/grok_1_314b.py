@@ -1,0 +1,21 @@
+"""grok-1-314b [moe] — 8 experts top-2 [hf:xai-org/grok-1; unverified].
+64L d_model=6144 48H (GQA kv=8) d_ff=32768 vocab=131072.  Huge experts =>
+TP inside experts (d_ff over `model`) + FSDP over `data` to fit HBM."""
+
+from repro.models.config import ModelConfig, register
+
+register(ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    num_layers=64,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab_size=131072,
+    num_experts=8,
+    num_experts_per_tok=2,
+    expert_sharding="ffn",
+    rope_theta=10_000.0,
+))

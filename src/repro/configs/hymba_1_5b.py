@@ -1,0 +1,23 @@
+"""hymba-1.5b [hybrid] — parallel attention + Mamba heads per block
+[arXiv:2411.13676; hf].  32L d_model=1600 25H (GQA kv=5) d_ff=5504
+vocab=32001, ssm_state=16.  Sliding-window attention (the full-attention
+layers of the released model are approximated as SWA; the mamba path carries
+global context) => sub-quadratic, runs long_500k."""
+
+from repro.models.config import ModelConfig, register
+
+register(ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    ssm_state=16,
+    ssm_d_inner=3200,
+    sliding_window=1024,
+    rope_theta=10_000.0,
+))

@@ -1,0 +1,26 @@
+"""minicpm3-4b [dense] — MLA (multi-head latent attention)
+[hf:openbmb/MiniCPM3-4B].  62L d_model=2560 40H d_ff=6400 vocab=73448.
+MLA latents: q_lora=768, kv_lora=256, qk_nope=64, qk_rope=32, v=64 —
+the KV cache holds (kv_lora + qk_rope) = 288 floats/token instead of
+40 heads x 128 = 5120 (17.8x compression)."""
+
+from repro.models.config import ModelConfig, register
+
+register(ModelConfig(
+    name="minicpm3-4b",
+    family="dense",
+    attention="mla",
+    num_layers=62,
+    d_model=2560,
+    num_heads=40,
+    num_kv_heads=40,
+    head_dim=64,
+    d_ff=6400,
+    vocab_size=73448,
+    q_lora_rank=768,
+    kv_lora_rank=256,
+    qk_nope_head_dim=64,
+    qk_rope_head_dim=32,
+    v_head_dim=64,
+    rope_theta=10_000.0,
+))

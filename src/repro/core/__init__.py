@@ -1,0 +1,26 @@
+"""The paper's primary contribution: a distributed playback-simulation
+platform (Spark+ROS -> JAX/TPU adaptation, see DESIGN.md).
+
+Layers:
+    bag        -- Bag / ChunkedFile / MemoryChunkedFile (ROSBag cache, §3.2)
+    binpipe    -- BinPipedRDD: encode/serialize/frame/decode (§3.1)
+    playback   -- MessageBus / RosPlay / RosRecord (§2)
+    scheduler  -- driver/worker scheduling, fault tolerance, stragglers (§3)
+    simulation -- DistributedSimulation: the end-to-end platform (Figs 3&5)
+"""
+
+from .bag import Bag, ChunkedFile, MemoryChunkedFile, Message, partition_bag
+from .binpipe import (BinaryPartition, decode, deserialize, encode, frame,
+                      serialize, unframe)
+from .playback import MessageBus, RosPlay, RosRecord
+from .scheduler import Scheduler, Task, Worker, WorkerError
+from .simulation import DistributedSimulation, SimulationReport, bag_to_partitions
+
+__all__ = [
+    "Bag", "ChunkedFile", "MemoryChunkedFile", "Message", "partition_bag",
+    "BinaryPartition", "encode", "decode", "serialize", "deserialize",
+    "frame", "unframe",
+    "MessageBus", "RosPlay", "RosRecord",
+    "Scheduler", "Task", "Worker", "WorkerError",
+    "DistributedSimulation", "SimulationReport", "bag_to_partitions",
+]

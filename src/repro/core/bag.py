@@ -1,0 +1,452 @@
+"""Bag format: the paper's two-tier logical structure (Fig 2).
+
+Upper tier:  :class:`Bag` — user-facing record API (topic, timestamp, payload),
+             grouping records into chunks with a time/topic index.
+Lower tier:  :class:`ChunkedFile` — chunk store on disk;
+             :class:`MemoryChunkedFile` — the paper's contribution (Fig 6):
+             inherits ChunkedFile and overrides every I/O method to read and
+             write chunks in RAM instead of the disk, so ROSPlay/ROSRecord
+             stream through memory ("ROSBag cache", §3.2).
+
+Binary layout (disk):
+    [8s magic "REPROBAG"][u32 version]
+    chunk*:  [u32 crc-less header: record_count][u64 payload_len][payload]
+    footer:  written by Bag.close() via the index block (see Bag._write_index)
+
+Chunk payload = concatenated records:
+    [u32 topic_id][u64 timestamp_ns][u32 data_len][data]
+"""
+
+from __future__ import annotations
+
+import io
+import os
+import struct
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Iterator, Optional, Sequence
+
+_MAGIC = b"REPROBAG"
+_VERSION = 2
+_HDR = struct.Struct("<IQ")          # record_count, payload_len
+_REC = struct.Struct("<IQI")         # topic_id, timestamp_ns, data_len
+DEFAULT_CHUNK_BYTES = 768 * 1024     # rosbag's default chunk threshold
+
+
+@dataclass(frozen=True)
+class Message:
+    topic: str
+    timestamp: int           # nanoseconds
+    data: bytes
+
+
+@dataclass
+class ChunkInfo:
+    offset: int               # opaque handle given by the ChunkedFile tier
+    record_count: int
+    t_min: int
+    t_max: int
+    topics: set = field(default_factory=set)
+
+
+class ChunkedFile:
+    """Lower tier: sequential chunk store backed by the disk.
+
+    The Bag tier only ever calls :meth:`write_chunk`, :meth:`read_chunk`,
+    :meth:`flush` and :meth:`close`, so a subclass that overrides those —
+    like :class:`MemoryChunkedFile` — transparently changes the medium.
+    """
+
+    def __init__(self, path: Optional[str] = None, mode: str = "r"):
+        self.path = path
+        self.mode = mode
+        self._lock = threading.Lock()
+        if mode == "w":
+            self._f: io.BufferedIOBase = open(path, "wb")
+            self._f.write(_MAGIC + struct.pack("<I", _VERSION))
+        elif mode == "r":
+            self._f = open(path, "rb")
+            magic = self._f.read(8)
+            if magic != _MAGIC:
+                raise ValueError(f"not a repro bag: {path!r}")
+            (version,) = struct.unpack("<I", self._f.read(4))
+            if version != _VERSION:
+                raise ValueError(f"bag version {version} != {_VERSION}")
+        else:
+            raise ValueError(mode)
+
+    # -- methods a subclass overrides to change the storage medium ---------
+
+    def write_chunk(self, payload: bytes, record_count: int) -> int:
+        """Append one chunk; returns its opaque offset handle."""
+        with self._lock:
+            off = self._f.tell()
+            self._f.write(_HDR.pack(record_count, len(payload)))
+            self._f.write(payload)
+            return off
+
+    def read_chunk(self, offset: int) -> tuple[bytes, int]:
+        """Return (payload, record_count) for the chunk at ``offset``."""
+        with self._lock:
+            self._f.seek(offset)
+            record_count, payload_len = _HDR.unpack(self._f.read(_HDR.size))
+            return self._f.read(payload_len), record_count
+
+    def write_blob(self, blob: bytes) -> int:
+        """Raw append (used for the index block)."""
+        with self._lock:
+            off = self._f.tell()
+            self._f.write(blob)
+            return off
+
+    def read_blob(self, offset: int, length: int) -> bytes:
+        with self._lock:
+            self._f.seek(offset)
+            return self._f.read(length)
+
+    def size(self) -> int:
+        with self._lock:
+            pos = self._f.tell()
+            self._f.seek(0, os.SEEK_END)
+            end = self._f.tell()
+            self._f.seek(pos)
+            return end
+
+    def flush(self) -> None:
+        self._f.flush()
+        os.fsync(self._f.fileno())
+
+    def close(self) -> None:
+        try:
+            self._f.close()
+        except Exception:
+            pass
+
+
+class MemoryChunkedFile(ChunkedFile):
+    """The paper's ROSBag cache (§3.2, Fig 6).
+
+    Inherits from ChunkedFile and overrides *all* of its I/O methods; chunks
+    live in process memory, so playback and recording never touch the disk.
+
+    Write mode stores chunk payloads as *references* in a segment list
+    (zero-copy appends; the disk-format image is only materialised by
+    ``image()``/``persist()``); read mode wraps a single immutable buffer
+    with a memoryview (zero upfront copy).  ``persist()``/``from_file()``
+    move whole images between RAM and disk, which is how a worker
+    materialises a partition it received over the wire.
+    """
+
+    def __init__(self, image: Optional[bytes] = None):
+        # NOTE: deliberately does NOT call super().__init__ — no file handle.
+        self.path = None
+        self.mode = "rw"
+        self._lock = threading.Lock()
+        header = _MAGIC + struct.pack("<I", _VERSION)
+        if image is not None:
+            if bytes(image[:8]) != _MAGIC:
+                raise ValueError("not a repro bag image")
+            self._ro: Optional[memoryview] = memoryview(image)
+            self._size = len(image)
+            self._chunks: dict[int, tuple[int, bytes]] = {}
+            self._segs: list[bytes] = []
+        else:
+            self._ro = None
+            self._size = len(header)
+            self._chunks = {}
+            self._segs = [header]
+
+    def write_chunk(self, payload: bytes, record_count: int) -> int:
+        with self._lock:
+            off = self._size
+            self._chunks[off] = (record_count, payload)   # reference, no copy
+            self._segs.append(None)                       # placeholder
+            self._segs[-1] = (off, record_count, payload)  # type: ignore
+            self._size += _HDR.size + len(payload)
+            return off
+
+    def read_chunk(self, offset: int) -> tuple[bytes, int]:
+        with self._lock:
+            if self._ro is not None:
+                record_count, payload_len = _HDR.unpack_from(self._ro, offset)
+                start = offset + _HDR.size
+                return bytes(self._ro[start:start + payload_len]), record_count
+            record_count, payload = self._chunks[offset]
+            return payload, record_count
+
+    def write_blob(self, blob: bytes) -> int:
+        with self._lock:
+            off = self._size
+            self._segs.append((off, None, blob))  # type: ignore
+            self._size += len(blob)
+            return off
+
+    def read_blob(self, offset: int, length: int) -> bytes:
+        with self._lock:
+            if self._ro is not None:
+                return bytes(self._ro[offset:offset + length])
+        # write-mode read (rare: only the index loader) — materialise
+        img = self.image()
+        return img[offset:offset + length]
+
+    def size(self) -> int:
+        with self._lock:
+            return self._size
+
+    def flush(self) -> None:  # RAM is always "flushed"
+        pass
+
+    def close(self) -> None:
+        pass
+
+    # -- RAM <-> disk interchange ------------------------------------------
+
+    def image(self) -> bytes:
+        """Materialise the disk-format byte image (single join)."""
+        with self._lock:
+            if self._ro is not None:
+                return bytes(self._ro)
+            parts: list[bytes] = []
+            for seg in self._segs:
+                if isinstance(seg, bytes):
+                    parts.append(seg)
+                else:
+                    off, rc, payload = seg
+                    if rc is None:
+                        parts.append(payload)
+                    else:
+                        parts.append(_HDR.pack(rc, len(payload)))
+                        parts.append(payload)
+            return b"".join(parts)
+
+    def persist(self, path: str) -> None:
+        with open(path, "wb") as f:
+            f.write(self.image())
+
+    @classmethod
+    def from_file(cls, path: str) -> "MemoryChunkedFile":
+        with open(path, "rb") as f:
+            return cls(f.read())
+
+
+class Bag:
+    """Upper tier: topic/timestamp record API over a ChunkedFile.
+
+    ``Bag.open_write(...)`` / ``Bag.open_read(...)`` choose the backend:
+    ``backend="disk"`` uses :class:`ChunkedFile`, ``backend="memory"`` uses
+    :class:`MemoryChunkedFile` (the paper's cache).
+    """
+
+    _INDEX = struct.Struct("<QIQQ")   # chunk offset, record_count, t_min, t_max
+
+    def __init__(self, chunked: ChunkedFile, writable: bool,
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES):
+        self._cf = chunked
+        self._writable = writable
+        self._chunk_bytes = chunk_bytes
+        self._topics: dict[str, int] = {}
+        self._topic_names: list[str] = []
+        self._chunks: list[ChunkInfo] = []
+        self._pending = bytearray()
+        self._pending_records: list[tuple[int, int]] = []  # (topic_id, t)
+        self._closed = False
+        if not writable:
+            self._load_index()
+
+    # -- constructors --------------------------------------------------------
+
+    @classmethod
+    def open_write(cls, path: Optional[str] = None, backend: str = "disk",
+                   chunk_bytes: int = DEFAULT_CHUNK_BYTES) -> "Bag":
+        if backend == "disk":
+            return cls(ChunkedFile(path, "w"), True, chunk_bytes)
+        elif backend == "memory":
+            return cls(MemoryChunkedFile(), True, chunk_bytes)
+        raise ValueError(backend)
+
+    @classmethod
+    def open_read(cls, path: Optional[str] = None, backend: str = "disk",
+                  image: Optional[bytes] = None) -> "Bag":
+        if backend == "disk":
+            return cls(ChunkedFile(path, "r"), False)
+        elif backend == "memory":
+            return cls(MemoryChunkedFile(image), False)
+        raise ValueError(backend)
+
+    @property
+    def chunked_file(self) -> ChunkedFile:
+        return self._cf
+
+    # -- write path -----------------------------------------------------------
+
+    def _topic_id(self, topic: str) -> int:
+        tid = self._topics.get(topic)
+        if tid is None:
+            tid = len(self._topic_names)
+            self._topics[topic] = tid
+            self._topic_names.append(topic)
+        return tid
+
+    def write(self, topic: str, timestamp: int, data: bytes) -> None:
+        if not self._writable or self._closed:
+            raise RuntimeError("bag not writable")
+        tid = self._topic_id(topic)
+        if not self._pending_records and len(data) >= self._chunk_bytes:
+            # large-record fast path: one record = one chunk, single copy
+            payload = _REC.pack(tid, timestamp, len(data)) + data
+            self._chunks.append(ChunkInfo(
+                offset=self._cf.write_chunk(payload, 1), record_count=1,
+                t_min=timestamp, t_max=timestamp, topics={tid}))
+            return
+        self._pending += _REC.pack(tid, timestamp, len(data))
+        self._pending += data
+        self._pending_records.append((tid, timestamp))
+        if len(self._pending) >= self._chunk_bytes:
+            self._flush_chunk()
+
+    def write_message(self, msg: Message) -> None:
+        self.write(msg.topic, msg.timestamp, msg.data)
+
+    def _flush_chunk(self) -> None:
+        if not self._pending_records:
+            return
+        ts = [t for _, t in self._pending_records]
+        info = ChunkInfo(
+            offset=self._cf.write_chunk(bytes(self._pending),
+                                        len(self._pending_records)),
+            record_count=len(self._pending_records),
+            t_min=min(ts), t_max=max(ts),
+            topics={tid for tid, _ in self._pending_records},
+        )
+        self._chunks.append(info)
+        self._pending.clear()
+        self._pending_records.clear()
+
+    def _write_index(self) -> None:
+        blob = bytearray()
+        names = "\x00".join(self._topic_names).encode()
+        blob += struct.pack("<I", len(names)) + names
+        blob += struct.pack("<I", len(self._chunks))
+        for c in self._chunks:
+            blob += self._INDEX.pack(c.offset, c.record_count, c.t_min, c.t_max)
+            blob += struct.pack("<I", len(c.topics))
+            for tid in sorted(c.topics):
+                blob += struct.pack("<I", tid)
+        off = self._cf.write_blob(bytes(blob))
+        self._cf.write_blob(struct.pack("<QQ", off, len(blob)) + b"RIDX")
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        if self._writable:
+            self._flush_chunk()
+            self._write_index()
+            self._cf.flush()
+        self._cf.close()
+        self._closed = True
+
+    def __enter__(self) -> "Bag":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- read path -------------------------------------------------------------
+
+    def _load_index(self) -> None:
+        size = self._cf.size()
+        if size < 32:
+            raise ValueError("bag missing index (not closed?)")
+        tail = self._cf.read_blob(size - 20, 20)
+        off, blen = struct.unpack("<QQ", tail[:16])
+        if tail[16:] != b"RIDX" or off + blen > size:
+            raise ValueError("bag missing index (not closed?)")
+        blob = self._cf.read_blob(off, blen)
+        pos = 0
+        (nlen,) = struct.unpack_from("<I", blob, pos); pos += 4
+        names = blob[pos:pos + nlen].decode(); pos += nlen
+        self._topic_names = names.split("\x00") if names else []
+        self._topics = {n: i for i, n in enumerate(self._topic_names)}
+        (nchunks,) = struct.unpack_from("<I", blob, pos); pos += 4
+        for _ in range(nchunks):
+            o, rc, tmin, tmax = self._INDEX.unpack_from(blob, pos)
+            pos += self._INDEX.size
+            (ntop,) = struct.unpack_from("<I", blob, pos); pos += 4
+            tops = set(struct.unpack_from(f"<{ntop}I", blob, pos)); pos += 4 * ntop
+            self._chunks.append(ChunkInfo(o, rc, tmin, tmax, tops))
+
+    @property
+    def topics(self) -> list[str]:
+        return list(self._topic_names)
+
+    @property
+    def num_chunks(self) -> int:
+        return len(self._chunks)
+
+    @property
+    def num_messages(self) -> int:
+        return sum(c.record_count for c in self._chunks)
+
+    def chunk_infos(self) -> list[ChunkInfo]:
+        return list(self._chunks)
+
+    def _iter_chunk(self, info: ChunkInfo) -> Iterator[Message]:
+        payload, record_count = self._cf.read_chunk(info.offset)
+        pos = 0
+        for _ in range(record_count):
+            tid, ts, dlen = _REC.unpack_from(payload, pos)
+            pos += _REC.size
+            data = payload[pos:pos + dlen]
+            pos += dlen
+            yield Message(self._topic_names[tid], ts, data)
+
+    def read_messages(self, topics: Optional[Sequence[str]] = None,
+                      start: Optional[int] = None,
+                      end: Optional[int] = None,
+                      chunk_range: Optional[tuple[int, int]] = None,
+                      ) -> Iterator[Message]:
+        """Time-ordered replay.  ``chunk_range=(lo, hi)`` restricts to a chunk
+        slice — this is the partitioning handle the scheduler uses."""
+        want: Optional[set[int]] = None
+        if topics is not None:
+            want = {self._topics[t] for t in topics if t in self._topics}
+            if not want:
+                return
+        chunks = self._chunks
+        if chunk_range is not None:
+            chunks = chunks[chunk_range[0]:chunk_range[1]]
+        for info in chunks:
+            if start is not None and info.t_max < start:
+                continue
+            if end is not None and info.t_min >= end:
+                continue
+            if want is not None and not (info.topics & want):
+                continue
+            for msg in self._iter_chunk(info):
+                if want is not None and self._topics.get(msg.topic) not in want:
+                    continue
+                if start is not None and msg.timestamp < start:
+                    continue
+                if end is not None and msg.timestamp >= end:
+                    continue
+                yield msg
+
+
+def partition_bag(bag: Bag, num_partitions: int) -> list[tuple[int, int]]:
+    """Split a bag into ``num_partitions`` contiguous chunk ranges with
+    roughly equal record counts — the RDD-partitioning step of the platform."""
+    counts = [c.record_count for c in bag.chunk_infos()]
+    total = sum(counts)
+    if not counts:
+        return []
+    num_partitions = max(1, min(num_partitions, len(counts)))
+    target = total / num_partitions
+    parts: list[tuple[int, int]] = []
+    acc, lo = 0, 0
+    for i, c in enumerate(counts):
+        acc += c
+        if acc >= target and len(parts) < num_partitions - 1:
+            parts.append((lo, i + 1))
+            lo, acc = i + 1, 0
+    parts.append((lo, len(counts)))
+    return parts

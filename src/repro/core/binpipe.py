@@ -1,0 +1,191 @@
+"""BinPipedRDD (paper §3.1, Fig 4) — binary streaming for a framework whose
+native currency is not bytes.
+
+Spark's problem: RDDs are text-oriented; multimedia partitions must be
+encoded (heterogeneous fields -> uniform byte-array format), serialized
+(many byte arrays -> one stream), piped to the user logic, and the results
+encoded/serialized back into ``RDD[Bytes]`` partitions.
+
+JAX's version of the same problem: ``jit`` consumes dense, fixed-layout
+arrays, not variable-length records.  So the pipeline here is:
+
+    encode   : record fields (str / int / float / bytes / ndarray) ->
+               self-describing byte string                       (host)
+    serialize: list[bytes] -> one stream                          (host)
+    frame    : stream -> (payload u8[N], offsets i32[R], lengths i32[R])
+               fixed-layout arrays a TPU kernel can consume       (host)
+    decode   : on-device unpack of framed payloads                (device —
+               see kernels/sensor_decode for the Pallas version)
+
+``deserialize``/``decode`` invert the host stages, and every stage is
+round-trip property-tested.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Any, Iterable, Sequence
+
+import numpy as np
+
+# field type tags of the uniform format
+_T_BYTES = 0
+_T_STR = 1
+_T_INT = 2
+_T_FLOAT = 3
+_T_NDARRAY = 4
+
+_U32 = struct.Struct("<I")
+_U64 = struct.Struct("<Q")
+_I64 = struct.Struct("<q")
+_F64 = struct.Struct("<d")
+
+_DTYPE_CODES = {
+    "uint8": 0, "int8": 1, "int16": 2, "int32": 3, "int64": 4,
+    "float16": 5, "float32": 6, "float64": 7, "bfloat16": 8, "uint16": 9,
+}
+_CODE_DTYPES = {v: k for k, v in _DTYPE_CODES.items()}
+
+
+def _encode_field(out: bytearray, value: Any) -> None:
+    if isinstance(value, (bytes, bytearray, memoryview)):
+        b = bytes(value)
+        out += bytes([_T_BYTES]) + _U32.pack(len(b)) + b
+    elif isinstance(value, str):
+        b = value.encode("utf-8")
+        out += bytes([_T_STR]) + _U32.pack(len(b)) + b
+    elif isinstance(value, (bool, np.bool_)):
+        out += bytes([_T_INT]) + _U32.pack(8) + _I64.pack(int(value))
+    elif isinstance(value, (int, np.integer)):
+        out += bytes([_T_INT]) + _U32.pack(8) + _I64.pack(int(value))
+    elif isinstance(value, (float, np.floating)):
+        out += bytes([_T_FLOAT]) + _U32.pack(8) + _F64.pack(float(value))
+    elif isinstance(value, np.ndarray):
+        dt = str(value.dtype)
+        if dt not in _DTYPE_CODES:
+            raise TypeError(f"unsupported ndarray dtype {dt}")
+        body = value.tobytes()
+        hdr = bytes([_DTYPE_CODES[dt], value.ndim]) + b"".join(
+            _U32.pack(d) for d in value.shape)
+        out += bytes([_T_NDARRAY]) + _U32.pack(len(hdr) + len(body)) + hdr + body
+    else:
+        raise TypeError(f"unsupported field type {type(value)!r}")
+
+
+def encode(fields: Sequence[Any]) -> bytes:
+    """Encode one record's fields into the uniform byte-array format."""
+    out = bytearray(_U32.pack(len(fields)))
+    for v in fields:
+        _encode_field(out, v)
+    return bytes(out)
+
+
+def decode(blob: bytes) -> list[Any]:
+    """Invert :func:`encode`."""
+    (nfields,) = _U32.unpack_from(blob, 0)
+    pos = 4
+    fields: list[Any] = []
+    for _ in range(nfields):
+        tag = blob[pos]; pos += 1
+        (ln,) = _U32.unpack_from(blob, pos); pos += 4
+        body = blob[pos:pos + ln]; pos += ln
+        if tag == _T_BYTES:
+            fields.append(bytes(body))
+        elif tag == _T_STR:
+            fields.append(body.decode("utf-8"))
+        elif tag == _T_INT:
+            fields.append(_I64.unpack(body)[0])
+        elif tag == _T_FLOAT:
+            fields.append(_F64.unpack(body)[0])
+        elif tag == _T_NDARRAY:
+            dtype = _CODE_DTYPES[body[0]]
+            ndim = body[1]
+            shape = tuple(
+                _U32.unpack_from(body, 2 + 4 * i)[0] for i in range(ndim))
+            arr = np.frombuffer(body[2 + 4 * ndim:], dtype=dtype).reshape(shape)
+            fields.append(arr.copy())
+        else:
+            raise ValueError(f"bad field tag {tag}")
+    return fields
+
+
+def serialize(records: Iterable[bytes]) -> bytes:
+    """Combine per-record byte arrays into one binary stream."""
+    recs = list(records)
+    out = bytearray(_U32.pack(len(recs)))
+    for r in recs:
+        out += _U64.pack(len(r)) + r
+    return bytes(out)
+
+
+def deserialize(stream: bytes) -> list[bytes]:
+    """Invert :func:`serialize`."""
+    (n,) = _U32.unpack_from(stream, 0)
+    pos = 4
+    recs: list[bytes] = []
+    for _ in range(n):
+        (ln,) = _U64.unpack_from(stream, pos); pos += 8
+        recs.append(stream[pos:pos + ln]); pos += ln
+    return recs
+
+
+# --------------------------------------------------------------------------
+# Fixed-layout framing: the TPU-native tail of the pipe.
+# --------------------------------------------------------------------------
+
+def frame(records: Sequence[bytes], align: int = 128,
+          ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pack records into ``(payload u8[N], offsets i32[R], lengths i32[R])``.
+
+    Offsets are ``align``-aligned (default 128 = TPU lane width) so a Pallas
+    kernel can tile the payload without crossing record boundaries mid-lane.
+    """
+    offsets = np.zeros(len(records), dtype=np.int32)
+    lengths = np.zeros(len(records), dtype=np.int32)
+    pos = 0
+    for i, r in enumerate(records):
+        offsets[i] = pos
+        lengths[i] = len(r)
+        pos += (len(r) + align - 1) // align * align
+    payload = np.zeros(pos if pos else align, dtype=np.uint8)
+    for i, r in enumerate(records):
+        payload[offsets[i]:offsets[i] + lengths[i]] = np.frombuffer(
+            r, dtype=np.uint8)
+    return payload, offsets, lengths
+
+
+def unframe(payload: np.ndarray, offsets: np.ndarray,
+            lengths: np.ndarray) -> list[bytes]:
+    """Invert :func:`frame`."""
+    return [payload[o:o + l].tobytes()
+            for o, l in zip(offsets.tolist(), lengths.tolist())]
+
+
+class BinaryPartition:
+    """One partition of a binary dataset — the unit the scheduler ships.
+
+    Mirrors ``RDD[Bytes]`` partitions: an ordered list of encoded records
+    plus the lineage handle used for fault-tolerant recompute.
+    """
+
+    def __init__(self, records: list[bytes], lineage: tuple = ()):
+        self.records = records
+        self.lineage = lineage          # e.g. ("bag", path, chunk_lo, chunk_hi)
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def to_stream(self) -> bytes:
+        return serialize(self.records)
+
+    @classmethod
+    def from_stream(cls, stream: bytes, lineage: tuple = ()) -> "BinaryPartition":
+        return cls(deserialize(stream), lineage)
+
+    def to_arrays(self, align: int = 128):
+        return frame(self.records, align=align)
+
+    def map(self, user_logic) -> "BinaryPartition":
+        """Apply User Logic record-wise (decode -> compute -> encode)."""
+        out = [encode(user_logic(decode(r))) for r in self.records]
+        return BinaryPartition(out, lineage=self.lineage + ("map",))

@@ -1,0 +1,174 @@
+"""Playback engine: the ROS side of the platform (paper §2, Fig 5).
+
+ROS is "a message pool architecture: the sending node advertises to a Topic,
+the receiving node subscribes to a Topic".  We reproduce those semantics —
+ordering and timing, which is what simulation correctness depends on — with
+an in-process bus rather than TCPROS (see DESIGN.md §8).
+
+``RosPlay``   reads a Bag (disk- or memory-backed) and publishes its
+              messages in timestamp order, optionally paced by wall clock.
+``RosRecord`` subscribes to topics and writes everything to a Bag.
+
+Together with :mod:`repro.core.bag`'s ``MemoryChunkedFile`` these are the two
+"missing links" of §3.2: play-from-memory and record-to-memory.
+"""
+
+from __future__ import annotations
+
+import heapq
+import threading
+import time
+from collections import defaultdict
+from typing import Callable, Iterable, Optional, Sequence
+
+from .bag import Bag, Message
+
+Callback = Callable[[Message], None]
+
+
+class Publisher:
+    def __init__(self, bus: "MessageBus", topic: str):
+        self._bus = bus
+        self.topic = topic
+
+    def publish(self, timestamp: int, data: bytes) -> None:
+        self._bus._dispatch(Message(self.topic, timestamp, data))
+
+    def publish_message(self, msg: Message) -> None:
+        if msg.topic != self.topic:
+            raise ValueError(f"publisher for {self.topic}, got {msg.topic}")
+        self._bus._dispatch(msg)
+
+
+class MessageBus:
+    """Topic pub/sub message pool. Thread-safe; delivery is synchronous and
+    in publish order (deterministic for tests and replay)."""
+
+    def __init__(self):
+        self._subs: dict[str, list[Callback]] = defaultdict(list)
+        self._all: list[Callback] = []
+        self._lock = threading.Lock()
+        self.published = 0
+
+    def advertise(self, topic: str) -> Publisher:
+        return Publisher(self, topic)
+
+    def subscribe(self, topic: Optional[str], callback: Callback) -> None:
+        """``topic=None`` subscribes to every topic (rosbag record -a)."""
+        with self._lock:
+            if topic is None:
+                self._all.append(callback)
+            else:
+                self._subs[topic].append(callback)
+
+    def unsubscribe(self, topic: Optional[str], callback: Callback) -> None:
+        with self._lock:
+            if topic is None:
+                self._all.remove(callback)
+            else:
+                self._subs[topic].remove(callback)
+
+    def _dispatch(self, msg: Message) -> None:
+        with self._lock:
+            cbs = list(self._subs.get(msg.topic, ())) + list(self._all)
+            self.published += 1
+        for cb in cbs:
+            cb(msg)
+
+
+class RosPlay:
+    """Publish a bag's messages to the bus in global timestamp order.
+
+    ``rate``: None = as fast as possible (simulation mode); otherwise a
+    real-time factor (1.0 = original timing) — timing is derived from message
+    timestamps like ``rosbag play``.
+    """
+
+    def __init__(self, bag: Bag, bus: MessageBus,
+                 topics: Optional[Sequence[str]] = None,
+                 rate: Optional[float] = None,
+                 chunk_range: Optional[tuple[int, int]] = None):
+        self._bag = bag
+        self._bus = bus
+        self._topics = topics
+        self._rate = rate
+        self._chunk_range = chunk_range
+        self.messages_played = 0
+
+    def _time_ordered(self) -> Iterable[Message]:
+        """Bag chunks are time-ordered per-chunk but may interleave across
+        topic boundaries; merge-sort on a small heap window keeps global
+        order without materialising the partition."""
+        it = self._bag.read_messages(topics=self._topics,
+                                     chunk_range=self._chunk_range)
+        heap: list[tuple[int, int, Message]] = []
+        seq = 0
+        WINDOW = 4096
+        for msg in it:
+            heapq.heappush(heap, (msg.timestamp, seq, msg))
+            seq += 1
+            if len(heap) > WINDOW:
+                yield heapq.heappop(heap)[2]
+        while heap:
+            yield heapq.heappop(heap)[2]
+
+    def run(self) -> int:
+        pubs: dict[str, Publisher] = {}
+        t0_msg: Optional[int] = None
+        t0_wall = time.monotonic()
+        for msg in self._time_ordered():
+            if self._rate is not None:
+                if t0_msg is None:
+                    t0_msg = msg.timestamp
+                target = (msg.timestamp - t0_msg) / 1e9 / self._rate
+                delay = target - (time.monotonic() - t0_wall)
+                if delay > 0:
+                    time.sleep(delay)
+            pub = pubs.get(msg.topic)
+            if pub is None:
+                pub = pubs[msg.topic] = self._bus.advertise(msg.topic)
+            pub.publish_message(msg)
+            self.messages_played += 1
+        return self.messages_played
+
+
+class RosRecord:
+    """Subscribe to topics and persist every message to a Bag."""
+
+    def __init__(self, bus: MessageBus, bag: Bag,
+                 topics: Optional[Sequence[str]] = None,
+                 exclude_topics: Optional[Sequence[str]] = None):
+        self._bus = bus
+        self._bag = bag
+        self._topics = list(topics) if topics is not None else None
+        self._exclude = set(exclude_topics or ())
+        self._cbs: list[tuple[Optional[str], Callback]] = []
+        self.messages_recorded = 0
+        self._lock = threading.Lock()
+
+    def start(self) -> None:
+        def cb(msg: Message) -> None:
+            if msg.topic in self._exclude:
+                return
+            with self._lock:
+                self._bag.write_message(msg)
+                self.messages_recorded += 1
+        if self._topics is None:
+            self._bus.subscribe(None, cb)
+            self._cbs.append((None, cb))
+        else:
+            for t in self._topics:
+                self._bus.subscribe(t, cb)
+                self._cbs.append((t, cb))
+
+    def stop(self) -> None:
+        for t, cb in self._cbs:
+            self._bus.unsubscribe(t, cb)
+        self._cbs.clear()
+
+    def __enter__(self) -> "RosRecord":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

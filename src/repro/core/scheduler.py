@@ -1,0 +1,325 @@
+"""Driver/worker scheduler: the Spark layer of the platform (paper §3, Fig 3).
+
+"The Spark Driver allocates resource from the Spark worker based on the
+requested amount of data and computation.  Each Spark worker first reads the
+Rosbag data into memory and then launches a ROS node to process the incoming
+data."
+
+This module reproduces the *scheduling semantics* a production platform needs
+at thousand-node scale, in-process (threads) so it is testable on one core:
+
+* task queue with locality-free FIFO dispatch,
+* **fault tolerance**: heartbeat timeouts and fail-fast exceptions requeue
+  the task; recompute is safe because every task carries its *lineage*
+  (source partition handle), like RDDs,
+* **straggler mitigation**: speculative re-execution — when a task has run
+  longer than ``speculation_factor ×`` the median completed duration, a
+  backup copy is launched on another worker and the first finisher wins,
+* **elastic scaling**: workers can join and leave (or die) mid-job,
+* bounded retries: a task failing ``max_attempts`` times fails the job
+  (poison-pill semantics, not an infinite loop).
+
+The same scheduler drives both the playback simulation (each task = one bag
+partition through user logic) and host-side data loading for the training
+pipeline.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Callable, Optional
+
+
+class TaskState(Enum):
+    PENDING = "pending"
+    RUNNING = "running"
+    DONE = "done"
+    FAILED = "failed"
+
+
+@dataclass
+class Task:
+    task_id: int
+    fn: Callable[..., Any]
+    args: tuple
+    lineage: tuple = ()              # recompute handle, e.g. ("bag", path, lo, hi)
+    attempt: int = 0
+    state: TaskState = TaskState.PENDING
+    result: Any = None
+    error: Optional[BaseException] = None
+    started_at: dict[int, float] = field(default_factory=dict)  # attempt -> t
+    finished_by: Optional[str] = None
+
+
+class WorkerError(RuntimeError):
+    pass
+
+
+class Worker(threading.Thread):
+    """A simulated cluster worker.
+
+    Fault injection for tests/benchmarks:
+      ``fail_after``  : raise on the Nth task it executes (process crash),
+      ``slow_factor`` : multiply user-logic sleep time (straggler),
+      ``kill()``      : stop heartbeating and accepting work (node loss).
+    """
+
+    def __init__(self, worker_id: str, inbox: "queue.Queue",
+                 report: Callable[["Worker", Task, int, Any, Optional[BaseException]], None],
+                 heartbeat: Callable[["Worker"], None],
+                 fail_after: Optional[int] = None,
+                 slow_factor: float = 1.0):
+        super().__init__(name=f"worker-{worker_id}", daemon=True)
+        self.worker_id = worker_id
+        self._inbox = inbox
+        self._report = report
+        self._heartbeat = heartbeat
+        self._fail_after = fail_after
+        self.slow_factor = slow_factor
+        self._alive = True
+        self._executed = 0
+
+    def kill(self) -> None:
+        self._alive = False
+
+    @property
+    def is_alive_worker(self) -> bool:
+        return self._alive
+
+    def run(self) -> None:
+        while True:
+            if not self._alive:
+                return                # dead node: stop consuming work
+            try:
+                item = self._inbox.get(timeout=0.05)
+            except queue.Empty:
+                self._heartbeat(self)
+                continue
+            if item is None:          # shutdown sentinel
+                return
+            task, attempt = item
+            if not self._alive:
+                # died between get() and here: this one task is lost
+                return
+            self._heartbeat(self)
+            self._executed += 1
+            if self._fail_after is not None and self._executed >= self._fail_after:
+                self._alive = False   # crash: no report, no more heartbeats
+                continue
+            try:
+                if self.slow_factor > 1.0:
+                    # stragglers burn extra wall time before doing the work
+                    time.sleep(0.001 * (self.slow_factor - 1.0))
+                result = task.fn(*task.args, worker_id=self.worker_id) \
+                    if _wants_worker_id(task.fn) else task.fn(*task.args)
+                self._report(self, task, attempt, result, None)
+            except BaseException as e:   # noqa: BLE001 - report any failure
+                self._report(self, task, attempt, None, e)
+
+
+def _wants_worker_id(fn: Callable) -> bool:
+    try:
+        import inspect
+        return "worker_id" in inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+
+
+class Scheduler:
+    """The driver. ``submit`` tasks, ``run`` to completion, ``results`` out."""
+
+    def __init__(self, num_workers: int = 4,
+                 max_attempts: int = 4,
+                 heartbeat_timeout: float = 2.0,
+                 speculation: bool = True,
+                 speculation_factor: float = 4.0,
+                 speculation_min_done: int = 3):
+        self._tasks: dict[int, Task] = {}
+        self._next_id = 0
+        self._inbox: "queue.Queue" = queue.Queue()
+        self._lock = threading.Lock()
+        self._done_durations: list[float] = []
+        self._workers: dict[str, Worker] = {}
+        self._last_beat: dict[str, float] = {}
+        self._max_attempts = max_attempts
+        self._hb_timeout = heartbeat_timeout
+        self._spec = speculation
+        self._spec_factor = speculation_factor
+        self._spec_min_done = speculation_min_done
+        self._outstanding = 0
+        self._failed_job: Optional[BaseException] = None
+        self.stats = {"retries": 0, "speculative_launches": 0,
+                      "worker_deaths": 0, "tasks_done": 0}
+        for i in range(num_workers):
+            self.add_worker(f"w{i}")
+
+    # -- elastic membership --------------------------------------------------
+
+    def add_worker(self, worker_id: str, **kw) -> Worker:
+        w = Worker(worker_id, self._inbox, self._on_report, self._on_beat, **kw)
+        with self._lock:
+            self._workers[worker_id] = w
+            self._last_beat[worker_id] = time.monotonic()
+        w.start()
+        return w
+
+    def remove_worker(self, worker_id: str) -> None:
+        with self._lock:
+            w = self._workers.pop(worker_id, None)
+            self._last_beat.pop(worker_id, None)
+        if w:
+            w.kill()
+
+    def kill_worker(self, worker_id: str) -> None:
+        """Simulate node loss (stops heartbeats; running task is lost)."""
+        with self._lock:
+            w = self._workers.get(worker_id)
+        if w:
+            w.kill()
+
+    @property
+    def num_alive_workers(self) -> int:
+        with self._lock:
+            return sum(1 for w in self._workers.values() if w.is_alive_worker)
+
+    # -- submission ------------------------------------------------------------
+
+    def submit(self, fn: Callable[..., Any], *args, lineage: tuple = ()) -> int:
+        with self._lock:
+            tid = self._next_id
+            self._next_id += 1
+            task = Task(tid, fn, args, lineage)
+            self._tasks[tid] = task
+            self._outstanding += 1
+        self._dispatch(task)
+        return tid
+
+    def _dispatch(self, task: Task) -> None:
+        task.state = TaskState.RUNNING
+        task.started_at[task.attempt] = time.monotonic()
+        self._inbox.put((task, task.attempt))
+
+    # -- worker callbacks --------------------------------------------------------
+
+    def _on_beat(self, worker: Worker) -> None:
+        with self._lock:
+            self._last_beat[worker.worker_id] = time.monotonic()
+
+    def _on_report(self, worker: Worker, task: Task, attempt: int,
+                   result: Any, error: Optional[BaseException]) -> None:
+        with self._lock:
+            self._last_beat[worker.worker_id] = time.monotonic()
+            if task.state == TaskState.DONE:
+                return                      # a speculative copy already won
+            if error is None:
+                task.state = TaskState.DONE
+                task.result = result
+                task.finished_by = worker.worker_id
+                start = task.started_at.get(attempt)
+                if start is not None:
+                    self._done_durations.append(time.monotonic() - start)
+                self._outstanding -= 1
+                self.stats["tasks_done"] += 1
+            else:
+                task.attempt += 1
+                self.stats["retries"] += 1
+                if task.attempt >= self._max_attempts:
+                    task.state = TaskState.FAILED
+                    task.error = error
+                    self._failed_job = error
+                    self._outstanding -= 1
+                else:
+                    self._dispatch(task)
+
+    # -- driver loop -----------------------------------------------------------------
+
+    def _check_faults(self) -> None:
+        now = time.monotonic()
+        with self._lock:
+            dead = [wid for wid, w in self._workers.items()
+                    if not w.is_alive_worker
+                    or now - self._last_beat.get(wid, now) > self._hb_timeout]
+            for wid in dead:
+                w = self._workers.pop(wid, None)
+                self._last_beat.pop(wid, None)
+                if w is not None:
+                    self.stats["worker_deaths"] += 1
+            # requeue tasks whose only running attempt may have been lost
+            if dead:
+                for task in self._tasks.values():
+                    if task.state == TaskState.RUNNING:
+                        started = task.started_at.get(task.attempt, 0)
+                        if now - started > self._hb_timeout:
+                            task.attempt += 1
+                            self.stats["retries"] += 1
+                            if task.attempt >= self._max_attempts:
+                                task.state = TaskState.FAILED
+                                task.error = WorkerError("lost on dead worker")
+                                self._failed_job = task.error
+                                self._outstanding -= 1
+                            else:
+                                self._dispatch(task)
+
+    def _check_stragglers(self) -> None:
+        if not self._spec:
+            return
+        with self._lock:
+            if len(self._done_durations) < self._spec_min_done:
+                return
+            durs = sorted(self._done_durations)
+            median = durs[len(durs) // 2]
+            threshold = max(self._spec_factor * median, 0.05)
+            now = time.monotonic()
+            for task in self._tasks.values():
+                if task.state != TaskState.RUNNING:
+                    continue
+                started = task.started_at.get(task.attempt)
+                if started is None:
+                    continue
+                if now - started > threshold and task.attempt + 1 not in task.started_at:
+                    # launch one backup copy (same attempt counter slot + 1)
+                    task.attempt += 1
+                    task.started_at[task.attempt] = now
+                    self.stats["speculative_launches"] += 1
+                    self._inbox.put((task, task.attempt))
+
+    def run(self, timeout: float = 120.0) -> dict[int, Any]:
+        """Drive to completion; returns {task_id: result}."""
+        deadline = time.monotonic() + timeout
+        while True:
+            with self._lock:
+                outstanding = self._outstanding
+                failed = self._failed_job
+            if failed is not None:
+                raise WorkerError(f"job failed: {failed}") from failed
+            if outstanding == 0:
+                break
+            if time.monotonic() > deadline:
+                raise TimeoutError("scheduler run timed out")
+            if self.num_alive_workers == 0:
+                raise WorkerError("no alive workers and tasks outstanding")
+            self._check_faults()
+            self._check_stragglers()
+            time.sleep(0.005)
+        with self._lock:
+            return {tid: t.result for tid, t in self._tasks.items()
+                    if t.state == TaskState.DONE}
+
+    def shutdown(self) -> None:
+        with self._lock:
+            workers = list(self._workers.values())
+            self._workers.clear()
+        for w in workers:
+            w.kill()
+        for w in workers:
+            self._inbox.put(None)
+
+    def __enter__(self) -> "Scheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

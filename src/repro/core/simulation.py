@@ -1,0 +1,156 @@
+"""The distributed simulation driver (paper Fig 3 + Fig 5 workflow).
+
+    Bag partitions --RosPlay--> MessageBus --User Logic--> RosRecord --> Bag
+        (driver schedules one task per partition across the worker pool)
+
+Per the paper: "Each Spark worker first reads the Rosbag data into memory
+and then launches a ROS node to process the incoming data."  Here each task:
+
+1. reads its chunk-range partition from the source bag,
+2. copies it into a ``MemoryChunkedFile``-backed bag (the ROSBag cache —
+   this is the I/O optimisation §4.1 measures),
+3. replays it through the user logic attached to the bus,
+4. records outputs into a memory bag whose image is the task result.
+
+``user_logic`` is any callable ``Message -> Optional[(topic, bytes)]`` — in
+production it is a jitted model step (see examples/distributed_playback.py);
+the platform is generic (§5: "the simulator ... can be replaced").
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional, Sequence
+
+from .bag import Bag, Message, partition_bag
+from .binpipe import BinaryPartition, encode
+from .playback import MessageBus, RosPlay, RosRecord
+from .scheduler import Scheduler
+
+UserLogic = Callable[[Message], Optional[tuple[str, bytes]]]
+
+
+@dataclass
+class SimulationReport:
+    messages_in: int
+    messages_out: int
+    wall_time_s: float
+    partitions: int
+    scheduler_stats: dict
+    output_images: list    # list[bytes] — memory-bag images, one per partition
+
+    @property
+    def throughput_msgs_s(self) -> float:
+        return self.messages_in / self.wall_time_s if self.wall_time_s else 0.0
+
+
+def _run_partition(bag_path: str, chunk_range: tuple[int, int],
+                   user_logic: UserLogic, use_memory_cache: bool,
+                   latency_model_s: float = 0.0) -> tuple[int, int, bytes]:
+    """One worker task: play a partition through user logic, record results.
+
+    Returns (messages_in, messages_out, output bag image).
+    """
+    src = Bag.open_read(bag_path, backend="disk")
+    if use_memory_cache:
+        # materialise the partition into the ROSBag cache first (§3.2):
+        cache = Bag.open_write(backend="memory")
+        for msg in src.read_messages(chunk_range=chunk_range):
+            cache.write_message(msg)
+        cache.close()
+        play_bag = Bag.open_read(backend="memory",
+                                 image=cache.chunked_file.image())
+        play_range = None
+    else:
+        play_bag = src
+        play_range = chunk_range
+
+    bus = MessageBus()
+    out_bag = Bag.open_write(backend="memory")
+    # record everything the user logic publishes, but not the replayed inputs
+    rec = RosRecord(bus, out_bag, topics=None, exclude_topics=src.topics)
+
+    n_out = 0
+
+    def on_msg(msg: Message) -> None:
+        nonlocal n_out
+        if latency_model_s:
+            time.sleep(latency_model_s)      # simulated perception latency
+        out = user_logic(msg)
+        if out is not None:
+            topic, data = out
+            bus.advertise(topic).publish(msg.timestamp, data)
+            n_out += 1
+
+    # subscribe user logic to every *input* topic; outputs go to "/out/..."
+    for t in src.topics:
+        bus.subscribe(t, on_msg)
+    rec.start()
+    play = RosPlay(play_bag, bus, chunk_range=play_range)
+    n_in = play.run()
+    rec.stop()
+    out_bag.close()
+    src.close()
+    if use_memory_cache:
+        play_bag.close()
+    return n_in, n_out, out_bag.chunked_file.image()
+
+
+class DistributedSimulation:
+    """Partition a recorded bag across a worker pool and replay it through
+    user logic — the full platform of the paper, minus the physical cluster.
+    """
+
+    def __init__(self, bag_path: str, user_logic: UserLogic,
+                 num_workers: int = 4, num_partitions: Optional[int] = None,
+                 use_memory_cache: bool = True,
+                 latency_model_s: float = 0.0,
+                 scheduler_kwargs: Optional[dict] = None):
+        self.bag_path = bag_path
+        self.user_logic = user_logic
+        self.num_workers = num_workers
+        self.num_partitions = num_partitions or num_workers
+        self.use_memory_cache = use_memory_cache
+        self.latency_model_s = latency_model_s
+        self.scheduler_kwargs = scheduler_kwargs or {}
+
+    def run(self, timeout: float = 300.0) -> SimulationReport:
+        src = Bag.open_read(self.bag_path, backend="disk")
+        parts = partition_bag(src, self.num_partitions)
+        src.close()
+        t0 = time.monotonic()
+        with Scheduler(num_workers=self.num_workers,
+                       **self.scheduler_kwargs) as sched:
+            for lo, hi in parts:
+                sched.submit(
+                    _run_partition, self.bag_path, (lo, hi),
+                    self.user_logic, self.use_memory_cache,
+                    self.latency_model_s,
+                    lineage=("bag", self.bag_path, lo, hi))
+            results = sched.run(timeout=timeout)
+            stats = dict(sched.stats)
+        wall = time.monotonic() - t0
+        n_in = sum(r[0] for r in results.values())
+        n_out = sum(r[1] for r in results.values())
+        images = [r[2] for _, r in sorted(results.items())]
+        return SimulationReport(n_in, n_out, wall, len(parts), stats, images)
+
+
+def bag_to_partitions(bag_path: str, num_partitions: int,
+                      topics: Optional[Sequence[str]] = None,
+                      ) -> list[BinaryPartition]:
+    """Export a bag as BinPipedRDD-style binary partitions (encode stage of
+    Fig 4): each record becomes the uniform format [topic, timestamp, data].
+    """
+    bag = Bag.open_read(bag_path, backend="disk")
+    parts = partition_bag(bag, num_partitions)
+    out = []
+    for lo, hi in parts:
+        records = [encode([m.topic, m.timestamp, m.data])
+                   for m in bag.read_messages(topics=topics,
+                                              chunk_range=(lo, hi))]
+        out.append(BinaryPartition(records,
+                                   lineage=("bag", bag_path, lo, hi)))
+    bag.close()
+    return out

@@ -1,0 +1,5 @@
+from .pipeline import (BagTokenDataset, PrefetchIterator, write_token_bag,
+                       synthetic_corpus_bag)
+
+__all__ = ["BagTokenDataset", "PrefetchIterator", "write_token_bag",
+           "synthetic_corpus_bag"]

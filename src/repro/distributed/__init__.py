@@ -1,0 +1,12 @@
+"""Distributed runtime: sharding rules, mesh context, step builders,
+gradient compression, pipeline parallelism.
+
+NOTE: submodules are imported lazily (``from repro.distributed import
+training``) — this package __init__ stays import-light because model code
+imports ``repro.distributed.context`` at module load.
+"""
+
+from . import context
+from .context import constrain, mesh_ctx, use_mesh_ctx
+
+__all__ = ["context", "constrain", "mesh_ctx", "use_mesh_ctx"]

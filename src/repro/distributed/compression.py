@@ -1,0 +1,107 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Two pieces:
+
+1. ``compress_decompress_ef`` — int8 symmetric per-tensor quantization with
+   an error-feedback accumulator, applied to gradients inside the train
+   step.  Under GSPMD the gradient reduction happens on the *quantize->
+   dequantize* residual-corrected gradients; numerically this is the
+   EF-SGD/EF21 scheme (convergence-preserving), and tests verify training
+   still reaches the uncompressed loss.
+
+2. ``ring_reduce_scatter_int8`` — an explicit shard_map ring implementation
+   showing the wire format: chunks move between neighbours as int8 (4x less
+   ICI traffic than f32 all-reduce), accumulation in f32, requantized per
+   hop.  Used by the perf study; validated against ``psum`` on a host-device
+   mesh in tests/test_distributed.py.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    enabled: bool = False
+    bits: int = 8
+    ef_dtype: str = "float32"       # error-feedback accumulator dtype
+
+
+def _quantize(x: jax.Array, bits: int) -> tuple[jax.Array, jax.Array]:
+    qmax = 2.0 ** (bits - 1) - 1
+    scale = jnp.max(jnp.abs(x)) / qmax
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress_ef(cfg: CompressionConfig, grads: Any,
+                           ef: Any) -> tuple[Any, Any]:
+    """Returns (decompressed grads, new error-feedback state)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e.astype(jnp.float32)
+        q, scale = _quantize(g32, cfg.bits)
+        ghat = q.astype(jnp.float32) * scale
+        new_e = (g32 - ghat).astype(e.dtype)
+        return ghat.astype(g.dtype), new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(ef)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return tdef.unflatten([o[0] for o in out]), \
+        tdef.unflatten([o[1] for o in out])
+
+
+def ring_reduce_scatter_int8(x: jax.Array, mesh: Mesh, axis: str,
+                             ) -> jax.Array:
+    """All-reduce-mean of ``x`` (replicated per device) over mesh axis
+    ``axis`` with int8 wire traffic: ring reduce-scatter (N-1 int8 hops,
+    f32 accumulation, per-hop requantization) followed by an int8
+    all-gather.  x: (N*chunk,) with N = mesh.shape[axis]."""
+    N = mesh.shape[axis]
+
+    def body(xs):
+        idx = jax.lax.axis_index(axis)
+        chunk = xs.shape[0] // N
+        xc = xs.reshape(N, chunk)
+        perm = [(i, (i + 1) % N) for i in range(N)]
+
+        def hop(t, carry):
+            acc, send_q, send_s = carry
+            recv_q = jax.lax.ppermute(send_q, axis, perm)
+            recv_s = jax.lax.ppermute(send_s, axis, perm)
+            # which chunk this hop accumulates: c = idx - t - 1 (mod N)
+            c = jnp.mod(idx - t - 1, N)
+            local = jax.lax.dynamic_index_in_dim(xc, c, 0, keepdims=False)
+            acc_new = recv_q.astype(jnp.float32) * recv_s + local
+            q, s = _quantize(acc_new, 8)
+            return acc_new, q, s
+
+        # step 0: send own chunk idx
+        first = jax.lax.dynamic_index_in_dim(xc, idx, 0, keepdims=False)
+        q0, s0 = _quantize(first, 8)
+        acc, q, s = (first, q0, s0)
+        def loop(t, carry):
+            return hop(t, carry)
+        acc, q, s = jax.lax.fori_loop(0, N - 1, loop, (acc, q, s))
+        # after N-1 hops this device owns the full sum of chunk
+        # c_own = idx - (N-1) - 1 ... == idx (mod N)?  -> idx + 1 mod N
+        own = jnp.mod(idx + 1, N)
+        # all-gather the owned chunks (int8 on the wire)
+        qg = jax.lax.all_gather(q, axis)                  # (N, chunk) int8
+        sg = jax.lax.all_gather(s, axis)                  # (N,)
+        owners = jnp.mod(jnp.arange(N) + 1, N)            # device i owns chunk
+        # reorder: chunk j was produced by device (j - 1) mod N
+        producer = jnp.mod(jnp.arange(N) - 1, N)
+        chunks = qg[producer].astype(jnp.float32) * sg[producer][:, None]
+        return (chunks.reshape(-1) / N).astype(x.dtype)
+
+    return jax.shard_map(body, mesh=mesh, in_specs=P(),
+                         out_specs=P(), check_vma=False)(x)

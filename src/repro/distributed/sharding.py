@@ -1,0 +1,137 @@
+"""Logical-axis sharding rules: DP / FSDP / TP / EP / SP on a
+(pod, data, model) or (data, model) mesh.
+
+Model code declares *logical* axes per parameter (see models.layers.ParamDef)
+and this module maps them to mesh axes.  The default plan:
+
+  vocab / heads / kv_heads / mlp / ssm_inner / latent-up -> "model"   (TP)
+  embed (d_model dim of weights)                        -> "data"    (FSDP)
+  expert:  "model" when cfg.expert_sharding == "expert" (EP), else None
+           (experts replicated, TP inside each expert's d_ff)
+  layers (scan dim), norms                              -> replicated
+
+Activations: batch over ("pod","data") [DP], attention heads over "model".
+The "pod" axis is an outer data-parallel axis by default (hierarchical
+gradient reduction ICI-then-DCI); distributed/pipeline.py can instead run
+GPipe over it.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def logical_rules(cfg: ModelConfig, mesh: Mesh, fsdp: bool = True,
+                  ) -> dict[Optional[str], Optional[str]]:
+    ep = cfg.expert_sharding == "expert"
+    return {
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": None if ep else "model",
+        "expert": "model" if ep else None,
+        "ssm_inner": "model",
+        "latent": None,
+        "embed": "data" if (fsdp and "data" in mesh.axis_names) else None,
+        "layers": None,
+        None: None,
+    }
+
+
+def _spec_for(axes: tuple, rules: dict, shape: tuple, mesh: Mesh) -> P:
+    parts = []
+    for ax, dim in zip(axes, shape):
+        mesh_ax = rules.get(ax)
+        if mesh_ax is not None and dim % mesh.shape[mesh_ax] != 0:
+            mesh_ax = None          # don't shard non-divisible small dims
+        parts.append(mesh_ax)
+    return P(*parts)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, specs: Any,
+                    shapes: Any, fsdp: bool = True) -> Any:
+    """specs: pytree of logical-axis tuples (models.param_specs);
+    shapes: matching pytree of jax.ShapeDtypeStruct (or arrays)."""
+    rules = logical_rules(cfg, mesh, fsdp)
+
+    def one(axes, leaf):
+        return NamedSharding(mesh, _spec_for(tuple(axes), rules,
+                                             leaf.shape, mesh))
+
+    return jax.tree.map(one, specs, shapes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_spec(mesh: Mesh, global_batch: int, ndim: int) -> P:
+    """Shard the leading batch dim over ("pod","data") when divisible."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    if dp and global_batch % dp_size == 0:
+        return P(dp, *([None] * (ndim - 1)))
+    return P(*([None] * ndim))
+
+
+def batch_shardings(mesh: Mesh, batch: Any) -> Any:
+    return jax.tree.map(
+        lambda leaf: NamedSharding(
+            mesh, batch_spec(mesh, leaf.shape[0], leaf.ndim)), batch)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, state: Any) -> Any:
+    """Decode-state sharding: KV/latent caches are (L, B, S, heads-ish, ...)
+    — shard B over dp axes when divisible and the head-ish dims over model
+    where divisible."""
+    rules = logical_rules(cfg, mesh)
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    model_size = mesh.shape.get("model", 1)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        parts: list = [None] * leaf.ndim
+        # find batch dim: axis 1 for (L, B, ...) stacked caches, else 0
+        bdim = 1 if leaf.ndim >= 2 else 0
+        if leaf.shape[bdim] % dp_size == 0 and dp:
+            parts[bdim] = dp
+        # shard KV-head / channel dim over model when divisible:
+        # (L,B,S,KV,hd) -> KV at -2 ; ssm (L,B,di,N) -> di at -2.
+        # GQA archs usually have KV < model-axis size, so fall back to
+        # sharding the SEQUENCE dim (axis bdim+1) — sequence-parallel KV,
+        # the layout that actually fits 32k x 128-seq caches in HBM.
+        if leaf.ndim >= 4:
+            placed = False
+            cand = leaf.ndim - 2
+            if cand != bdim and leaf.shape[cand] % model_size == 0 \
+                    and leaf.shape[cand] >= model_size:
+                parts[cand] = "model"
+                placed = True
+            seq = bdim + 1
+            if not placed and seq != cand and leaf.ndim >= 5 \
+                    and leaf.shape[seq] % model_size == 0 \
+                    and leaf.shape[seq] >= model_size:
+                parts[seq] = "model"
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(one, state)
+
+
+def constrain_activations(x: jax.Array, mesh: Mesh) -> jax.Array:
+    """(B, S, D) activations: batch over dp axes."""
+    dp = dp_axes(mesh)
+    if not dp or x.shape[0] % int(
+            np.prod([mesh.shape[a] for a in dp])) != 0:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(dp, *([None] * (x.ndim - 1)))))

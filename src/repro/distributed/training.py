@@ -1,0 +1,174 @@
+"""Distributed train / serve step builders: pjit-compiled, sharded via the
+logical-axis rules, donation-correct (params/opt-state buffers reused).
+
+These are the functions the launcher runs and the multi-pod dry-run lowers:
+
+    train_step(params, opt_state, batch)        -> (params, opt_state, metrics)
+    serve_prefill(params, batch)                -> DecodeState
+    serve_decode(params, state, tokens)         -> DecodeState
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import ModelApi, get_model
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+from . import sharding as shd
+from .compression import CompressionConfig, compress_decompress_ef
+
+
+# --------------------------------------------------------------------------
+# step functions (pure)
+# --------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    comp_cfg: Optional[CompressionConfig] = None):
+    model = get_model(cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+        if comp_cfg is not None and comp_cfg.enabled:
+            grads, ef = compress_decompress_ef(
+                comp_cfg, grads, opt_state["error_feedback"])
+            new_p, new_s, metrics = adamw_update(
+                opt_cfg, grads, opt_state["adamw"], params)
+            new_state = {"adamw": new_s, "error_feedback": ef}
+        else:
+            new_p, new_s, metrics = adamw_update(
+                opt_cfg, grads, opt_state["adamw"], params)
+            new_state = {"adamw": new_s}
+        metrics["loss"] = loss
+        return new_p, new_state, metrics
+
+    return train_step
+
+
+def init_opt_state(cfg: ModelConfig, opt_cfg: AdamWConfig, params,
+                   comp_cfg: Optional[CompressionConfig] = None):
+    state = {"adamw": adamw_init(opt_cfg, params)}
+    if comp_cfg is not None and comp_cfg.enabled:
+        state["error_feedback"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.dtype(comp_cfg.ef_dtype)),
+            params)
+    return state
+
+
+def make_serve_prefill(cfg: ModelConfig, s_max: int):
+    model = get_model(cfg)
+
+    def serve_prefill(params, batch):
+        return model.prefill(params, batch, s_max)
+
+    return serve_prefill
+
+
+def make_serve_decode(cfg: ModelConfig):
+    model = get_model(cfg)
+
+    def serve_decode(params, state, tokens):
+        return model.decode_step(params, state, tokens)
+
+    return serve_decode
+
+
+# --------------------------------------------------------------------------
+# sharding builders
+# --------------------------------------------------------------------------
+
+def param_struct(cfg: ModelConfig):
+    model = get_model(cfg)
+    return jax.eval_shape(
+        functools.partial(model.init_params, jax.random.PRNGKey(0)))
+
+
+def make_param_shardings(cfg: ModelConfig, mesh: Mesh, fsdp: bool = True):
+    model = get_model(cfg)
+    return shd.param_shardings(cfg, mesh, model.param_specs(),
+                               param_struct(cfg), fsdp=fsdp)
+
+
+def make_opt_shardings(cfg: ModelConfig, opt_cfg: AdamWConfig, mesh: Mesh,
+                       fsdp: bool = True,
+                       comp_cfg: Optional[CompressionConfig] = None):
+    p_sh = make_param_shardings(cfg, mesh, fsdp)
+    from repro.optim.adamw import AdamWState
+    state = {"adamw": AdamWState(NamedSharding(mesh, P()), p_sh, p_sh)}
+    if comp_cfg is not None and comp_cfg.enabled:
+        state["error_feedback"] = p_sh
+    return state
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def jit_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, mesh: Mesh,
+                   batch_struct: Any, fsdp: bool = True,
+                   comp_cfg: Optional[CompressionConfig] = None):
+    """Returns the jitted train step with explicit in/out shardings + donation."""
+    step = make_train_step(cfg, opt_cfg, comp_cfg)
+    p_sh = make_param_shardings(cfg, mesh, fsdp)
+    o_sh = make_opt_shardings(cfg, opt_cfg, mesh, fsdp, comp_cfg)
+    b_sh = shd.batch_shardings(mesh, batch_struct)
+    m_sh = {"loss": replicated(mesh), "grad_norm": replicated(mesh),
+            "lr": replicated(mesh)}
+    return jax.jit(step,
+                   in_shardings=(p_sh, o_sh, b_sh),
+                   out_shardings=(p_sh, o_sh, m_sh),
+                   donate_argnums=(0, 1))
+
+
+def jit_serve_prefill(cfg: ModelConfig, mesh: Mesh, s_max: int,
+                      batch_struct: Any, state_struct: Any,
+                      fsdp: bool = False):
+    fn = make_serve_prefill(cfg, s_max)
+    p_sh = make_param_shardings(cfg, mesh, fsdp)
+    b_sh = shd.batch_shardings(mesh, batch_struct)
+    out_sh = _decode_state_shardings(cfg, mesh, state_struct)
+    return jax.jit(fn, in_shardings=(p_sh, b_sh), out_shardings=out_sh)
+
+
+def jit_serve_decode(cfg: ModelConfig, mesh: Mesh, state_struct: Any,
+                     fsdp: bool = False):
+    fn = make_serve_decode(cfg)
+    p_sh = make_param_shardings(cfg, mesh, fsdp)
+    st_sh = _decode_state_shardings(cfg, mesh, state_struct)
+    tok_sh = NamedSharding(
+        mesh, shd.batch_spec(mesh, state_struct.last_logits.shape[0], 2))
+    return jax.jit(fn, in_shardings=(p_sh, st_sh, tok_sh),
+                   out_shardings=st_sh, donate_argnums=(1,))
+
+
+def _decode_state_shardings(cfg: ModelConfig, mesh: Mesh, state_struct):
+    """Cache leaves sharded (B over dp, head-ish over model); index and
+    logits handled explicitly."""
+    cache_sh = shd.cache_shardings(cfg, mesh, _cache_of(state_struct))
+    B = state_struct.last_logits.shape[0]
+    logits_sh = NamedSharding(mesh, shd.batch_spec(mesh, B, 3))
+    return _rebuild_state(state_struct, cache_sh,
+                          NamedSharding(mesh, P()), logits_sh)
+
+
+def _cache_of(state):
+    from repro.models.encdec import EncDecState
+    from repro.models.transformer import DecodeState
+    if isinstance(state, DecodeState):
+        return state.cache
+    return (state.self_kv, state.cross_k, state.cross_v)
+
+
+def _rebuild_state(state, cache_sh, idx_sh, logits_sh):
+    from repro.models.encdec import EncDecState
+    from repro.models.transformer import DecodeState
+    if isinstance(state, DecodeState):
+        return DecodeState(cache_sh, idx_sh, logits_sh)
+    kv_sh, ck_sh, cv_sh = cache_sh
+    return EncDecState(kv_sh, ck_sh, cv_sh, idx_sh, logits_sh)

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot spots: flash attention,
+Mamba selective scan, and the BinPipedRDD sensor-decode stage.
+Each has a jit wrapper in ops.py and a pure-jnp oracle in ref.py."""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

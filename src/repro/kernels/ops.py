@@ -1,0 +1,63 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels are *targeted* at TPU and validated in interpret mode).  On a real
+TPU backend the same calls compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .flash_attention import flash_attention
+from .selective_scan import selective_scan
+from .sensor_decode import sensor_decode
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def attention(q, k, v, *, causal=True, window=0, blk_q=128, blk_k=128,
+              interpret=None):
+    """Flash attention; layout (B, H, S, hd) / (B, KV, S, hd)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           blk_q=blk_q, blk_k=blk_k, interpret=interpret)
+
+
+def mamba_scan(x, dt, B, C, A, *, blk_d=128, blk_s=128, interpret=None):
+    """Selective scan; x/dt (b,S,di), B/C (b,S,N), A (di,N) negative."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return selective_scan(x, dt, B, C, A, blk_d=blk_d, blk_s=blk_s,
+                          interpret=interpret)
+
+
+def decode_records(payload, scale, zero_point, lengths, *, blk_r=8,
+                   blk_n=512, interpret=None):
+    """On-device BinPipedRDD decode stage (paper Fig 4)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return sensor_decode(payload, scale, zero_point, lengths,
+                         blk_r=blk_r, blk_n=blk_n, interpret=interpret)
+
+
+def decode_partition(partition, feature_bytes: int, *, interpret=None):
+    """Convenience: core.binpipe.BinaryPartition -> (R, feature_bytes) f32
+    feature matrix on device (frame + pad/clip + dequantize)."""
+    payload, offsets, lengths = partition.to_arrays(align=128)
+    R = len(lengths)
+    rows = np.zeros((R, feature_bytes), np.uint8)
+    for i, (o, l) in enumerate(zip(offsets.tolist(), lengths.tolist())):
+        n = min(l, feature_bytes)
+        rows[i, :n] = payload[o:o + n]
+    lengths = np.minimum(lengths, feature_bytes).astype(np.int32)
+    scale = np.full((R,), 1.0 / 255.0, np.float32)
+    zp = np.zeros((R,), np.float32)
+    return decode_records(jnp.asarray(rows), jnp.asarray(scale),
+                          jnp.asarray(zp), jnp.asarray(lengths),
+                          interpret=interpret)

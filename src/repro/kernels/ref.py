@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the
+shape/dtype sweeps in tests/test_kernels.py assert against)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_reference(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd) -> (B, H, Sq, hd)."""
+    B, H, Sq, hd = q.shape
+    _, KV, Sk, _ = k.shape
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg,
+                   k.astype(jnp.float32)) * hd ** -0.5
+    qpos = jnp.arange(Sq) + (Sk - Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None] <= qpos[:, None]
+    if window:
+        mask &= kpos[None] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def selective_scan_reference(x: jax.Array, dt: jax.Array, B: jax.Array,
+                             C: jax.Array, A: jax.Array) -> jax.Array:
+    """Sequential scan oracle.  x, dt: (b, S, di); B, C: (b, S, N);
+    A: (di, N) negative.  Returns (b, S, di) f32."""
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                       # (b,di) (b,di) (b,N) (b,N)
+        decay = jnp.exp(dtt[..., None] * Af)        # (b, di, N)
+        h = decay * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = (h * ct[:, None, :]).sum(-1)            # (b, di)
+        return h, y
+
+    h0 = jnp.zeros((x.shape[0], x.shape[2], A.shape[1]), jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)
+
+
+def sensor_decode_reference(payload: jax.Array, scale: jax.Array,
+                            zero_point: jax.Array,
+                            lengths: jax.Array) -> jax.Array:
+    """(R, Nb) uint8 -> (R, Nb) f32 dequantized, padding zeroed."""
+    u = payload.astype(jnp.float32)
+    val = (u - zero_point[:, None]) * scale[:, None]
+    col = jnp.arange(payload.shape[1])[None, :]
+    return jnp.where(col < lengths[:, None], val, 0.0)

@@ -1,0 +1,76 @@
+"""BinPipedRDD decode stage (paper §3.1, Fig 4) as a Pallas TPU kernel.
+
+The paper pipes serialized binary sensor records from Spark into a ROS node
+over a Linux pipe and decodes them on the CPU.  On TPU the decode stage runs
+*on device*, next to the consumer model: framed uint8 record payloads
+(produced by ``repro.core.binpipe.frame`` — 128-aligned records) are
+dequantized to normalized f32 features in VMEM tiles.
+
+    out[r, n] = (payload[r, n] - zero_point[r]) * scale[r]    (n < length[r],
+                                                               else 0)
+
+Grid = (record blocks, byte blocks); per-record scale / zero-point / length
+ride along as (blk_r, 1) tiles.  This is the "User Logic" pre-stage every
+playback simulation runs, fused with whatever model consumes the features.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _decode_kernel(payload_ref, scale_ref, zp_ref, len_ref, out_ref, *,
+                   blk_n: int):
+    j = pl.program_id(1)
+    u = payload_ref[...].astype(jnp.float32)            # (blk_r, blk_n)
+    scale = scale_ref[...].astype(jnp.float32)          # (blk_r, 1)
+    zp = zp_ref[...].astype(jnp.float32)                # (blk_r, 1)
+    ln = len_ref[...]                                   # (blk_r, 1) int32
+    col = j * blk_n + jax.lax.broadcasted_iota(
+        jnp.int32, u.shape, 1)                          # absolute byte index
+    val = (u - zp) * scale
+    out_ref[...] = jnp.where(col < ln, val, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_r", "blk_n", "interpret"))
+def sensor_decode(payload: jax.Array, scale: jax.Array, zero_point: jax.Array,
+                  lengths: jax.Array, *, blk_r: int = 8, blk_n: int = 512,
+                  interpret: bool = True) -> jax.Array:
+    """payload: (R, Nb) uint8 — one framed record per row (128-aligned);
+    scale, zero_point: (R,) f32; lengths: (R,) int32 valid-byte counts.
+    Returns (R, Nb) f32 with padding bytes zeroed."""
+    R, Nb = payload.shape
+    blk_r = min(blk_r, R)
+    blk_n = min(blk_n, Nb)
+    nr = -(-R // blk_r)
+    nn = -(-Nb // blk_n)
+    pad_r = nr * blk_r - R
+    pad_n = nn * blk_n - Nb
+    if pad_r or pad_n:
+        payload = jnp.pad(payload, ((0, pad_r), (0, pad_n)))
+        scale = jnp.pad(scale, (0, pad_r))
+        zero_point = jnp.pad(zero_point, (0, pad_r))
+        lengths = jnp.pad(lengths, (0, pad_r))
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, blk_n=blk_n),
+        grid=(nr, nn),
+        in_specs=[
+            pl.BlockSpec((blk_r, blk_n), lambda i, j: (i, j)),
+            pl.BlockSpec((blk_r, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((blk_r, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((blk_r, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk_r, blk_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nr * blk_r, nn * blk_n), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(payload, scale[:, None], zero_point[:, None],
+      lengths.astype(jnp.int32)[:, None])
+    return out[:R, :Nb]

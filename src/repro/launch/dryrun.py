@@ -1,0 +1,285 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: prove the distribution config is coherent without
+hardware, and extract the roofline terms from the compiled artifact.
+
+Per (architecture x input shape x mesh) cell this does THREE compiles:
+
+1. the FULL model, layers scanned — proves lower+compile succeeds at 256 /
+   512 devices and yields ``memory_analysis()`` (real per-chip HBM demand);
+2. two CALIBRATION probes (1-layer and 2-layer, layers + inner loops
+   unrolled) — XLA's ``cost_analysis()`` counts while-loop bodies ONCE
+   regardless of trip count (verified empirically), so per-layer flops /
+   bytes / collective-bytes are recovered from the probe difference and
+   extrapolated:  total = outside + L x per_layer.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b \
+        --shape train_4k --mesh single --out results/yi.json
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out-dir results/
+(--all spawns one subprocess per cell for isolation.)
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+
+
+def _probe_cfg(cfg, L: int):
+    # attn_chunk/ssm_block = 0: single full tile per layer — no inner scan
+    # loops left to undercount, and far cheaper to compile than unrolled
+    # chunk loops (flop totals are identical).
+    kw = dict(num_layers=L, scan_layers=False, unroll_inner=True,
+              attn_chunk=0, ssm_block=0)
+    if cfg.is_encoder_decoder:
+        kw["num_encoder_layers"] = L
+    return cfg.replace(**kw)
+
+
+def _build_lowered(cfg, mesh, shape: str, use_fsdp: bool, opt_cfg):
+    """Lower the right step for this cell under the mesh context."""
+    import jax
+
+    from repro.distributed import training as T
+    from repro.distributed.context import use_mesh_ctx
+    from repro.launch import specs as S
+
+    cell = S.SHAPES[shape]
+    B, SL = cell.global_batch, cell.seq_len
+    with mesh, use_mesh_ctx(mesh):
+        if cell.kind == "train":
+            batch = S.train_batch_struct(cfg, B, SL)
+            step = T.jit_train_step(cfg, opt_cfg, mesh, batch, fsdp=use_fsdp)
+            p_struct = T.param_struct(cfg)
+            o_struct = jax.eval_shape(
+                lambda p: T.init_opt_state(cfg, opt_cfg, p), p_struct)
+            return step.lower(p_struct, o_struct, batch)
+        if cell.kind == "prefill":
+            batch = S.prefill_batch_struct(cfg, B, SL)
+            state_struct = jax.eval_shape(
+                lambda p, b: T.make_serve_prefill(cfg, SL)(p, b),
+                T.param_struct(cfg), batch)
+            fn = T.jit_serve_prefill(cfg, mesh, SL, batch, state_struct,
+                                     fsdp=use_fsdp)
+            return fn.lower(T.param_struct(cfg), batch)
+        state = S.decode_state_struct(cfg, B, SL)
+        tokens = S._i32(B, 1)
+        fn = T.jit_serve_decode(cfg, mesh, state, fsdp=use_fsdp)
+        return fn.lower(T.param_struct(cfg), state, tokens)
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, fsdp: str = "auto",
+             opt_flags: dict | None = None) -> dict:
+    from repro.launch import roofline as rl
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import SHAPES
+    from repro.models import get_config
+    from repro.optim import AdamWConfig
+
+    t0 = time.time()
+    cfg = get_config(arch)
+    opt_flags = opt_flags or {}
+    if opt_flags.get("remat"):
+        cfg = cfg.replace(remat=opt_flags["remat"])
+    if opt_flags.get("expert_sharding"):
+        cfg = cfg.replace(expert_sharding=opt_flags["expert_sharding"])
+    if opt_flags.get("attn_chunk"):
+        cfg = cfg.replace(attn_chunk=int(opt_flags["attn_chunk"]))
+    if opt_flags.get("ssm_block"):
+        cfg = cfg.replace(ssm_block=int(opt_flags["ssm_block"]))
+    if opt_flags.get("seq_residual"):
+        cfg = cfg.replace(seq_sharded_residual=True)
+    if opt_flags.get("seq_attn"):
+        cfg = cfg.replace(seq_sharded_attention=True)
+    if opt_flags.get("ssm_bf16"):
+        cfg = cfg.replace(ssm_bf16=True)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    cell = SHAPES[shape]
+
+    total_params, _ = cfg.param_count()
+    if fsdp == "auto":
+        if cell.kind == "train":
+            use_fsdp = True
+        else:   # serve: FSDP the weights only when TP alone can't fit HBM
+            use_fsdp = total_params * 2 / mesh.shape["model"] > 8e9
+    else:
+        use_fsdp = fsdp == "on"
+
+    opt_cfg = AdamWConfig(moment_dtype=opt_flags.get("moment_dtype",
+                                                     "float32"))
+
+    # --- 1. full compile (the dry-run deliverable) -------------------------
+    lowered = _build_lowered(cfg, mesh, shape, use_fsdp, opt_cfg)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    full_compile_s = round(time.time() - t0, 1)
+
+    # --- 2. calibration probes --------------------------------------------
+    def probe(L: int):
+        low = _build_lowered(_probe_cfg(cfg, L), mesh, shape, use_fsdp,
+                             opt_cfg)
+        comp = low.compile()
+        cost = comp.cost_analysis()
+        coll = rl.collective_bytes(comp.as_text())
+        return (float(cost.get("flops", 0.0)),
+                float(cost.get("bytes accessed", 0.0)),
+                coll)
+
+    f1, b1, c1 = probe(1)
+    f2, b2, c2 = probe(2)
+    L = cfg.num_layers
+    flops_layer = max(f2 - f1, 0.0)
+    bytes_layer = max(b2 - b1, 0.0)
+    flops_total = max(f1 - flops_layer, 0.0) + L * flops_layer
+    bytes_total = max(b1 - bytes_layer, 0.0) + L * bytes_layer
+    coll_layer = max(c2["total_bytes"] - c1["total_bytes"], 0)
+    coll_total = max(c1["total_bytes"] - coll_layer, 0) + L * coll_layer
+    coll_by_op = {}
+    for op in set(c1["bytes_by_op"]) | set(c2["bytes_by_op"]):
+        per = max(c2["bytes_by_op"].get(op, 0) - c1["bytes_by_op"].get(op, 0),
+                  0)
+        out = max(c1["bytes_by_op"].get(op, 0) - per, 0)
+        tot = out + L * per
+        if tot:
+            coll_by_op[op] = tot
+    counts = {op: c1["counts"][op] + (c2["counts"][op] - c1["counts"][op])
+              * (L - 1) for op in c1["counts"]
+              if c1["counts"][op] or c2["counts"][op]}
+
+    mf = rl.model_flops(cfg, cell.kind, cell.seq_len, cell.global_batch)
+
+    r = rl.Roofline(
+        arch=arch, shape=shape, mesh=mesh_kind, chips=chips,
+        hlo_flops=flops_total,
+        hlo_bytes=bytes_total,
+        collective_bytes_per_chip=float(coll_total),
+        collective_counts=counts,
+        model_flops=mf,
+        bytes_per_device=float(mem.argument_size_in_bytes
+                               + mem.temp_size_in_bytes
+                               + mem.output_size_in_bytes
+                               - mem.alias_size_in_bytes),
+    ).finalize()
+    d = r.to_dict()
+    d.update(
+        kind=cell.kind, fsdp=use_fsdp,
+        argument_bytes=int(mem.argument_size_in_bytes),
+        temp_bytes=int(mem.temp_size_in_bytes),
+        output_bytes=int(mem.output_size_in_bytes),
+        alias_bytes=int(mem.alias_size_in_bytes),
+        bytes_by_op=coll_by_op,
+        full_compile_s=full_compile_s,
+        compile_s=round(time.time() - t0, 1),
+        opt_flags=opt_flags,
+    )
+    return d
+
+
+def _summary(d: dict) -> str:
+    gb = d["bytes_per_device"] / 2**30
+    return (f"{d['arch']:24s} {d['shape']:12s} {d['mesh']:6s} "
+            f"chips={d['chips']:4d} mem/chip={gb:7.2f}GiB "
+            f"compute={d['compute_s']*1e3:9.3f}ms "
+            f"memory={d['memory_s']*1e3:9.3f}ms "
+            f"coll={d['collective_s']*1e3:9.3f}ms "
+            f"bottleneck={d['bottleneck']:10s} "
+            f"useful={d['useful_ratio']:6.2%} "
+            f"compile={d['compile_s']:6.1f}s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--fsdp", default="auto", choices=["auto", "on", "off"])
+    ap.add_argument("--remat", default="")
+    ap.add_argument("--expert-sharding", default="")
+    ap.add_argument("--moment-dtype", default="")
+    ap.add_argument("--attn-chunk", default="")
+    ap.add_argument("--ssm-block", default="")
+    ap.add_argument("--seq-residual", action="store_true")
+    ap.add_argument("--seq-attn", action="store_true")
+    ap.add_argument("--ssm-bf16", action="store_true")
+    ap.add_argument("--out", default="")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--out-dir", default="results")
+    args = ap.parse_args()
+
+    if args.all:
+        _run_all(args)
+        return
+
+    opt_flags = {}
+    if args.remat:
+        opt_flags["remat"] = args.remat
+    if args.expert_sharding:
+        opt_flags["expert_sharding"] = args.expert_sharding
+    if args.moment_dtype:
+        opt_flags["moment_dtype"] = args.moment_dtype
+    if args.attn_chunk:
+        opt_flags["attn_chunk"] = args.attn_chunk
+    if args.ssm_block:
+        opt_flags["ssm_block"] = args.ssm_block
+    if args.seq_residual:
+        opt_flags["seq_residual"] = True
+    if args.seq_attn:
+        opt_flags["seq_attn"] = True
+    if args.ssm_bf16:
+        opt_flags["ssm_bf16"] = True
+    d = run_cell(args.arch, args.shape, args.mesh, args.fsdp, opt_flags)
+    print(_summary(d))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(d, f, indent=1)
+
+
+def _run_all(args) -> None:
+    from repro.configs import ALL_ARCHS
+    from repro.launch.specs import SHAPES, cell_applicable
+    from repro.models import get_config
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    cells = []
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, why = cell_applicable(cfg, shape)
+            if not ok:
+                print(f"SKIP {arch:24s} {shape:12s} -- {why}", flush=True)
+                continue
+            for mesh in args.meshes.split(","):
+                cells.append((arch, shape, mesh))
+    print(f"{len(cells)} cells to run", flush=True)
+    failures = []
+    for arch, shape, mesh in cells:
+        out = os.path.join(args.out_dir,
+                           f"{arch}__{shape}__{mesh}.json".replace("/", "_"))
+        if os.path.exists(out):
+            with open(out) as f:
+                print("CACHED " + _summary(json.load(f)), flush=True)
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--mesh", mesh,
+               "--out", out]
+        r = subprocess.run(cmd, capture_output=True, text=True)
+        if r.returncode != 0:
+            failures.append((arch, shape, mesh))
+            print(f"FAIL {arch} {shape} {mesh}\n{r.stderr[-2500:]}",
+                  flush=True)
+        else:
+            print(r.stdout.strip(), flush=True)
+    print(f"done; {len(failures)} failures: {failures}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips x 197e12 FLOP/s bf16)
+    memory term     = HLO_bytes / (chips x 819e9 B/s HBM)
+    collective term = collective_bytes / (chips x 50e9 B/s ICI link)
+
+``cost_analysis()`` supplies flops/bytes; collective bytes are parsed out
+of the post-SPMD HLO text (operand sizes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute), per instructions.
+Post-SPMD shapes are per-device, so the parsed sum is already per-chip wire
+bytes; we also report a ring-model estimate for reference.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+
+# TPU v5e-class constants (per instructions)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+_DT_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d+|pred)\[([\d,]*)\]")
+_OPLINE_RE = re.compile(
+    r"=\s*(?P<out>\([^)]*\)|[a-z]+\d*\[[\d,]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<op>[a-z\-]+)(?:\()")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LEGACY_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DT_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))            # [num_groups, group_size]
+    m = _GROUPS_LEGACY_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum *operand* bytes per collective opcode from post-SPMD HLO text.
+
+    Operand shapes are not inline in optimized HLO, so we parse each
+    collective's output shape and convert:  all-gather operand = out/g,
+    reduce-scatter operand = out*g (g = replica group size), the rest
+    operand = out.  Post-SPMD shapes are per-device."""
+    out = {op: 0 for op in _COLLECTIVES}
+    counts = {op: 0 for op in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _OPLINE_RE.search(stripped)
+        if not m:
+            continue
+        op = m.group("op")
+        if op.endswith("-start"):
+            op = op[:-6]
+        if op.endswith("-done") or op.endswith("-update"):
+            continue                      # counted at -start
+        if op not in _COLLECTIVES:
+            continue
+        total = sum(_shape_bytes(dt, dims)
+                    for dt, dims in _SHAPE_RE.findall(m.group("out")))
+        g = _group_size(stripped)
+        if op == "all-gather":
+            total = total // max(g, 1)
+        elif op == "reduce-scatter":
+            total = total * g
+        out[op] += total
+        counts[op] += 1
+    return {"bytes_by_op": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float              # whole-program (all chips)
+    hlo_bytes: float
+    collective_bytes_per_chip: float
+    collective_counts: dict
+    model_flops: float
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0
+    bytes_per_device: float = 0.0
+
+    def finalize(self) -> "Roofline":
+        # cost_analysis flops on the SPMD-partitioned module are per-chip
+        # program flops; treat them as per-chip and normalise model flops.
+        self.compute_s = self.hlo_flops / PEAK_FLOPS
+        self.memory_s = self.hlo_bytes / HBM_BW
+        self.collective_s = self.collective_bytes_per_chip / ICI_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        per_chip_model = self.model_flops / max(self.chips, 1)
+        self.useful_ratio = (per_chip_model / self.hlo_flops
+                             if self.hlo_flops else 0.0)
+        return self
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+def model_flops(cfg, kind: str, seq_len: int, global_batch: int) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params.
+
+    D = total tokens processed by the step being lowered: B*S for train and
+    prefill, B for a single decode step.  For the enc-dec arch the prefill
+    cell runs the ENCODER only over S/2 frames, so N is scaled to the
+    encoder's parameter share and D to the frame count (DESIGN.md §4)."""
+    _, active = cfg.param_count()
+    if kind == "train":
+        tokens = global_batch * seq_len
+        return 6.0 * active * tokens
+    if kind == "prefill":
+        tokens = global_batch * seq_len
+        if cfg.is_encoder_decoder:
+            # encoder ~ self-attn + mlp per enc layer; exclude embeddings
+            D = cfg.d_model
+            attn = 4 * D * cfg.num_heads * cfg.head_dim
+            mlp = 3 * D * cfg.d_ff
+            n_enc = cfg.num_encoder_layers * (attn + mlp)
+            return 2.0 * n_enc * global_batch * (seq_len // 2)
+        return 2.0 * active * tokens
+    return 2.0 * active * global_batch     # decode: one token per sequence

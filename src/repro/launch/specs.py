@@ -1,0 +1,123 @@
+"""Input ShapeDtypeStruct stand-ins for every (architecture x shape) cell —
+weak-type-correct, shardable, no device allocation.
+
+Shape cells (LM-family, seq_len x global_batch):
+    train_4k     4,096 x 256   -> train_step
+    prefill_32k  32,768 x 32   -> serve_prefill
+    decode_32k   32,768 x 128  -> serve_decode (1 new token, cache=seq_len)
+    long_500k    524,288 x 1   -> serve_decode; ONLY sub-quadratic archs
+
+[vlm]/[audio] cells feed precomputed patch/frame embeddings (frontend STUB).
+For the enc-dec arch, seq_len is split S/2 encoder frames + S/2 decoder
+positions so total positions per cell match the LM cells (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_config, get_model
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    cell = SHAPES[shape]
+    if cell.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention arch: 500k dense-KV decode is "
+                       "quadratic-history; skipped per assignment "
+                       "(DESIGN.md §4)")
+    return True, ""
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _emb(cfg, *shape):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(cfg.dtype))
+
+
+def train_batch_struct(cfg: ModelConfig, B: int, S: int) -> dict:
+    if cfg.is_encoder_decoder:
+        h = S // 2
+        return {"frames": _emb(cfg, B, h, cfg.d_model),
+                "tokens": _i32(B, h), "labels": _i32(B, h)}
+    if cfg.frontend == "vision":
+        return {"embeds": _emb(cfg, B, S, cfg.d_model),
+                "positions": _i32(B, S, 3), "labels": _i32(B, S)}
+    return {"tokens": _i32(B, S), "labels": _i32(B, S)}
+
+
+def prefill_batch_struct(cfg: ModelConfig, B: int, S: int) -> dict:
+    if cfg.is_encoder_decoder:
+        return {"frames": _emb(cfg, B, S // 2, cfg.d_model)}
+    if cfg.frontend == "vision":
+        return {"embeds": _emb(cfg, B, S, cfg.d_model),
+                "positions": _i32(B, S, 3)}
+    return {"tokens": _i32(B, S)}
+
+
+def decode_state_struct(cfg: ModelConfig, B: int, S: int):
+    model = get_model(cfg)
+    if cfg.is_encoder_decoder:
+        return jax.eval_shape(
+            functools.partial(model.init_decode_state,
+                              B, S // 2, S // 2, index=S // 2 - 1))
+    return jax.eval_shape(
+        functools.partial(model.init_decode_state, B, S, index=S - 1))
+
+
+def input_specs(arch: str, shape: str) -> dict:
+    """Returns {"kind", "args": tuple-of-structs (excluding params/opt)}."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{arch} x {shape} skipped: {why}")
+    B, S = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        return {"kind": "train",
+                "batch": train_batch_struct(cfg, B, S)}
+    if cell.kind == "prefill":
+        return {"kind": "prefill",
+                "batch": prefill_batch_struct(cfg, B, S),
+                "s_max": S}
+    state = decode_state_struct(cfg, B, S)
+    return {"kind": "decode", "state": state, "tokens": _i32(B, 1)}
+
+
+def concrete_train_batch(cfg: ModelConfig, B: int, S: int,
+                         key: jax.Array) -> dict:
+    """Small concrete batches for CPU smoke runs (not the dry-run)."""
+    kt, kl, ke = jax.random.split(key, 3)
+    struct = train_batch_struct(cfg, B, S)
+    out = {}
+    for name, sd in struct.items():
+        if sd.dtype == jnp.int32:
+            hi = cfg.vocab_size if name in ("tokens", "labels") else S
+            out[name] = jax.random.randint(kl, sd.shape, 0, hi)
+        else:
+            out[name] = jax.random.normal(ke, sd.shape, jnp.float32
+                                          ).astype(sd.dtype)
+    return out

@@ -1,0 +1,341 @@
+"""Attention variants: GQA (+ qk-norm / QKV-bias / sliding-window / M-RoPE)
+and MLA (multi-head latent attention, compressed KV cache + absorbed decode).
+
+All sequence-level attention uses a memory-bounded chunked online-softmax
+("flash-style") implementation in pure jnp — the TPU Pallas kernel in
+``repro.kernels.flash_attention`` is numerically validated against the same
+math and is swapped in on real hardware via ``use_pallas``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import context as ctx
+
+from .config import ModelConfig
+from .layers import ParamDef, apply_mrope, apply_rope, rms_norm
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    """Dense KV cache (GQA): k/v (B, S_max, KV, hd); index = #valid tokens."""
+    k: jax.Array
+    v: jax.Array
+
+
+class MLACache(NamedTuple):
+    """Compressed cache (MLA): latent (B, S_max, kv_lora), rope key
+    (B, S_max, qk_rope) — the point of MLA is that this is ~10x smaller."""
+    latent: jax.Array
+    k_rope: jax.Array
+
+
+# ==========================================================================
+# GQA
+# ==========================================================================
+
+def gqa_table(cfg: ModelConfig) -> dict[str, ParamDef]:
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    t = {
+        "wq": ParamDef((D, H * hd), ("embed", "heads")),
+        "wk": ParamDef((D, KV * hd), ("embed", "kv_heads")),
+        "wv": ParamDef((D, KV * hd), ("embed", "kv_heads")),
+        "wo": ParamDef((H * hd, D), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        t["bq"] = ParamDef((H * hd,), ("heads",), init="zeros")
+        t["bk"] = ParamDef((KV * hd,), ("kv_heads",), init="zeros")
+        t["bv"] = ParamDef((KV * hd,), ("kv_heads",), init="zeros")
+    if cfg.qk_norm:
+        t["q_norm"] = ParamDef((hd,), (None,), init="ones")
+        t["k_norm"] = ParamDef((hd,), (None,), init="ones")
+    return t
+
+
+def _project_qkv(cfg: ModelConfig, p: dict, x: jax.Array, positions):
+    B, S, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope_type == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      chunk: int = 512, kv_valid: Optional[jax.Array] = None,
+                      unroll: bool = False) -> jax.Array:
+    """Online-softmax attention, scanned over KV chunks.
+
+    q: (B, Sq, H, hd);  k, v: (B, Sk, KV, hd) with H % KV == 0.
+    ``causal`` masks j > i (+ Sk - Sq offset); ``window`` > 0 additionally
+    masks j <= i - window (sliding window).  ``kv_valid``: (B,) number of
+    valid kv positions (for padded caches).  Returns (B, Sq, H, vd).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, vd = v.shape
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scale = hd ** -0.5
+    nchunks = -(-Sk // chunk)
+    pad = nchunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nchunks, chunk, KV, hd)
+    vc = v.reshape(B, nchunks, chunk, KV, vd)
+    q_pos = jnp.arange(Sq) + (Sk - Sq)        # absolute position of queries
+
+    def step(carry, inp):
+        m, l, acc = carry
+        j, kj, vj = inp                        # kj: (B, C, KV, hd)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg.astype(jnp.float32),
+                       kj.astype(jnp.float32)) * scale
+        kv_pos = j * chunk + jnp.arange(chunk)           # (C,)
+        mask = jnp.ones((Sq, chunk), bool)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        mask &= (kv_pos < Sk)[None, :]
+        if kv_valid is not None:
+            bmask = kv_pos[None, :] < kv_valid[:, None]   # (B, C)
+            s = jnp.where(bmask[:, None, None, None, :], s, NEG_INF)
+        s = jnp.where(mask[None, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p_ = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p_.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p_, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, vd), jnp.float32)
+    if unroll:
+        # python loop: identical math, loop body visible to cost_analysis
+        carry = (m0, l0, a0)
+        for j in range(nchunks):
+            carry, _ = step(carry, (jnp.int32(j), kc[:, j], vc[:, j]))
+        m, l, acc = carry
+    else:
+        # checkpoint the chunk body: without this the backward pass stores
+        # every chunk's (blk_q x blk_k) score tile in f32 — O(S^2) memory,
+        # exactly what flash attention exists to avoid.  With it, backward
+        # recomputes scores per chunk from q/k/v (the flash backward).
+        step_ckpt = jax.checkpoint(
+            step, policy=jax.checkpoint_policies.nothing_saveable)
+        (m, l, acc), _ = jax.lax.scan(
+            step_ckpt, (m0, l0, a0),
+            (jnp.arange(nchunks), jnp.moveaxis(kc, 1, 0),
+             jnp.moveaxis(vc, 1, 0)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, vd)   # b k g q d -> b q (kg) d
+    return out.astype(q.dtype)
+
+
+def gqa_forward(cfg: ModelConfig, p: dict, x: jax.Array,
+                positions: jax.Array, causal: bool = True,
+                ) -> tuple[jax.Array, KVCache]:
+    """Full-sequence (train / prefill). Returns output and the KV to cache."""
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    if cfg.seq_sharded_attention:
+        # queries/outputs seq-sharded over `model`; K/V replicated across
+        # the model axis instead of the (B,S,H*hd) activations
+        q = ctx.constrain(q, ctx.dp(), "model", None, None)
+    chunk = cfg.attn_chunk if cfg.attn_chunk > 0 else k.shape[1]
+    out = chunked_attention(q, k, v, causal=causal,
+                            window=cfg.sliding_window, chunk=chunk,
+                            unroll=cfg.unroll_inner)
+    if cfg.seq_sharded_attention:
+        out = ctx.constrain(out, ctx.dp(), "model", None, None)
+    B, S, H, hd = q.shape
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd),
+                     p["wo"].astype(x.dtype))
+    return out, KVCache(k, v)
+
+
+def gqa_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: KVCache,
+               index: jax.Array) -> tuple[jax.Array, KVCache]:
+    """One-token decode. x: (B, 1, D); cache k/v: (B, S_max, KV, hd);
+    index: scalar int32 — number of tokens already in the cache."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), index, jnp.int32)
+    if cfg.rope_type == "mrope":       # text-only decode: t=h=w=index
+        positions = jnp.full((B, 1, 3), index, jnp.int32)
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    S_max = cache.k.shape[1]
+    ring = bool(cfg.sliding_window) and S_max <= cfg.sliding_window
+    write_at = jnp.mod(index, S_max) if ring else index
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache.k, k, write_at, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache.v, v, write_at, axis=1)
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // KV
+    qg = q.reshape(B, 1, KV, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * hd ** -0.5
+    kv_pos = jnp.arange(S_max)
+    if ring:
+        # ring buffer holds exactly the last S_max(=window) positions; the
+        # only invalid slots are the not-yet-written ones before wraparound
+        valid = kv_pos <= index
+    else:
+        valid = kv_pos <= index
+        if cfg.sliding_window:
+            valid &= kv_pos > index - cfg.sliding_window
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bkgqd", w, v_cache.astype(jnp.float32))
+    out = jnp.moveaxis(out, 3, 1).reshape(B, 1, H * hd).astype(x.dtype)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype))
+    return out, KVCache(k_cache, v_cache)
+
+
+def gqa_empty_cache(cfg: ModelConfig, batch: int, s_max: int,
+                    dtype) -> KVCache:
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    if cfg.sliding_window:
+        # ring buffer: exactly `window` slots (see gqa_decode)
+        s_max = min(s_max, cfg.sliding_window)
+    return KVCache(jnp.zeros((batch, s_max, KV, hd), dtype),
+                   jnp.zeros((batch, s_max, KV, hd), dtype))
+
+
+# ==========================================================================
+# MLA
+# ==========================================================================
+
+def mla_table(cfg: ModelConfig) -> dict[str, ParamDef]:
+    D, H = cfg.d_model, cfg.num_heads
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    qlr, kvlr = cfg.q_lora_rank, cfg.kv_lora_rank
+    t = {
+        "kv_down": ParamDef((D, kvlr + rope_d), ("embed", "latent")),
+        "kv_norm": ParamDef((kvlr,), (None,), init="ones"),
+        "kv_up_k": ParamDef((kvlr, H * nope), ("latent", "heads")),
+        "kv_up_v": ParamDef((kvlr, H * vd), ("latent", "heads")),
+        "wo": ParamDef((H * vd, D), ("heads", "embed")),
+    }
+    if qlr:
+        t["q_down"] = ParamDef((D, qlr), ("embed", "latent"))
+        t["q_norm"] = ParamDef((qlr,), (None,), init="ones")
+        t["q_up"] = ParamDef((qlr, H * (nope + rope_d)), ("latent", "heads"))
+    else:
+        t["wq"] = ParamDef((D, H * (nope + rope_d)), ("embed", "heads"))
+    return t
+
+
+def _mla_q(cfg: ModelConfig, p: dict, x: jax.Array, positions):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    nope, rope_d = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["q_down"].astype(x.dtype)),
+                      p["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rh->bsh", cq, p["q_up"].astype(x.dtype))
+    else:
+        q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    q = q.reshape(B, S, H, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(cfg: ModelConfig, p: dict, x: jax.Array, positions):
+    kvlr = cfg.kv_lora_rank
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["kv_down"].astype(x.dtype))
+    latent, k_rope = ckv[..., :kvlr], ckv[..., kvlr:]
+    latent = rms_norm(latent, p["kv_norm"], cfg.norm_eps)
+    # single shared rope key "head"
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return latent, k_rope
+
+
+def mla_forward(cfg: ModelConfig, p: dict, x: jax.Array,
+                positions: jax.Array) -> tuple[jax.Array, MLACache]:
+    """Full-sequence MLA (non-absorbed: expand latent, run chunked attn)."""
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    latent, k_rope = _mla_latent(cfg, p, x, positions)
+    k_nope = jnp.einsum("bsr,rh->bsh", latent,
+                        p["kv_up_k"].astype(x.dtype)).reshape(B, S, H, nope)
+    v = jnp.einsum("bsr,rh->bsh", latent,
+                   p["kv_up_v"].astype(x.dtype)).reshape(B, S, H, vd)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, rope_d))],
+        axis=-1)
+    chunk = cfg.attn_chunk if cfg.attn_chunk > 0 else S
+    out = chunked_attention(q, k, v, causal=True, chunk=chunk,
+                            unroll=cfg.unroll_inner)
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * vd),
+                     p["wo"].astype(x.dtype))
+    return out, MLACache(latent, k_rope)
+
+
+def mla_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: MLACache,
+               index: jax.Array) -> tuple[jax.Array, MLACache]:
+    """Absorbed one-token decode: queries are mapped into latent space, so
+    attention runs against the *compressed* cache directly — the MLA trick
+    that makes the 500k-class caches feasible memory-wise."""
+    B = x.shape[0]
+    H = cfg.num_heads
+    nope, rope_d, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvlr = cfg.kv_lora_rank
+    positions = jnp.full((B, 1), index, jnp.int32)
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)       # (B,1,H,·)
+    latent_t, k_rope_t = _mla_latent(cfg, p, x, positions)
+    latent = jax.lax.dynamic_update_slice_in_dim(
+        cache.latent, latent_t.astype(cache.latent.dtype), index, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache.k_rope, k_rope_t.astype(cache.k_rope.dtype), index, axis=1)
+    # absorb kv_up_k into q:  (B,1,H,nope) @ (kvlr,H,nope) -> (B,1,H,kvlr)
+    up_k = p["kv_up_k"].astype(x.dtype).reshape(kvlr, H, nope)
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, up_k)
+    s = (jnp.einsum("bqhr,bsr->bhqs", q_lat.astype(jnp.float32),
+                    latent.astype(jnp.float32))
+         + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                      k_rope.astype(jnp.float32))) * (nope + rope_d) ** -0.5
+    S_max = latent.shape[1]
+    valid = jnp.arange(S_max) <= index
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out_lat = jnp.einsum("bhqs,bsr->bqhr", w,
+                         latent.astype(jnp.float32)).astype(x.dtype)
+    up_v = p["kv_up_v"].astype(x.dtype).reshape(kvlr, H, vd)
+    out = jnp.einsum("bqhr,rhv->bqhv", out_lat, up_v)
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(B, 1, H * vd),
+                     p["wo"].astype(x.dtype))
+    return out, MLACache(latent, k_rope)
+
+
+def mla_empty_cache(cfg: ModelConfig, batch: int, s_max: int,
+                    dtype) -> MLACache:
+    return MLACache(
+        jnp.zeros((batch, s_max, cfg.kv_lora_rank), dtype),
+        jnp.zeros((batch, s_max, cfg.qk_rope_head_dim), dtype))

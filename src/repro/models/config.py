@@ -1,0 +1,216 @@
+"""Model configuration: one dataclass covering all assigned families
+(dense GQA / MLA / MoE / SSM / hybrid / VLM backbone / enc-dec audio)."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+
+    # attention flavour
+    attention: str = "gqa"           # gqa | mla | none
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    rope_type: str = "rope"          # rope | mrope
+    mrope_sections: tuple = ()       # e.g. (16, 24, 24) halves of head_dim
+    sliding_window: int = 0          # 0 = full causal attention
+
+    # MLA (multi-head latent attention)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 0
+    qk_rope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_capacity_factor: float = 1.25
+
+    # SSM (Mamba-1)
+    ssm_state: int = 0
+    ssm_d_inner: int = 0
+    ssm_conv: int = 4
+    ssm_dt_rank: int = 0
+
+    # encoder-decoder (audio family)
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+
+    # modality frontend stub: "none" | "vision" | "audio"
+    frontend: str = "none"
+
+    # numerics
+    act: str = "silu"
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"          # forward compute/param dtype
+    tie_embeddings: bool = False
+
+    # distribution knobs (consumed by repro.distributed.sharding)
+    expert_sharding: str = "ffn"     # "ffn" (TP over d_ff) | "expert" (EP over E)
+    remat: str = "full"              # none | block | full
+    scan_layers: bool = True
+    # inner-scan tile sizes; 0 = unrolled/full (used by the dry-run flop
+    # calibration probes, where while-loop bodies are cost-counted once)
+    attn_chunk: int = 512
+    ssm_block: int = 256
+    unroll_inner: bool = False       # python-loop inner chunks (probes)
+    # beyond-paper perf knobs (see EXPERIMENTS.md §Perf):
+    # shard the residual stream's seq dim over `model` at block boundaries
+    # (Megatron-style sequence parallelism: 16x smaller remat stacks for
+    # an all-gather + reduce-scatter per layer)
+    seq_sharded_residual: bool = False
+    # shard attention queries/outputs over seq when heads don't divide the
+    # model axis (avoids replicating (B,S,H*hd) activations)
+    seq_sharded_attention: bool = False
+    # run the selective-scan decay/state intermediates in bf16 (the Pallas
+    # kernel's VMEM-resident state makes this moot on TPU; in the jnp path
+    # it halves the dominant (B,blk,di,N) HBM traffic at ~1e-2 rel error)
+    ssm_bf16: bool = False
+
+    def __post_init__(self):
+        if self.attention == "gqa" and self.num_heads and not self.head_dim:
+            object.__setattr__(self, "head_dim",
+                               self.d_model // self.num_heads)
+        if self.family in ("ssm", "hybrid") and not self.ssm_d_inner:
+            object.__setattr__(self, "ssm_d_inner", 2 * self.d_model)
+        if self.family in ("ssm", "hybrid") and not self.ssm_dt_rank:
+            object.__setattr__(self, "ssm_dt_rank",
+                               math.ceil(self.d_model / 16))
+
+    # -- derived sizes -------------------------------------------------------
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to 256 (Megatron-style) so the vocab axis shards
+        evenly over `model`; the loss masks the padding columns."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def q_head_dim(self) -> int:
+        if self.attention == "mla":
+            return self.qk_nope_head_dim + self.qk_rope_head_dim
+        return self.head_dim
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def has_attention(self) -> bool:
+        return self.attention != "none"
+
+    @property
+    def has_ssm(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Whether the arch can run the long_500k cell (see DESIGN.md)."""
+        return self.family in ("ssm", "hybrid")
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # -- parameter counting (for roofline MODEL_FLOPS) ------------------------
+
+    def param_count(self) -> tuple[int, int]:
+        """Returns (total_params, active_params) — active differs for MoE."""
+        D, L = self.d_model, self.num_layers
+        emb = self.vocab_size * D
+        total = active = 0
+
+        def attn_params() -> int:
+            if self.attention == "mla":
+                p = 0
+                if self.q_lora_rank:
+                    p += D * self.q_lora_rank + self.q_lora_rank  # down + norm
+                    p += self.q_lora_rank * self.num_heads * self.q_head_dim
+                else:
+                    p += D * self.num_heads * self.q_head_dim
+                p += D * (self.kv_lora_rank + self.qk_rope_head_dim)
+                p += self.kv_lora_rank
+                p += self.kv_lora_rank * self.num_heads * (
+                    self.qk_nope_head_dim + self.v_head_dim)
+                p += self.num_heads * self.v_head_dim * D
+                return p
+            if self.attention == "none":
+                return 0
+            hd = self.head_dim
+            p = D * self.num_heads * hd + 2 * D * self.num_kv_heads * hd \
+                + self.num_heads * hd * D
+            if self.qkv_bias:
+                p += (self.num_heads + 2 * self.num_kv_heads) * hd
+            if self.qk_norm:
+                p += 2 * hd
+            return p
+
+        def mlp_params() -> tuple[int, int]:
+            if self.is_moe:
+                per = 3 * D * self.d_ff
+                tot = self.num_experts * per + D * self.num_experts
+                act = self.num_experts_per_tok * per + D * self.num_experts
+                return tot, act
+            if self.d_ff == 0:
+                return 0, 0
+            return 3 * D * self.d_ff, 3 * D * self.d_ff
+
+        def ssm_params() -> int:
+            if not self.has_ssm:
+                return 0
+            di, st, dr = self.ssm_d_inner, self.ssm_state, self.ssm_dt_rank
+            return (D * 2 * di + di * self.ssm_conv
+                    + di * (dr + 2 * st) + dr * di + di
+                    + di * st + di + di * D)
+
+        a, (mt, ma), s = attn_params(), mlp_params(), ssm_params()
+        norms = 2 * D
+        layer_total = a + mt + s + norms
+        layer_active = a + ma + s + norms
+        total = L * layer_total + emb + D
+        active = L * layer_active + emb + D
+        if self.is_encoder_decoder:
+            # encoder layers: self-attn + mlp; decoder adds cross-attn
+            enc = self.num_encoder_layers * (a + mt + norms)
+            total += enc + L * a          # cross-attn per decoder layer
+            active += enc + L * a
+        if not self.tie_embeddings:
+            total += emb
+            active += emb
+        return total, active
+
+
+_REGISTRY: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    # configs are registered by importing repro.configs
+    import repro.configs  # noqa: F401
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> list[str]:
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)

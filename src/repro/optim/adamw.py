@@ -1,0 +1,83 @@
+"""AdamW with mixed-precision options for thousand-chip training:
+
+* moments stored in a configurable dtype (``bf16`` halves optimizer HBM —
+  the knob that lets grok-1-314b train state fit 16 GB/chip at 256 chips),
+* global-norm gradient clipping,
+* decoupled weight decay,
+* pure pytree state => shards with the same FSDP rules as the params.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"    # "bfloat16" halves optimizer memory
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw_init(cfg: AdamWConfig, params: Any) -> AdamWState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(jnp.zeros((), jnp.int32),
+                      jax.tree.map(zeros, params),
+                      jax.tree.map(zeros, params))
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: AdamWConfig, grads: Any, state: AdamWState,
+                 params: Any) -> tuple[Any, AdamWState, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    count = state.count + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm else 1.0
+    lr = cfg.lr(count) if callable(cfg.lr) else cfg.lr
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * b1 + g * (1 - b1)
+        v32 = v.astype(jnp.float32) * b2 + jnp.square(g) * (1 - b2)
+        step = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:       # no decay on norms/bias
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return newp, m32.astype(mdt), v32.astype(mdt)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(count, new_m, new_v), \
+        {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}

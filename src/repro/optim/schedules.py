@@ -1,0 +1,23 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, total_steps: int, min_frac: float = 0.1):
+    def lr(step):
+        t = jnp.minimum(step, total_steps) / max(total_steps, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return base_lr * (min_frac + (1 - min_frac) * cos)
+    return lr
+
+
+def linear_warmup_cosine(base_lr: float, warmup_steps: int,
+                         total_steps: int, min_frac: float = 0.1):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup_steps, 1),
+                          min_frac)
+    def lr(step):
+        warm = base_lr * jnp.minimum(step, warmup_steps) / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+    return lr

@@ -1,0 +1,112 @@
+"""Playback semantics: time-ordered delivery, record==replay, end-to-end
+DistributedSimulation behaviour incl. fault injection."""
+
+import numpy as np
+
+from repro.core import (Bag, DistributedSimulation, MessageBus, RosPlay,
+                        RosRecord, bag_to_partitions, decode)
+
+
+def _make_bag(path, n=600, topics=("/camera", "/lidar", "/imu")):
+    b = Bag.open_write(path, chunk_bytes=4096)
+    rng = np.random.RandomState(0)
+    # deliberately write topics round-robin with jittered timestamps so
+    # global time order != write order within a window
+    for i in range(n):
+        t = topics[i % len(topics)]
+        ts = i * 1000 + int(rng.randint(0, 500))
+        b.write(t, ts, bytes([i % 256]) * 64)
+    b.close()
+    return path
+
+
+def test_play_is_time_ordered(tmp_path):
+    p = _make_bag(str(tmp_path / "a.bag"))
+    bus = MessageBus()
+    stamps = []
+    bus.subscribe(None, lambda m: stamps.append(m.timestamp))
+    n = RosPlay(Bag.open_read(p), bus).run()
+    assert n == 600 == len(stamps)
+    assert stamps == sorted(stamps)
+
+
+def test_record_replay_identity(tmp_path):
+    """rosbag invariant: record(play(bag)) == bag (up to time order)."""
+    p = _make_bag(str(tmp_path / "a.bag"))
+    bus = MessageBus()
+    out = Bag.open_write(backend="memory")
+    with RosRecord(bus, out):
+        RosPlay(Bag.open_read(p), bus).run()
+    out.close()
+    src = sorted((m.timestamp, m.topic, m.data)
+                 for m in Bag.open_read(p).read_messages())
+    got = sorted((m.timestamp, m.topic, m.data)
+                 for m in Bag.open_read(
+                     backend="memory",
+                     image=out.chunked_file.image()).read_messages())
+    assert got == src
+
+
+def test_record_topic_subset(tmp_path):
+    p = _make_bag(str(tmp_path / "a.bag"))
+    bus = MessageBus()
+    out = Bag.open_write(backend="memory")
+    rec = RosRecord(bus, out, topics=["/imu"])
+    with rec:
+        RosPlay(Bag.open_read(p), bus).run()
+    out.close()
+    assert rec.messages_recorded == 200
+
+
+def test_distributed_simulation_end_to_end(tmp_path):
+    p = _make_bag(str(tmp_path / "a.bag"))
+
+    def user_logic(msg):
+        return ("/det" + msg.topic, msg.data[:4])
+
+    for cache in (True, False):
+        sim = DistributedSimulation(p, user_logic, num_workers=4,
+                                    use_memory_cache=cache)
+        rep = sim.run()
+        assert rep.messages_in == 600
+        assert rep.messages_out == 600
+        assert rep.partitions == 4
+        total_out = 0
+        for img in rep.output_images:
+            rb = Bag.open_read(backend="memory", image=img)
+            total_out += rb.num_messages
+        assert total_out == 600
+
+
+def test_distributed_simulation_with_faults(tmp_path):
+    p = _make_bag(str(tmp_path / "a.bag"), n=900)
+    sim = DistributedSimulation(
+        p, lambda m: None, num_workers=3, num_partitions=9,
+        scheduler_kwargs={"heartbeat_timeout": 0.3})
+
+    # monkey-patch in a dying worker through scheduler_kwargs path:
+    # run manually to inject the fault
+    from repro.core import Scheduler
+    from repro.core.simulation import _run_partition
+    from repro.core.bag import partition_bag
+
+    src = Bag.open_read(p)
+    parts = partition_bag(src, 9)
+    src.close()
+    with Scheduler(num_workers=3, heartbeat_timeout=0.3) as sched:
+        sched.add_worker("dying", fail_after=1)
+        for lo, hi in parts:
+            sched.submit(_run_partition, p, (lo, hi), lambda m: None, True,
+                         lineage=("bag", p, lo, hi))
+        res = sched.run(timeout=60)
+    assert sum(r[0] for r in res.values()) == 900   # nothing lost
+
+
+def test_bag_to_partitions_encodes_uniform_format(tmp_path):
+    p = _make_bag(str(tmp_path / "a.bag"), n=600)
+    parts = bag_to_partitions(p, 3)
+    assert len(parts) == 3
+    assert sum(len(pt) for pt in parts) == 600
+    topic, ts, data = decode(parts[0].records[0])
+    assert topic.startswith("/") and isinstance(ts, int) and len(data) == 64
+    assert parts[0].lineage[0] == "bag"

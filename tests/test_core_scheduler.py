@@ -1,0 +1,116 @@
+"""Scheduler semantics: completion, fault tolerance (dead workers, failing
+tasks), straggler speculation, elasticity, poison-pill bounding."""
+
+import time
+
+import pytest
+
+from repro.core import Scheduler, WorkerError
+
+
+def test_all_tasks_complete():
+    with Scheduler(num_workers=4) as s:
+        ids = [s.submit(lambda x: x * 3, i) for i in range(50)]
+        res = s.run()
+    assert sorted(res.keys()) == sorted(ids)
+    assert sorted(res.values()) == sorted(i * 3 for i in range(50))
+
+
+def test_task_exception_retried_then_succeeds():
+    calls = {"n": 0}
+
+    def flaky(x):
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise RuntimeError("transient")
+        return x
+
+    with Scheduler(num_workers=1, speculation=False) as s:
+        s.submit(flaky, 7)
+        res = s.run()
+    assert list(res.values()) == [7]
+    assert s.stats["retries"] == 2
+
+
+def test_poison_task_fails_job_bounded():
+    def poison():
+        raise ValueError("always fails")
+
+    with Scheduler(num_workers=2, max_attempts=3, speculation=False) as s:
+        s.submit(poison)
+        with pytest.raises(WorkerError):
+            s.run(timeout=10)
+    assert s.stats["retries"] == 3
+
+
+def test_dead_worker_tasks_recovered():
+    """A worker that crashes mid-job loses its queued tasks; heartbeat
+    timeout + requeue (or speculation) must recover every one of them."""
+    with Scheduler(num_workers=2, heartbeat_timeout=0.3) as s:
+        s.add_worker("dying", fail_after=2)
+        for i in range(30):
+            s.submit(lambda x: (time.sleep(0.005), x)[1], i)
+        res = s.run(timeout=30)
+    assert sorted(res.values()) == list(range(30))
+    assert s.stats["worker_deaths"] >= 1
+
+
+def test_kill_worker_mid_job():
+    with Scheduler(num_workers=3, heartbeat_timeout=0.3) as s:
+        for i in range(40):
+            s.submit(lambda x: (time.sleep(0.005), x)[1], i)
+        s.kill_worker("w0")
+        res = s.run(timeout=30)
+    assert sorted(res.values()) == list(range(40))
+
+
+def test_straggler_speculation_wins():
+    """One task is pathologically slow; a speculative copy on a healthy
+    worker should finish the job long before the straggler would."""
+    slow_once = {"done": False}
+
+    def work(x):
+        if x == 13 and not slow_once["done"]:
+            slow_once["done"] = True
+            time.sleep(5.0)          # straggling attempt
+        time.sleep(0.002)
+        return x
+
+    t0 = time.monotonic()
+    with Scheduler(num_workers=4, speculation=True,
+                   speculation_factor=3.0, speculation_min_done=3) as s:
+        for i in range(30):
+            s.submit(work, i)
+        res = s.run(timeout=30)
+    wall = time.monotonic() - t0
+    assert sorted(res.values()) == list(range(30))
+    assert s.stats["speculative_launches"] >= 1
+    assert wall < 5.0                 # did not wait for the straggler
+
+
+def test_elastic_scale_up_mid_job():
+    with Scheduler(num_workers=1, speculation=False) as s:
+        for i in range(40):
+            s.submit(lambda x: (time.sleep(0.003), x)[1], i)
+        s.add_worker("late1")
+        s.add_worker("late2")
+        res = s.run(timeout=30)
+    assert sorted(res.values()) == list(range(40))
+    finishers = {t.finished_by for t in s._tasks.values()}
+    assert {"late1", "late2"} & finishers   # new workers actually helped
+
+
+def test_no_workers_raises():
+    with Scheduler(num_workers=1, speculation=False,
+                   heartbeat_timeout=0.2) as s:
+        s.submit(time.sleep, 0.01)
+        s.kill_worker("w0")
+        with pytest.raises(WorkerError):
+            s.run(timeout=5)
+
+
+def test_lineage_recorded():
+    with Scheduler(num_workers=1) as s:
+        tid = s.submit(lambda: 1, lineage=("bag", "/x.bag", 0, 4))
+        s.run()
+        assert s._tasks[tid].lineage == ("bag", "/x.bag", 0, 4)

@@ -1,0 +1,178 @@
+"""Pallas kernel validation: interpret-mode execution vs ref.py oracles,
+swept over shapes and dtypes, plus hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.binpipe import BinaryPartition
+from repro.kernels import ops, ref
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+ATTN_SHAPES = [
+    # B, H, KV, Sq, Sk, hd, causal, window
+    (1, 4, 4, 128, 128, 64, True, 0),
+    (2, 4, 2, 256, 256, 64, True, 0),       # GQA
+    (1, 8, 1, 128, 128, 128, True, 0),      # MQA, hd=128
+    (1, 4, 4, 128, 384, 64, True, 0),       # kv longer than q (decode-ish)
+    (1, 4, 2, 200, 200, 64, True, 0),       # ragged (padding path)
+    (2, 2, 2, 128, 128, 64, False, 0),      # non-causal (cross attention)
+    (1, 2, 1, 256, 256, 64, True, 64),      # sliding window
+    (1, 25, 5, 128, 128, 64, True, 0),      # hymba's 25q/5kv ratio
+]
+
+
+@pytest.mark.parametrize("B,H,KV,Sq,Sk,hd,causal,window", ATTN_SHAPES)
+def test_flash_attention_vs_ref(B, H, KV, Sq, Sk, hd, causal, window):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(Sq + H), 3)
+    q = jax.random.normal(kq, (B, H, Sq, hd), jnp.float32)
+    k = jax.random.normal(kk, (B, KV, Sk, hd), jnp.float32)
+    v = jax.random.normal(kv, (B, KV, Sk, hd), jnp.float32)
+    got = ops.attention(q, k, v, causal=causal, window=window,
+                        blk_q=64, blk_k=64)
+    want = ref.attention_reference(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 3e-2)])
+def test_flash_attention_dtypes(dtype, tol):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(kq, (2, 4, 128, 64)).astype(dtype)
+    k = jax.random.normal(kk, (2, 2, 128, 64)).astype(dtype)
+    v = jax.random.normal(kv, (2, 2, 128, 64)).astype(dtype)
+    got = ops.attention(q, k, v).astype(jnp.float32)
+    want = ref.attention_reference(q, k, v).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+    assert ops.attention(q, k, v).dtype == dtype
+
+
+@pytest.mark.parametrize("blk_q,blk_k", [(32, 32), (64, 128), (128, 64)])
+def test_flash_attention_block_shape_invariance(blk_q, blk_k):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(kq, (1, 2, 160, 64))
+    k = jax.random.normal(kk, (1, 2, 160, 64))
+    v = jax.random.normal(kv, (1, 2, 160, 64))
+    got = ops.attention(q, k, v, blk_q=blk_q, blk_k=blk_k)
+    want = ref.attention_reference(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# selective scan
+# --------------------------------------------------------------------------
+
+SCAN_SHAPES = [
+    # b, S, di, N, blk_d, blk_s
+    (1, 64, 128, 16, 128, 32),
+    (2, 128, 256, 16, 128, 64),
+    (1, 100, 96, 8, 64, 32),       # ragged both dims
+    (2, 37, 128, 16, 128, 128),    # S < blk_s
+]
+
+
+@pytest.mark.parametrize("b,S,di,N,blk_d,blk_s", SCAN_SHAPES)
+def test_selective_scan_vs_ref(b, S, di, N, blk_d, blk_s):
+    keys = jax.random.split(jax.random.PRNGKey(S + di), 5)
+    x = jax.random.normal(keys[0], (b, S, di))
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (b, S, di)) - 1.0)
+    B = jax.random.normal(keys[2], (b, S, N))
+    C = jax.random.normal(keys[3], (b, S, N))
+    A = -jnp.exp(jax.random.normal(keys[4], (di, N)) * 0.5)
+    got = ops.mamba_scan(x, dt, B, C, A, blk_d=blk_d, blk_s=blk_s)
+    want = ref.selective_scan_reference(x, dt, B, C, A)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_selective_scan_bf16_inputs():
+    keys = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = jax.random.normal(keys[0], (1, 64, 128)).astype(jnp.bfloat16)
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (1, 64, 128))
+                         ).astype(jnp.bfloat16)
+    B = jax.random.normal(keys[2], (1, 64, 16)).astype(jnp.bfloat16)
+    C = jax.random.normal(keys[3], (1, 64, 16)).astype(jnp.bfloat16)
+    A = -jnp.exp(jax.random.normal(keys[4], (128, 16)) * 0.5)
+    got = ops.mamba_scan(x, dt, B, C, A)
+    want = ref.selective_scan_reference(x, dt, B, C, A)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_selective_scan_matches_model_ssm():
+    """The kernel and the model's associative-scan path agree."""
+    from repro.configs import tiny_config
+    from repro.models import ssm as SSM
+    from repro.models.layers import init_table
+    cfg = tiny_config("falcon-mamba-7b")
+    p = init_table(jax.random.PRNGKey(0), SSM.ssm_table(cfg))
+    b, S = 2, 48
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, S, cfg.d_model)) * 0.5
+    # reproduce the model's pre-scan pipeline
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(SSM._causal_conv(cfg, p, xin))
+    dt, Bt, Ct = SSM._ssm_coeffs(cfg, p, xc)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    got = ops.mamba_scan(xc.astype(jnp.float32), dt, Bt, Ct, A,
+                         blk_d=64, blk_s=16)
+    want = ref.selective_scan_reference(xc, dt, Bt, Ct, A)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# sensor decode
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("R,Nb,blk_r,blk_n", [
+    (8, 512, 8, 256), (5, 300, 8, 128), (33, 1024, 16, 512), (1, 128, 8, 512),
+])
+def test_sensor_decode_vs_ref(R, Nb, blk_r, blk_n):
+    rng = np.random.RandomState(R + Nb)
+    payload = jnp.asarray(rng.randint(0, 256, (R, Nb), np.uint8))
+    scale = jnp.asarray(rng.rand(R).astype(np.float32) * 0.1)
+    zp = jnp.asarray(rng.randint(0, 255, R).astype(np.float32))
+    lengths = jnp.asarray(rng.randint(0, Nb + 1, R).astype(np.int32))
+    got = ops.decode_records(payload, scale, zp, lengths,
+                             blk_r=blk_r, blk_n=blk_n)
+    want = ref.sensor_decode_reference(payload, scale, zp, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 600), st.integers(0, 3))
+def test_property_sensor_decode_roundtrip(R, Nb, seed):
+    """Dequantize(quantize(x)) recovers x up to scale quantisation."""
+    rng = np.random.RandomState(seed)
+    payload = jnp.asarray(rng.randint(0, 256, (R, Nb), np.uint8))
+    scale = jnp.ones((R,), jnp.float32)
+    zp = jnp.zeros((R,), jnp.float32)
+    lengths = jnp.full((R,), Nb, jnp.int32)
+    got = ops.decode_records(payload, scale, zp, lengths)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(payload, np.float32))
+
+
+def test_decode_partition_end_to_end():
+    """core.binpipe partition -> on-device feature matrix (the full Fig 4
+    path: encode -> serialize -> frame -> device decode)."""
+    recs = [bytes(range(i, i + 50)) for i in range(0, 200, 50)]
+    part = BinaryPartition(list(recs))
+    feats = ops.decode_partition(part, feature_bytes=64)
+    assert feats.shape == (4, 64)
+    # first record: bytes 0..49 scaled by 1/255, then zero padding
+    np.testing.assert_allclose(np.asarray(feats[0, :50]),
+                               np.arange(50, dtype=np.float32) / 255.0,
+                               rtol=1e-6)
+    assert float(jnp.abs(feats[0, 50:]).max()) == 0.0

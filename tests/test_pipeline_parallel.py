@@ -1,0 +1,76 @@
+"""GPipe pipeline parallelism: forward and gradients must match the
+sequential single-device reference."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(body: str, devices: int = 4) -> str:
+    script = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count={devices}")
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+    """) + textwrap.dedent(body)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_gpipe_forward_and_grad_match_sequential():
+    _run("""
+        from repro.distributed.pipeline import (gpipe_apply, make_stage_fn,
+                                                split_layers_into_stages)
+        from repro.launch.mesh import make_host_mesh
+
+        L, B, D, n_micro = 8, 16, 32, 4
+        keys = jax.random.split(jax.random.PRNGKey(0), L)
+        ws = jnp.stack([jax.random.normal(k, (D, D)) * 0.1 for k in keys])
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, D))
+
+        def block(w, h):
+            return h + jnp.tanh(h @ w)
+
+        # sequential reference
+        def seq_apply(ws, x):
+            def body(h, w):
+                return block(w, h), None
+            y, _ = jax.lax.scan(body, x, ws)
+            return y
+
+        ref = seq_apply(ws, x)
+        ref_loss, ref_grad = jax.value_and_grad(
+            lambda ws: jnp.sum(seq_apply(ws, x) ** 2))(ws)
+
+        mesh = make_host_mesh(data=4, model=1)
+        # reuse the 4 devices as a 4-stage pipeline axis
+        import numpy as onp
+        from jax.sharding import Mesh
+        pipe_mesh = Mesh(onp.array(jax.devices()[:4]), ("pod",))
+        stage_fn = make_stage_fn(block)
+        staged = split_layers_into_stages(ws, 4)
+
+        got = gpipe_apply(pipe_mesh, stage_fn, staged, x, n_micro)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+        def pipe_loss(staged):
+            y = gpipe_apply(pipe_mesh, stage_fn, staged, x, n_micro)
+            return jnp.sum(y ** 2)
+
+        loss, grad = jax.value_and_grad(pipe_loss)(staged)
+        np.testing.assert_allclose(float(loss), float(ref_loss), rtol=1e-5)
+        g = np.asarray(jax.device_get(grad)).reshape(ref_grad.shape)
+        np.testing.assert_allclose(g, np.asarray(ref_grad),
+                                   rtol=1e-4, atol=1e-4)
+        print("gpipe fwd+grad OK", float(loss))
+    """)
