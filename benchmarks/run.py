@@ -3,10 +3,15 @@
     PYTHONPATH=src python -m benchmarks.run
 
 Prints ``name,us_per_call,derived`` CSV rows:
-    bag_cache_*     — paper Fig 6 (ROSBag memory cache vs disk)
-    scalability_*   — paper Fig 7 + §4.2 extrapolation
-    binpipe_*       — paper Fig 4 (BinPipedRDD stage throughput)
-    roofline_*      — dry-run roofline terms per (arch x shape x mesh)
+    bag_cache_*        — paper Fig 6 (ROSBag memory cache vs disk)
+    scalability_*      — paper Fig 7 + §4.2 extrapolation
+    scenario_matrix_*  — batched vs per-message replay × executor backend;
+                         also writes machine-readable
+                         ``BENCH_scenario_matrix.json`` at the repo root
+                         (msgs/s per backend × batch size) so the perf
+                         trajectory is tracked across PRs
+    binpipe_*          — paper Fig 4 (BinPipedRDD stage throughput)
+    roofline_*         — dry-run roofline terms per (arch x shape x mesh)
 """
 
 from __future__ import annotations
@@ -17,9 +22,11 @@ import traceback
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import bag_cache, binpipe, roofline_report, scalability
+    from benchmarks import (bag_cache, binpipe, roofline_report, scalability,
+                            scenario_matrix)
     failures = 0
-    for mod in (bag_cache, scalability, binpipe, roofline_report):
+    for mod in (bag_cache, scalability, scenario_matrix, binpipe,
+                roofline_report):
         try:
             mod.main(csv=True)
         except Exception:  # noqa: BLE001

@@ -4,7 +4,7 @@
 linearly reduced...  it takes 3 hours to process images using stand-alone
 processing, and only 25 minutes after using eight Spark workers."
 
-Reproduction: the DistributedSimulation replays a recorded bag through a
+Reproduction: a one-scenario ScenarioSuite replays a recorded bag through a
 perception-latency user-logic model at 1..8 workers.  This container has
 ONE core, so wall-clock speedup must come from latency-bound concurrency
 (the latency model sleeps, like real accelerator-offloaded perception) —
@@ -20,12 +20,11 @@ from __future__ import annotations
 
 import os
 import tempfile
-import time
 
 import numpy as np
 
 from repro.core.bag import Bag
-from repro.core.simulation import DistributedSimulation
+from repro.core.simulation import Scenario, ScenarioSuite
 
 N_FRAMES = 240
 FRAME_BYTES = 4096
@@ -42,15 +41,19 @@ def _make_bag(path: str) -> str:
     return path
 
 
+def _detect(msg):
+    return ("/det", msg.data[:16])
+
+
 def run_curve(workers_list=(1, 2, 4, 8)) -> list[dict]:
     d = tempfile.mkdtemp(prefix="scal")
     path = _make_bag(os.path.join(d, "drive.bag"))
     out = []
     for w in workers_list:
-        sim = DistributedSimulation(
-            path, lambda m: ("/det", m.data[:16]), num_workers=w,
-            num_partitions=w, latency_model_s=PER_FRAME_LATENCY_S)
-        rep = sim.run()
+        scenario = Scenario(
+            name=f"scal-w{w}", bag_path=path, user_logic=_detect,
+            latency_model_s=PER_FRAME_LATENCY_S, num_partitions=w)
+        rep = ScenarioSuite([scenario], num_workers=w).run()[scenario.name]
         out.append({"workers": w, "wall_s": rep.wall_time_s,
                     "msgs": rep.messages_in,
                     "throughput": rep.throughput_msgs_s})

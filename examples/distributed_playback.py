@@ -1,11 +1,13 @@
-"""The paper's headline scenario at benchmark scale: distributed playback
-simulation with fault injection and straggler mitigation.
+"""The paper's headline scenario at benchmark scale: a heterogeneous
+scenario suite with fault injection and straggler mitigation.
 
-A recorded multi-topic drive is partitioned across a worker pool; each
-worker replays its partition through the ROSBag memory cache into a
-perception-latency user logic.  Mid-job we kill a worker and add two
-elastic replacements; the scheduler's lineage-based retry + speculative
-execution must deliver every message exactly once to the output bags.
+A recorded multi-topic drive feeds a ScenarioSuite of three tests — a
+camera-only functional check, a time-windowed replay, and a batched
+perception scenario whose user logic assembles replay micro-batches into
+fixed-layout arrays and runs the Pallas sensor-decode stage — all fanned
+through ONE scheduler.  Mid-suite we kill a worker and add two elastic
+replacements; lineage-based retry + speculative execution must deliver
+every message exactly once to the output bags.
 
     PYTHONPATH=src python examples/distributed_playback.py
 """
@@ -17,9 +19,7 @@ import time
 
 import numpy as np
 
-from repro.core import Bag, Scheduler
-from repro.core.bag import partition_bag
-from repro.core.simulation import _run_partition
+from repro.core import Bag, Scenario, ScenarioSuite
 
 FRAMES = 1200
 WORKERS = 4
@@ -30,41 +30,69 @@ bag_path = os.path.join(tmp, "drive.bag")
 rng = np.random.RandomState(7)
 with Bag.open_write(bag_path, chunk_bytes=32 * 1024) as bag:
     for i in range(FRAMES):
-        bag.write("/camera", i * 33_000_000, rng.bytes(1024))
+        topic = "/camera" if i % 2 == 0 else "/lidar"
+        bag.write(topic, i * 33_000_000, rng.bytes(1024))
 
-def user_logic(msg):
-    return ("/det", msg.data[:8])
 
-src = Bag.open_read(bag_path)
-parts = partition_bag(src, PARTITIONS)
-src.close()
+def detect(msg):
+    """Per-message user logic (seed contract: -> (topic, payload))."""
+    return ("/det" + msg.topic, msg.data[:8])
 
-t0 = time.monotonic()
-with Scheduler(num_workers=WORKERS, heartbeat_timeout=0.5,
-               speculation=True) as sched:
+
+def decode_batch(msgs):
+    """Batched user logic: assemble the micro-batch into fixed-layout
+    arrays and decode on device (interpret-mode Pallas), one feature
+    message out per input frame."""
+    from repro.data.pipeline import assemble_message_batch
+    from repro.kernels.sensor_decode import decode_message_batch
+    batch = assemble_message_batch(msgs)
+    feats = np.asarray(decode_message_batch(batch))        # (R, Nb) f32
+    means = feats.mean(axis=1).astype(np.float32)
+    return [("/feat" + m.topic, int(ts), means[i:i + 1].tobytes())
+            for i, (m, ts) in enumerate(zip(msgs, batch["timestamps"]))]
+
+
+scenarios = [
+    Scenario("camera-functional", bag_path, detect, topics=("/camera",),
+             num_partitions=PARTITIONS // 2),
+    Scenario("first-10s-window", bag_path, detect,
+             start=0, end=10_000_000_000, num_partitions=PARTITIONS // 2),
+    Scenario("batched-perception", bag_path, decode_batch, batch_size=64,
+             latency_model_s=0.002, num_partitions=PARTITIONS),
+]
+
+
+def chaos(sched):
     sched.add_worker("flaky", fail_after=2)          # dies on its 2nd task
-    for lo, hi in parts:
-        sched.submit(_run_partition, bag_path, (lo, hi), user_logic, True,
-                     0.002, lineage=("bag", bag_path, lo, hi))
 
-    def chaos():
+    def later():
         time.sleep(0.15)
-        sched.kill_worker("w0")                      # node loss mid-job
+        sched.kill_worker("w0")                      # node loss mid-suite
         sched.add_worker("elastic1")                 # elastic scale-up
         sched.add_worker("elastic2")
 
-    threading.Thread(target=chaos, daemon=True).start()
-    results = sched.run(timeout=120)
-    stats = dict(sched.stats)
+    threading.Thread(target=later, daemon=True).start()
 
+
+t0 = time.monotonic()
+suite = ScenarioSuite(scenarios, num_workers=WORKERS,
+                      scheduler_kwargs={"heartbeat_timeout": 0.5,
+                                        "speculation": True},
+                      on_scheduler=chaos)
+reports = suite.run(timeout=240)
 wall = time.monotonic() - t0
-total_in = sum(r[0] for r in results.values())
-total_out = sum(r[1] for r in results.values())
-print(f"partitions={len(parts)} replayed={total_in} detections={total_out} "
-      f"wall={wall:.2f}s")
-print(f"scheduler: {stats}")
-assert total_in == FRAMES, "lost messages!"
-assert total_out == FRAMES
+
+stats = next(iter(reports.values())).scheduler_stats
+for name, rep in reports.items():
+    print(f"{name}: partitions={rep.partitions} in={rep.messages_in} "
+          f"out={rep.messages_out} wall={rep.wall_time_s:.2f}s "
+          f"({rep.throughput_msgs_s:.0f} msg/s)")
+print(f"suite wall={wall:.2f}s scheduler: {stats}")
+
+assert reports["camera-functional"].messages_in == FRAMES // 2
+assert reports["camera-functional"].messages_out == FRAMES // 2
+assert reports["batched-perception"].messages_in == FRAMES
+assert reports["batched-perception"].messages_out == FRAMES
 print("OK: every frame survived a worker crash + node loss "
       f"(retries={stats['retries']}, "
       f"speculative={stats['speculative_launches']}, "

@@ -4,23 +4,30 @@ platform (Spark+ROS -> JAX/TPU adaptation, see DESIGN.md).
 Layers:
     bag        -- Bag / ChunkedFile / MemoryChunkedFile (ROSBag cache, §3.2)
     binpipe    -- BinPipedRDD: encode/serialize/frame/decode (§3.1)
-    playback   -- MessageBus / RosPlay / RosRecord (§2)
-    scheduler  -- driver/worker scheduling, fault tolerance, stragglers (§3)
-    simulation -- DistributedSimulation: the end-to-end platform (Figs 3&5)
+    playback   -- MessageBus / RosPlay / RosRecord, batched replay (§2)
+    executors  -- ExecutorBackend: ThreadBackend / ProcessBackend pools
+    scheduler  -- driver scheduling semantics: fault tolerance, stragglers (§3)
+    simulation -- Scenario / ScenarioSuite / DistributedSimulation (Figs 3&5)
 """
 
 from .bag import Bag, ChunkedFile, MemoryChunkedFile, Message, partition_bag
 from .binpipe import (BinaryPartition, decode, deserialize, encode, frame,
                       serialize, unframe)
+from .executors import (ExecutorBackend, ProcessBackend, ThreadBackend,
+                        Worker)
 from .playback import MessageBus, RosPlay, RosRecord
-from .scheduler import Scheduler, Task, Worker, WorkerError
-from .simulation import DistributedSimulation, SimulationReport, bag_to_partitions
+from .scheduler import Scheduler, Task, WorkerError
+from .simulation import (DistributedSimulation, Scenario, ScenarioSuite,
+                         SimulationReport, bag_to_partitions,
+                         resolve_logic_ref)
 
 __all__ = [
     "Bag", "ChunkedFile", "MemoryChunkedFile", "Message", "partition_bag",
     "BinaryPartition", "encode", "decode", "serialize", "deserialize",
     "frame", "unframe",
     "MessageBus", "RosPlay", "RosRecord",
+    "ExecutorBackend", "ThreadBackend", "ProcessBackend",
     "Scheduler", "Task", "Worker", "WorkerError",
+    "Scenario", "ScenarioSuite", "resolve_logic_ref",
     "DistributedSimulation", "SimulationReport", "bag_to_partitions",
 ]

@@ -141,6 +141,7 @@ class MemoryChunkedFile(ChunkedFile):
         # NOTE: deliberately does NOT call super().__init__ — no file handle.
         self.path = None
         self.mode = "rw"
+        self._closed = False
         self._lock = threading.Lock()
         header = _MAGIC + struct.pack("<I", _VERSION)
         if image is not None:
@@ -158,6 +159,8 @@ class MemoryChunkedFile(ChunkedFile):
 
     def write_chunk(self, payload: bytes, record_count: int) -> int:
         with self._lock:
+            if self._closed:
+                raise RuntimeError("memory bag is closed")
             off = self._size
             self._chunks[off] = (record_count, payload)   # reference, no copy
             self._segs.append(None)                       # placeholder
@@ -176,6 +179,8 @@ class MemoryChunkedFile(ChunkedFile):
 
     def write_blob(self, blob: bytes) -> int:
         with self._lock:
+            if self._closed:
+                raise RuntimeError("memory bag is closed")
             off = self._size
             self._segs.append((off, None, blob))  # type: ignore
             self._size += len(blob)
@@ -197,27 +202,45 @@ class MemoryChunkedFile(ChunkedFile):
         pass
 
     def close(self) -> None:
-        pass
+        """Close the cache.  The disk-format image is captured at close time,
+        so :meth:`image` stays valid afterwards (close-safe by contract —
+        workers ship ``bag.close(); bag.chunked_file.image()`` as the task
+        result); further writes raise."""
+        with self._lock:
+            if self._closed:
+                return
+            if self._ro is None:
+                # consolidate segments into the final image now, while the
+                # write-mode state is guaranteed intact
+                img = self._join_segs()
+                self._segs = [img]
+            self._closed = True
 
     # -- RAM <-> disk interchange ------------------------------------------
 
+    def _join_segs(self) -> bytes:
+        """Single-join materialisation of the write-mode segment list.
+        Caller holds the lock."""
+        parts: list[bytes] = []
+        for seg in self._segs:
+            if isinstance(seg, bytes):
+                parts.append(seg)
+            else:
+                off, rc, payload = seg
+                if rc is None:
+                    parts.append(payload)
+                else:
+                    parts.append(_HDR.pack(rc, len(payload)))
+                    parts.append(payload)
+        return b"".join(parts)
+
     def image(self) -> bytes:
-        """Materialise the disk-format byte image (single join)."""
+        """Materialise the disk-format byte image (single join).  Safe to
+        call before or after :meth:`close`."""
         with self._lock:
             if self._ro is not None:
                 return bytes(self._ro)
-            parts: list[bytes] = []
-            for seg in self._segs:
-                if isinstance(seg, bytes):
-                    parts.append(seg)
-                else:
-                    off, rc, payload = seg
-                    if rc is None:
-                        parts.append(payload)
-                    else:
-                        parts.append(_HDR.pack(rc, len(payload)))
-                        parts.append(payload)
-            return b"".join(parts)
+            return self._join_segs()
 
     def persist(self, path: str) -> None:
         with open(path, "wb") as f:

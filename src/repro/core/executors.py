@@ -1,0 +1,559 @@
+"""Pluggable executor backends for the scheduler (paper §3, Fig 3).
+
+The :class:`~repro.core.scheduler.Scheduler` owns *scheduling semantics* —
+retries, heartbeat fault detection, speculative re-execution, lineage — while
+an :class:`ExecutorBackend` owns the *execution substrate*: where worker
+loops actually run and how task payloads and reports move between them.
+
+Two backends ship:
+
+``ThreadBackend``
+    The original in-process worker pool (one Python thread per worker,
+    shared FIFO inbox).  Zero serialization cost; concurrency is limited by
+    the GIL, so it shines for I/O- or latency-bound user logic (accelerator
+    offload, simulated perception latency).
+
+``ProcessBackend``
+    One OS process per worker, each with a private duplex pipe to the
+    driver.  CPU-bound user logic actually parallelizes; task functions,
+    arguments and results must be picklable (use module-level functions, or
+    a ``"module:attr"`` logic ref — see :mod:`repro.core.simulation`).
+
+Both expose the same fault surface the scheduler's tests exercise:
+``fail_after`` (crash on the Nth task, no report, no more heartbeats),
+``slow_factor`` (straggler), ``kill_worker`` (node loss).  A backend also
+reports ``lost_assignments`` — payloads shipped to a worker that died before
+reporting — so the scheduler can requeue them immediately instead of waiting
+for the heartbeat staleness sweep.
+"""
+
+from __future__ import annotations
+
+import multiprocessing
+import multiprocessing.connection
+import os
+import queue
+import threading
+import time
+from typing import Any, Callable, Optional
+
+# payload shipped to a worker: (task_id, fn, args, attempt)
+TaskPayload = tuple[int, Callable[..., Any], tuple, int]
+# report(worker_id, task_id, attempt, result, error)
+ReportFn = Callable[[str, int, int, Any, Optional[BaseException]], None]
+# heartbeat(worker_id)
+BeatFn = Callable[[str], None]
+
+_POLL_S = 0.05
+
+
+def _wants_worker_id(fn: Callable) -> bool:
+    try:
+        import inspect
+        return "worker_id" in inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+
+
+def _execute(fn: Callable, args: tuple, worker_id: str) -> Any:
+    if _wants_worker_id(fn):
+        return fn(*args, worker_id=worker_id)
+    return fn(*args)
+
+
+class ExecutorBackend:
+    """Interface the Scheduler drives.  Subclasses own the worker substrate."""
+
+    name = "abstract"
+
+    def start(self, report: ReportFn, heartbeat: BeatFn) -> None:
+        """Wire driver callbacks; called once by the Scheduler before use."""
+        raise NotImplementedError
+
+    def submit(self, payload: TaskPayload) -> None:
+        """Enqueue one task payload for any alive worker."""
+        raise NotImplementedError
+
+    def add_worker(self, worker_id: str, fail_after: Optional[int] = None,
+                   slow_factor: float = 1.0) -> None:
+        raise NotImplementedError
+
+    def kill_worker(self, worker_id: str) -> None:
+        """Simulate node loss: stop heartbeats; in-flight work is lost."""
+        raise NotImplementedError
+
+    def remove_worker(self, worker_id: str) -> None:
+        """Drop a worker from the pool (also how the scheduler reaps the
+        dead); its unreported payloads stay visible via lost_assignments."""
+        raise NotImplementedError
+
+    def worker_ids(self) -> list[str]:
+        raise NotImplementedError
+
+    def worker_alive(self, worker_id: str) -> bool:
+        raise NotImplementedError
+
+    def num_alive(self) -> int:
+        return sum(1 for w in self.worker_ids() if self.worker_alive(w))
+
+    def lost_assignments(self, worker_id: str) -> list[tuple[int, int]]:
+        """(task_id, attempt) pairs shipped to ``worker_id`` and never
+        reported — recompute candidates after its death."""
+        raise NotImplementedError
+
+    def shutdown(self, join_timeout: float = 5.0) -> None:
+        """Stop the pool; wait up to ``join_timeout`` for quiesce."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Thread backend (the seed Worker pool, now behind the interface)
+# ---------------------------------------------------------------------------
+
+
+class Worker(threading.Thread):
+    """A simulated cluster worker (thread).
+
+    Fault injection for tests/benchmarks:
+      ``fail_after``  : crash on the Nth task it executes (no report),
+      ``slow_factor`` : multiply user-logic sleep time (straggler),
+      ``kill()``      : stop heartbeating and accepting work (node loss).
+    """
+
+    def __init__(self, worker_id: str, inbox: "queue.Queue",
+                 report: ReportFn, heartbeat: BeatFn,
+                 fail_after: Optional[int] = None,
+                 slow_factor: float = 1.0):
+        super().__init__(name=f"worker-{worker_id}", daemon=True)
+        self.worker_id = worker_id
+        self._inbox = inbox
+        self._report = report
+        self._heartbeat = heartbeat
+        self._fail_after = fail_after
+        self.slow_factor = slow_factor
+        self._alive = True
+        self._executed = 0
+        self.current: Optional[tuple[int, int]] = None  # (task_id, attempt)
+
+    def kill(self) -> None:
+        self._alive = False
+
+    @property
+    def is_alive_worker(self) -> bool:
+        return self._alive
+
+    def run(self) -> None:
+        while True:
+            if not self._alive:
+                return                # dead node: stop consuming work
+            try:
+                item = self._inbox.get(timeout=_POLL_S)
+            except queue.Empty:
+                self._heartbeat(self.worker_id)
+                continue
+            if item is None:          # shutdown sentinel
+                return
+            task_id, fn, args, attempt = item
+            self.current = (task_id, attempt)
+            if not self._alive:
+                # died between get() and here: this one task is lost
+                return
+            self._heartbeat(self.worker_id)
+            self._executed += 1
+            if self._fail_after is not None and self._executed >= self._fail_after:
+                self._alive = False   # crash: no report, no more heartbeats
+                continue
+            if self.slow_factor > 1.0:
+                # stragglers burn extra wall time before doing the work
+                time.sleep(0.001 * (self.slow_factor - 1.0))
+            try:
+                result = _execute(fn, args, self.worker_id)
+                self.current = None
+                self._report(self.worker_id, task_id, attempt, result, None)
+            except BaseException as e:   # noqa: BLE001 - report any failure
+                self.current = None
+                self._report(self.worker_id, task_id, attempt, None, e)
+
+
+class ThreadBackend(ExecutorBackend):
+    """Shared-queue thread pool: the seed execution model.
+
+    Heartbeats are decoupled from task execution (like a real node's
+    heartbeat daemon): a backend beater thread beats for every worker whose
+    node is up, so a long-running task is a *straggler* (speculation's
+    job), not a false node loss.  Killed/crashed workers stop beating.
+    """
+
+    name = "thread"
+
+    def __init__(self):
+        self._inbox: "queue.Queue" = queue.Queue()
+        self._workers: dict[str, Worker] = {}
+        self._lost: dict[str, list[tuple[int, int]]] = {}
+        self._lock = threading.Lock()
+        self._report: Optional[ReportFn] = None
+        self._beat: Optional[BeatFn] = None
+        self._stop = threading.Event()
+        self._beater: Optional[threading.Thread] = None
+
+    def start(self, report: ReportFn, heartbeat: BeatFn) -> None:
+        # reset lifecycle state so a backend instance can be reused by a
+        # fresh Scheduler after a previous shutdown
+        self._stop = threading.Event()
+        while True:          # drop stale sentinels/payloads from a past run
+            try:
+                self._inbox.get_nowait()
+            except queue.Empty:
+                break
+        self._report = report
+        self._beat = heartbeat
+        self._beater = threading.Thread(target=self._beat_loop,
+                                        name="threadbackend-beater",
+                                        daemon=True)
+        self._beater.start()
+
+    def _beat_loop(self) -> None:
+        while not self._stop.is_set():
+            with self._lock:
+                alive = [wid for wid, w in self._workers.items()
+                         if w.is_alive_worker]
+            for wid in alive:
+                self._beat(wid)
+            self._stop.wait(_POLL_S)
+
+    def submit(self, payload: TaskPayload) -> None:
+        self._inbox.put(payload)
+
+    def add_worker(self, worker_id: str, fail_after: Optional[int] = None,
+                   slow_factor: float = 1.0) -> None:
+        assert self._report is not None, "backend not started"
+        w = Worker(worker_id, self._inbox, self._report, self._beat,
+                   fail_after=fail_after, slow_factor=slow_factor)
+        with self._lock:
+            self._workers[worker_id] = w
+        w.start()
+
+    def kill_worker(self, worker_id: str) -> None:
+        with self._lock:
+            w = self._workers.get(worker_id)
+        if w:
+            w.kill()
+
+    def remove_worker(self, worker_id: str) -> None:
+        with self._lock:
+            w = self._workers.pop(worker_id, None)
+            # a live thread worker finishes and reports its current task
+            # after a voluntary removal; only a dead one truly loses it
+            if (w is not None and not w.is_alive_worker
+                    and w.current is not None):
+                self._lost.setdefault(worker_id, []).append(w.current)
+        if w:
+            w.kill()
+
+    def worker_ids(self) -> list[str]:
+        with self._lock:
+            return list(self._workers)
+
+    def worker_alive(self, worker_id: str) -> bool:
+        with self._lock:
+            w = self._workers.get(worker_id)
+        return bool(w and w.is_alive_worker)
+
+    def lost_assignments(self, worker_id: str) -> list[tuple[int, int]]:
+        with self._lock:
+            return self._lost.pop(worker_id, [])
+
+    def shutdown(self, join_timeout: float = 5.0) -> None:
+        self._stop.set()
+        with self._lock:
+            workers = list(self._workers.values())
+            self._workers.clear()
+        for w in workers:
+            w.kill()
+        for _ in workers:
+            self._inbox.put(None)
+        # quiesce: wait (bounded) for workers to finish their current task —
+        # exiting the interpreter while a thread is inside native code (e.g.
+        # a jitted user-logic step) aborts at teardown
+        deadline = time.monotonic() + join_timeout
+        for w in workers:
+            w.join(timeout=max(0.0, deadline - time.monotonic()))
+
+
+# ---------------------------------------------------------------------------
+# Process backend
+# ---------------------------------------------------------------------------
+
+
+def _process_worker_main(worker_id: str, conn,
+                         fail_after: Optional[int],
+                         slow_factor: float) -> None:
+    """Worker-process loop: recv task, execute, report.
+
+    A daemon beater thread heartbeats continuously — like a node's
+    heartbeat daemon, independent of task execution, so long tasks read as
+    stragglers rather than node loss.  Crash semantics mirror the thread
+    Worker: on ``fail_after`` the whole process exits without reporting
+    (beater included — heartbeats stop), like a segfaulted node.
+    """
+    send_lock = threading.Lock()
+
+    def send(payload) -> bool:
+        try:
+            with send_lock:
+                conn.send(payload)
+            return True
+        except (EOFError, OSError, BrokenPipeError):
+            return False
+
+    def beater() -> None:
+        while send(("beat", worker_id)):
+            time.sleep(_POLL_S)
+
+    threading.Thread(target=beater, daemon=True).start()
+    executed = 0
+    while True:
+        try:
+            if not conn.poll(_POLL_S):
+                continue
+            msg = conn.recv()
+        except (EOFError, OSError):
+            return                     # driver went away
+        if msg is None:                # shutdown sentinel
+            return
+        task_id, fn, args, attempt = msg
+        executed += 1
+        if fail_after is not None and executed >= fail_after:
+            os._exit(13)               # crash: no report, pipe goes EOF
+        if slow_factor > 1.0:
+            time.sleep(0.001 * (slow_factor - 1.0))
+        try:
+            result = _execute(fn, args, worker_id)
+            out = ("done", worker_id, task_id, attempt, result, None)
+        except BaseException as e:     # noqa: BLE001 - report any failure
+            out = ("done", worker_id, task_id, attempt, None, e)
+        try:
+            with send_lock:
+                conn.send(out)
+        except (EOFError, OSError, BrokenPipeError):
+            return
+        except Exception as e:         # unpicklable result/exception
+            send(("done", worker_id, task_id, attempt, None,
+                  RuntimeError(f"unpicklable task output: {e!r}")))
+
+
+class _ProcWorker:
+    __slots__ = ("proc", "conn", "outstanding", "dead", "send_lock")
+
+    def __init__(self, proc, conn):
+        self.proc = proc
+        self.conn = conn
+        self.outstanding: dict[tuple[int, int], None] = {}
+        self.dead = False
+        # Connection.send is not safe for concurrent senders; the driver
+        # thread (submit) and the pump thread both dispatch
+        self.send_lock = threading.Lock()
+
+    def send(self, payload) -> None:
+        with self.send_lock:
+            self.conn.send(payload)
+
+
+class ProcessBackend(ExecutorBackend):
+    """One OS process per worker, private duplex pipe each, driver-side pump.
+
+    Dispatch is eager least-outstanding: a submitted payload is shipped to
+    the alive worker with the fewest unreported payloads (payloads queue in
+    the worker's pipe).  A pump thread multiplexes all pipes, translating
+    worker messages into the scheduler's report/heartbeat callbacks.  Tasks
+    must be picklable; results travel back through the pipe.
+    """
+
+    name = "process"
+
+    def __init__(self, mp_context: Optional[str] = None):
+        try:
+            self._ctx = multiprocessing.get_context(mp_context or "fork")
+        except ValueError:             # platform without fork
+            self._ctx = multiprocessing.get_context()
+        self._workers: dict[str, _ProcWorker] = {}
+        self._pending: list[TaskPayload] = []
+        self._send_failures: list[tuple[TaskPayload, BaseException]] = []
+        self._lock = threading.Lock()
+        self._report: Optional[ReportFn] = None
+        self._beat: Optional[BeatFn] = None
+        self._stop = threading.Event()
+        self._pump: Optional[threading.Thread] = None
+
+    def start(self, report: ReportFn, heartbeat: BeatFn) -> None:
+        # reset lifecycle state so a backend instance can be reused by a
+        # fresh Scheduler after a previous shutdown
+        self._stop = threading.Event()
+        with self._lock:
+            self._pending.clear()
+            self._send_failures.clear()
+        self._report = report
+        self._beat = heartbeat
+        self._pump = threading.Thread(target=self._pump_loop,
+                                      name="procbackend-pump", daemon=True)
+        self._pump.start()
+
+    # -- dispatch ----------------------------------------------------------
+
+    def submit(self, payload: TaskPayload) -> None:
+        with self._lock:
+            self._pending.append(payload)
+        self._assign_pending()
+
+    def _assign_pending(self) -> None:
+        with self._lock:
+            alive = [w for w in self._workers.values()
+                     if not w.dead and w.proc.is_alive()]
+            if not alive:
+                return
+            pending, self._pending = self._pending, []
+            targets: list[tuple[_ProcWorker, TaskPayload]] = []
+            for payload in pending:
+                w = min(alive, key=lambda w: len(w.outstanding))
+                w.outstanding[(payload[0], payload[3])] = None
+                targets.append((w, payload))
+        for w, payload in targets:
+            try:
+                w.send(payload)
+            except (EOFError, OSError, BrokenPipeError):
+                # worker died under us: payload stays in outstanding and is
+                # recovered through lost_assignments when the scheduler reaps
+                with self._lock:
+                    w.dead = True
+            except Exception as e:     # unpicklable fn/args: fail the task,
+                with self._lock:       # not the dispatcher.  Reported from
+                    # the pump thread — reporting here would re-enter the
+                    # scheduler lock through retry -> dispatch -> submit
+                    w.outstanding.pop((payload[0], payload[3]), None)
+                    self._send_failures.append((payload, e))
+
+    # -- pump --------------------------------------------------------------
+
+    def _pump_loop(self) -> None:
+        while not self._stop.is_set():
+            with self._lock:
+                failures, self._send_failures = self._send_failures, []
+                conns = {w.conn: w for w in self._workers.values()
+                         if not w.dead}
+            for payload, e in failures:
+                self._report("driver", payload[0], payload[3], None,
+                             RuntimeError(f"task not picklable for process "
+                                          f"backend: {e!r}"))
+            if not conns:
+                time.sleep(_POLL_S / 5)
+                continue
+            try:
+                ready = multiprocessing.connection.wait(
+                    list(conns), timeout=_POLL_S / 2)
+            except OSError:
+                continue
+            for conn in ready:
+                w = conns[conn]
+                try:
+                    msg = conn.recv()
+                except (EOFError, OSError):
+                    with self._lock:
+                        w.dead = True  # heartbeats stop; scheduler reaps
+                    continue
+                if msg[0] == "beat":
+                    self._beat(msg[1])
+                elif msg[0] == "done":
+                    _, wid, task_id, attempt, result, error = msg
+                    with self._lock:
+                        w.outstanding.pop((task_id, attempt), None)
+                    self._report(wid, task_id, attempt, result, error)
+            self._assign_pending()
+
+    # -- membership --------------------------------------------------------
+
+    def add_worker(self, worker_id: str, fail_after: Optional[int] = None,
+                   slow_factor: float = 1.0) -> None:
+        parent, child = self._ctx.Pipe(duplex=True)
+        proc = self._ctx.Process(
+            target=_process_worker_main,
+            args=(worker_id, child, fail_after, slow_factor),
+            name=f"worker-{worker_id}", daemon=True)
+        proc.start()
+        child.close()
+        with self._lock:
+            self._workers[worker_id] = _ProcWorker(proc, parent)
+        self._assign_pending()
+
+    def kill_worker(self, worker_id: str) -> None:
+        with self._lock:
+            w = self._workers.get(worker_id)
+            if w is None:
+                return
+            w.dead = True
+        w.proc.terminate()
+
+    def remove_worker(self, worker_id: str) -> None:
+        with self._lock:
+            w = self._workers.get(worker_id)
+            if w is None:
+                return
+            w.dead = True
+        try:
+            w.send(None)
+        except (EOFError, OSError, BrokenPipeError):
+            pass
+        w.proc.terminate()
+
+    def worker_ids(self) -> list[str]:
+        with self._lock:
+            return list(self._workers)
+
+    def worker_alive(self, worker_id: str) -> bool:
+        with self._lock:
+            w = self._workers.get(worker_id)
+            return bool(w and not w.dead and w.proc.is_alive())
+
+    def lost_assignments(self, worker_id: str) -> list[tuple[int, int]]:
+        with self._lock:
+            w = self._workers.pop(worker_id, None)
+            if w is None:
+                return []
+            lost = list(w.outstanding)
+        try:
+            w.conn.close()
+        except OSError:
+            pass
+        return lost
+
+    def shutdown(self, join_timeout: float = 5.0) -> None:
+        self._stop.set()
+        if self._pump is not None:
+            self._pump.join(timeout=1.0)
+        with self._lock:
+            workers = list(self._workers.values())
+            self._workers.clear()
+        for w in workers:
+            try:
+                w.send(None)
+            except (EOFError, OSError, BrokenPipeError):
+                pass
+        deadline = time.monotonic() + min(join_timeout, 1.0)
+        for w in workers:
+            w.proc.join(timeout=max(0.0, deadline - time.monotonic()))
+            if w.proc.is_alive():
+                w.proc.terminate()
+            try:
+                w.conn.close()
+            except OSError:
+                pass
+
+
+def make_backend(backend: "str | ExecutorBackend") -> ExecutorBackend:
+    """Resolve a backend spec: an instance, ``"thread"``, or ``"process"``."""
+    if isinstance(backend, ExecutorBackend):
+        return backend
+    if backend == "thread":
+        return ThreadBackend()
+    if backend == "process":
+        return ProcessBackend()
+    raise ValueError(f"unknown executor backend {backend!r}")

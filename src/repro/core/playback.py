@@ -7,6 +7,9 @@ an in-process bus rather than TCPROS (see DESIGN.md §8).
 
 ``RosPlay``   reads a Bag (disk- or memory-backed) and publishes its
               messages in timestamp order, optionally paced by wall clock.
+              ``run_batched(n)`` delivers timestamp-ordered micro-batches
+              through ``MessageBus.publish_batch`` so user logic can be a
+              jitted array step instead of a per-message Python call.
 ``RosRecord`` subscribes to topics and writes everything to a Bag.
 
 Together with :mod:`repro.core.bag`'s ``MemoryChunkedFile`` these are the two
@@ -24,6 +27,7 @@ from typing import Callable, Iterable, Optional, Sequence
 from .bag import Bag, Message
 
 Callback = Callable[[Message], None]
+BatchCallback = Callable[[list[Message]], None]
 
 
 class Publisher:
@@ -47,6 +51,8 @@ class MessageBus:
     def __init__(self):
         self._subs: dict[str, list[Callback]] = defaultdict(list)
         self._all: list[Callback] = []
+        self._batch_subs: dict[str, list[BatchCallback]] = defaultdict(list)
+        self._batch_all: list[BatchCallback] = []
         self._lock = threading.Lock()
         self.published = 0
 
@@ -68,12 +74,65 @@ class MessageBus:
             else:
                 self._subs[topic].remove(callback)
 
+    def subscribe_batch(self, topic: Optional[str],
+                        callback: BatchCallback) -> None:
+        """Batch subscription: receives ``list[Message]`` micro-batches from
+        :meth:`publish_batch`.  Per-topic subscribers get the batch split by
+        topic (uniform payload shape for array assembly); ``topic=None``
+        receives the whole mixed-topic batch."""
+        with self._lock:
+            if topic is None:
+                self._batch_all.append(callback)
+            else:
+                self._batch_subs[topic].append(callback)
+
+    def unsubscribe_batch(self, topic: Optional[str],
+                          callback: BatchCallback) -> None:
+        with self._lock:
+            if topic is None:
+                self._batch_all.remove(callback)
+            else:
+                self._batch_subs[topic].remove(callback)
+
     def _dispatch(self, msg: Message) -> None:
         with self._lock:
             cbs = list(self._subs.get(msg.topic, ())) + list(self._all)
             self.published += 1
         for cb in cbs:
             cb(msg)
+
+    def publish_batch(self, messages: Sequence[Message]) -> int:
+        """Deliver a micro-batch with one lock acquisition and one callback
+        invocation per batch subscriber (vs one per message) — the bus half
+        of the batched replay hot path.  Per-message subscribers still see
+        every message individually, so recorders need no changes."""
+        msgs = list(messages)
+        if not msgs:
+            return 0
+        with self._lock:
+            self.published += len(msgs)
+            per_msg = {t: list(self._subs.get(t, ()))
+                       for t in {m.topic for m in msgs}}
+            all_cbs = list(self._all)
+            per_batch = {t: list(self._batch_subs.get(t, ()))
+                         for t in {m.topic for m in msgs}}
+            batch_all = list(self._batch_all)
+        if all_cbs or any(per_msg.values()):
+            for m in msgs:
+                for cb in per_msg[m.topic]:
+                    cb(m)
+                for cb in all_cbs:
+                    cb(m)
+        if any(per_batch.values()):
+            groups: dict[str, list[Message]] = defaultdict(list)
+            for m in msgs:
+                groups[m.topic].append(m)
+            for t, group in groups.items():
+                for cb in per_batch[t]:
+                    cb(group)
+        for cb in batch_all:
+            cb(msgs)
+        return len(msgs)
 
 
 class RosPlay:
@@ -87,12 +146,16 @@ class RosPlay:
     def __init__(self, bag: Bag, bus: MessageBus,
                  topics: Optional[Sequence[str]] = None,
                  rate: Optional[float] = None,
-                 chunk_range: Optional[tuple[int, int]] = None):
+                 chunk_range: Optional[tuple[int, int]] = None,
+                 start: Optional[int] = None,
+                 end: Optional[int] = None):
         self._bag = bag
         self._bus = bus
         self._topics = topics
         self._rate = rate
         self._chunk_range = chunk_range
+        self._start = start
+        self._end = end
         self.messages_played = 0
 
     def _time_ordered(self) -> Iterable[Message]:
@@ -100,7 +163,8 @@ class RosPlay:
         topic boundaries; merge-sort on a small heap window keeps global
         order without materialising the partition."""
         it = self._bag.read_messages(topics=self._topics,
-                                     chunk_range=self._chunk_range)
+                                     chunk_range=self._chunk_range,
+                                     start=self._start, end=self._end)
         heap: list[tuple[int, int, Message]] = []
         seq = 0
         WINDOW = 4096
@@ -131,22 +195,81 @@ class RosPlay:
             self.messages_played += 1
         return self.messages_played
 
+    def run_batched(self, batch_size: int) -> int:
+        """Vectorized replay: publish timestamp-ordered micro-batches of up
+        to ``batch_size`` messages via :meth:`MessageBus.publish_batch`.
+
+        Wall-clock pacing (``rate``) applies at batch boundaries, keyed on
+        the first timestamp of each batch — the array-step analogue of
+        per-message pacing.
+        """
+        if batch_size < 1:
+            raise ValueError("batch_size must be >= 1")
+        t0_msg: Optional[int] = None
+        t0_wall = time.monotonic()
+        batch: list[Message] = []
+
+        def flush() -> None:
+            nonlocal t0_msg
+            if not batch:
+                return
+            if self._rate is not None:
+                if t0_msg is None:
+                    t0_msg = batch[0].timestamp
+                target = (batch[0].timestamp - t0_msg) / 1e9 / self._rate
+                delay = target - (time.monotonic() - t0_wall)
+                if delay > 0:
+                    time.sleep(delay)
+            self.messages_played += self._bus.publish_batch(batch)
+            batch.clear()
+
+        for msg in self._time_ordered():
+            batch.append(msg)
+            if len(batch) >= batch_size:
+                flush()
+        flush()
+        return self.messages_played
+
 
 class RosRecord:
-    """Subscribe to topics and persist every message to a Bag."""
+    """Subscribe to topics and persist every message to a Bag.
+
+    ``batch=True`` records through the batch subscription instead: one
+    callback + one lock acquisition per micro-batch rather than per
+    message, keeping the recorder off the per-message hot path of batched
+    replay.  (Don't combine with per-message mode on the same bus — batched
+    publishes would be recorded twice.)
+    """
 
     def __init__(self, bus: MessageBus, bag: Bag,
                  topics: Optional[Sequence[str]] = None,
-                 exclude_topics: Optional[Sequence[str]] = None):
+                 exclude_topics: Optional[Sequence[str]] = None,
+                 batch: bool = False):
         self._bus = bus
         self._bag = bag
         self._topics = list(topics) if topics is not None else None
         self._exclude = set(exclude_topics or ())
+        self._batch = batch
         self._cbs: list[tuple[Optional[str], Callback]] = []
+        self._batch_cbs: list[tuple[Optional[str], BatchCallback]] = []
         self.messages_recorded = 0
         self._lock = threading.Lock()
 
     def start(self) -> None:
+        if self._batch:
+            def bcb(msgs: list[Message]) -> None:
+                kept = [m for m in msgs if m.topic not in self._exclude]
+                if not kept:
+                    return
+                with self._lock:
+                    for m in kept:
+                        self._bag.write_message(m)
+                    self.messages_recorded += len(kept)
+            for t in (self._topics if self._topics is not None else [None]):
+                self._bus.subscribe_batch(t, bcb)
+                self._batch_cbs.append((t, bcb))
+            return
+
         def cb(msg: Message) -> None:
             if msg.topic in self._exclude:
                 return
@@ -165,6 +288,9 @@ class RosRecord:
         for t, cb in self._cbs:
             self._bus.unsubscribe(t, cb)
         self._cbs.clear()
+        for t, bcb in self._batch_cbs:
+            self._bus.unsubscribe_batch(t, bcb)
+        self._batch_cbs.clear()
 
     def __enter__(self) -> "RosRecord":
         self.start()

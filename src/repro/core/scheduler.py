@@ -6,7 +6,7 @@ Rosbag data into memory and then launches a ROS node to process the incoming
 data."
 
 This module reproduces the *scheduling semantics* a production platform needs
-at thousand-node scale, in-process (threads) so it is testable on one core:
+at thousand-node scale:
 
 * task queue with locality-free FIFO dispatch,
 * **fault tolerance**: heartbeat timeouts and fail-fast exceptions requeue
@@ -19,6 +19,13 @@ at thousand-node scale, in-process (threads) so it is testable on one core:
 * bounded retries: a task failing ``max_attempts`` times fails the job
   (poison-pill semantics, not an infinite loop).
 
+*Where* tasks execute is delegated to an :class:`ExecutorBackend`
+(:mod:`repro.core.executors`): ``backend="thread"`` is the in-process pool
+(latency/offload-bound logic), ``backend="process"`` runs one OS process per
+worker so CPU-bound user logic parallelizes.  Scheduling semantics are
+identical on both — the fault-tolerance test suite runs parametrized over
+the two backends.
+
 The same scheduler drives both the playback simulation (each task = one bag
 partition through user logic) and host-side data loading for the training
 pipeline.
@@ -26,12 +33,17 @@ pipeline.
 
 from __future__ import annotations
 
-import queue
 import threading
 import time
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Union
+
+from .executors import (ExecutorBackend, ProcessBackend, TaskPayload,
+                        ThreadBackend, Worker, make_backend)
+
+__all__ = ["Task", "TaskState", "Scheduler", "Worker", "WorkerError",
+           "ExecutorBackend", "ThreadBackend", "ProcessBackend"]
 
 
 class TaskState(Enum):
@@ -52,81 +64,13 @@ class Task:
     result: Any = None
     error: Optional[BaseException] = None
     started_at: dict[int, float] = field(default_factory=dict)  # attempt -> t
+    finished_at: Optional[float] = None
     finished_by: Optional[str] = None
+    speculated: bool = False         # at most one backup copy per task
 
 
 class WorkerError(RuntimeError):
     pass
-
-
-class Worker(threading.Thread):
-    """A simulated cluster worker.
-
-    Fault injection for tests/benchmarks:
-      ``fail_after``  : raise on the Nth task it executes (process crash),
-      ``slow_factor`` : multiply user-logic sleep time (straggler),
-      ``kill()``      : stop heartbeating and accepting work (node loss).
-    """
-
-    def __init__(self, worker_id: str, inbox: "queue.Queue",
-                 report: Callable[["Worker", Task, int, Any, Optional[BaseException]], None],
-                 heartbeat: Callable[["Worker"], None],
-                 fail_after: Optional[int] = None,
-                 slow_factor: float = 1.0):
-        super().__init__(name=f"worker-{worker_id}", daemon=True)
-        self.worker_id = worker_id
-        self._inbox = inbox
-        self._report = report
-        self._heartbeat = heartbeat
-        self._fail_after = fail_after
-        self.slow_factor = slow_factor
-        self._alive = True
-        self._executed = 0
-
-    def kill(self) -> None:
-        self._alive = False
-
-    @property
-    def is_alive_worker(self) -> bool:
-        return self._alive
-
-    def run(self) -> None:
-        while True:
-            if not self._alive:
-                return                # dead node: stop consuming work
-            try:
-                item = self._inbox.get(timeout=0.05)
-            except queue.Empty:
-                self._heartbeat(self)
-                continue
-            if item is None:          # shutdown sentinel
-                return
-            task, attempt = item
-            if not self._alive:
-                # died between get() and here: this one task is lost
-                return
-            self._heartbeat(self)
-            self._executed += 1
-            if self._fail_after is not None and self._executed >= self._fail_after:
-                self._alive = False   # crash: no report, no more heartbeats
-                continue
-            try:
-                if self.slow_factor > 1.0:
-                    # stragglers burn extra wall time before doing the work
-                    time.sleep(0.001 * (self.slow_factor - 1.0))
-                result = task.fn(*task.args, worker_id=self.worker_id) \
-                    if _wants_worker_id(task.fn) else task.fn(*task.args)
-                self._report(self, task, attempt, result, None)
-            except BaseException as e:   # noqa: BLE001 - report any failure
-                self._report(self, task, attempt, None, e)
-
-
-def _wants_worker_id(fn: Callable) -> bool:
-    try:
-        import inspect
-        return "worker_id" in inspect.signature(fn).parameters
-    except (TypeError, ValueError):
-        return False
 
 
 class Scheduler:
@@ -137,13 +81,12 @@ class Scheduler:
                  heartbeat_timeout: float = 2.0,
                  speculation: bool = True,
                  speculation_factor: float = 4.0,
-                 speculation_min_done: int = 3):
+                 speculation_min_done: int = 3,
+                 backend: Union[str, ExecutorBackend] = "thread"):
         self._tasks: dict[int, Task] = {}
         self._next_id = 0
-        self._inbox: "queue.Queue" = queue.Queue()
         self._lock = threading.Lock()
         self._done_durations: list[float] = []
-        self._workers: dict[str, Worker] = {}
         self._last_beat: dict[str, float] = {}
         self._max_attempts = max_attempts
         self._hb_timeout = heartbeat_timeout
@@ -154,37 +97,47 @@ class Scheduler:
         self._failed_job: Optional[BaseException] = None
         self.stats = {"retries": 0, "speculative_launches": 0,
                       "worker_deaths": 0, "tasks_done": 0}
+        self._backend = make_backend(backend)
+        self._backend.start(self._on_report, self._on_beat)
         for i in range(num_workers):
             self.add_worker(f"w{i}")
 
+    @property
+    def backend(self) -> ExecutorBackend:
+        return self._backend
+
     # -- elastic membership --------------------------------------------------
 
-    def add_worker(self, worker_id: str, **kw) -> Worker:
-        w = Worker(worker_id, self._inbox, self._on_report, self._on_beat, **kw)
+    def add_worker(self, worker_id: str, **kw) -> None:
         with self._lock:
-            self._workers[worker_id] = w
             self._last_beat[worker_id] = time.monotonic()
-        w.start()
-        return w
+        self._backend.add_worker(worker_id, **kw)
 
     def remove_worker(self, worker_id: str) -> None:
         with self._lock:
-            w = self._workers.pop(worker_id, None)
             self._last_beat.pop(worker_id, None)
-        if w:
-            w.kill()
+        self._backend.remove_worker(worker_id)
+        # elastic scale-down loses whatever was shipped to the worker and
+        # not yet reported (process workers are terminated; dead thread
+        # workers leave their in-flight task) — recompute it now
+        self._requeue_lost(self._backend.lost_assignments(worker_id))
+
+    def _requeue_lost(self, lost: list[tuple[int, int]]) -> None:
+        with self._lock:
+            for task_id, attempt in lost:
+                task = self._tasks.get(task_id)
+                if (task is not None and task.state == TaskState.RUNNING
+                        and task.attempt == attempt):
+                    self._retry_locked(
+                        task, WorkerError("lost on removed worker"))
 
     def kill_worker(self, worker_id: str) -> None:
         """Simulate node loss (stops heartbeats; running task is lost)."""
-        with self._lock:
-            w = self._workers.get(worker_id)
-        if w:
-            w.kill()
+        self._backend.kill_worker(worker_id)
 
     @property
     def num_alive_workers(self) -> int:
-        with self._lock:
-            return sum(1 for w in self._workers.values() if w.is_alive_worker)
+        return self._backend.num_alive()
 
     # -- submission ------------------------------------------------------------
 
@@ -201,68 +154,78 @@ class Scheduler:
     def _dispatch(self, task: Task) -> None:
         task.state = TaskState.RUNNING
         task.started_at[task.attempt] = time.monotonic()
-        self._inbox.put((task, task.attempt))
+        payload: TaskPayload = (task.task_id, task.fn, task.args, task.attempt)
+        self._backend.submit(payload)
 
     # -- worker callbacks --------------------------------------------------------
 
-    def _on_beat(self, worker: Worker) -> None:
+    def _on_beat(self, worker_id: str) -> None:
         with self._lock:
-            self._last_beat[worker.worker_id] = time.monotonic()
+            self._last_beat[worker_id] = time.monotonic()
 
-    def _on_report(self, worker: Worker, task: Task, attempt: int,
+    def _on_report(self, worker_id: str, task_id: int, attempt: int,
                    result: Any, error: Optional[BaseException]) -> None:
         with self._lock:
-            self._last_beat[worker.worker_id] = time.monotonic()
-            if task.state == TaskState.DONE:
-                return                      # a speculative copy already won
+            self._last_beat[worker_id] = time.monotonic()
+            task = self._tasks.get(task_id)
+            if task is None or task.state != TaskState.RUNNING:
+                return      # a speculative copy already won, or job failed
             if error is None:
                 task.state = TaskState.DONE
                 task.result = result
-                task.finished_by = worker.worker_id
+                task.finished_by = worker_id
+                task.finished_at = time.monotonic()
                 start = task.started_at.get(attempt)
                 if start is not None:
-                    self._done_durations.append(time.monotonic() - start)
+                    self._done_durations.append(task.finished_at - start)
                 self._outstanding -= 1
                 self.stats["tasks_done"] += 1
-            else:
-                task.attempt += 1
-                self.stats["retries"] += 1
-                if task.attempt >= self._max_attempts:
-                    task.state = TaskState.FAILED
-                    task.error = error
-                    self._failed_job = error
-                    self._outstanding -= 1
-                else:
-                    self._dispatch(task)
+            elif attempt == task.attempt:
+                self._retry_locked(task, error)
+            # else: stale failure from a superseded attempt — a newer
+            # (speculative or retried) copy is already in flight; don't
+            # burn a retry on it
+
+    def _retry_locked(self, task: Task, error: BaseException) -> None:
+        task.attempt += 1
+        self.stats["retries"] += 1
+        if task.attempt >= self._max_attempts:
+            task.state = TaskState.FAILED
+            task.error = error
+            self._failed_job = error
+            self._outstanding -= 1
+        else:
+            self._dispatch(task)
 
     # -- driver loop -----------------------------------------------------------------
 
     def _check_faults(self) -> None:
         now = time.monotonic()
         with self._lock:
-            dead = [wid for wid, w in self._workers.items()
-                    if not w.is_alive_worker
-                    or now - self._last_beat.get(wid, now) > self._hb_timeout]
-            for wid in dead:
-                w = self._workers.pop(wid, None)
+            last_beat = dict(self._last_beat)
+        dead = [wid for wid in self._backend.worker_ids()
+                if not self._backend.worker_alive(wid)
+                or now - last_beat.get(wid, now) > self._hb_timeout]
+        lost: list[tuple[int, int]] = []
+        for wid in dead:
+            self._backend.remove_worker(wid)
+            lost.extend(self._backend.lost_assignments(wid))
+            with self._lock:
                 self._last_beat.pop(wid, None)
-                if w is not None:
-                    self.stats["worker_deaths"] += 1
-            # requeue tasks whose only running attempt may have been lost
+                self.stats["worker_deaths"] += 1
+        # recompute payloads that died with their worker (lineage makes
+        # this safe): only if no newer attempt is already in flight
+        self._requeue_lost(lost)
+        with self._lock:
+            # staleness backstop: requeue tasks whose only running attempt
+            # may have been lost (e.g. in a dead worker's shared queue slot)
             if dead:
                 for task in self._tasks.values():
                     if task.state == TaskState.RUNNING:
                         started = task.started_at.get(task.attempt, 0)
                         if now - started > self._hb_timeout:
-                            task.attempt += 1
-                            self.stats["retries"] += 1
-                            if task.attempt >= self._max_attempts:
-                                task.state = TaskState.FAILED
-                                task.error = WorkerError("lost on dead worker")
-                                self._failed_job = task.error
-                                self._outstanding -= 1
-                            else:
-                                self._dispatch(task)
+                            self._retry_locked(
+                                task, WorkerError("lost on dead worker"))
 
     def _check_stragglers(self) -> None:
         if not self._spec:
@@ -274,18 +237,23 @@ class Scheduler:
             median = durs[len(durs) // 2]
             threshold = max(self._spec_factor * median, 0.05)
             now = time.monotonic()
+            backups: list[TaskPayload] = []
             for task in self._tasks.values():
-                if task.state != TaskState.RUNNING:
+                if task.state != TaskState.RUNNING or task.speculated:
                     continue
                 started = task.started_at.get(task.attempt)
                 if started is None:
                     continue
-                if now - started > threshold and task.attempt + 1 not in task.started_at:
+                if now - started > threshold:
                     # launch one backup copy (same attempt counter slot + 1)
+                    task.speculated = True
                     task.attempt += 1
                     task.started_at[task.attempt] = now
                     self.stats["speculative_launches"] += 1
-                    self._inbox.put((task, task.attempt))
+                    backups.append((task.task_id, task.fn, task.args,
+                                    task.attempt))
+        for payload in backups:
+            self._backend.submit(payload)
 
     def run(self, timeout: float = 120.0) -> dict[int, Any]:
         """Drive to completion; returns {task_id: result}."""
@@ -309,14 +277,13 @@ class Scheduler:
             return {tid: t.result for tid, t in self._tasks.items()
                     if t.state == TaskState.DONE}
 
-    def shutdown(self) -> None:
+    def task_finished_at(self, task_id: int) -> Optional[float]:
         with self._lock:
-            workers = list(self._workers.values())
-            self._workers.clear()
-        for w in workers:
-            w.kill()
-        for w in workers:
-            self._inbox.put(None)
+            task = self._tasks.get(task_id)
+            return task.finished_at if task else None
+
+    def shutdown(self) -> None:
+        self._backend.shutdown()
 
     def __enter__(self) -> "Scheduler":
         return self

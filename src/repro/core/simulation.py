@@ -1,34 +1,100 @@
-"""The distributed simulation driver (paper Fig 3 + Fig 5 workflow).
+"""The scenario engine: distributed simulation over a suite of scenarios
+(paper Fig 3 + Fig 5 workflow, generalized from "replay one bag" to "run a
+test matrix").
 
-    Bag partitions --RosPlay--> MessageBus --User Logic--> RosRecord --> Bag
-        (driver schedules one task per partition across the worker pool)
+    Scenario catalog --ScenarioSuite--> Scheduler/ExecutorBackend
+        --RosPlay--> MessageBus --User Logic--> RosRecord --> Bag
+
+A :class:`Scenario` describes one functional/performance test: a bag source,
+a topic filter, a time window, a latency/fault profile and a user-logic ref.
+A :class:`ScenarioSuite` fans every partition of every scenario through ONE
+scheduler (thread or process backend) and returns per-scenario
+:class:`SimulationReport`\\ s — the paper's "massive test suites over a
+shared cluster" shape.
 
 Per the paper: "Each Spark worker first reads the Rosbag data into memory
 and then launches a ROS node to process the incoming data."  Here each task:
 
-1. reads its chunk-range partition from the source bag,
+1. reads its chunk-range partition from the source bag (applying the
+   scenario's topic filter and time window),
 2. copies it into a ``MemoryChunkedFile``-backed bag (the ROSBag cache —
    this is the I/O optimisation §4.1 measures),
-3. replays it through the user logic attached to the bus,
+3. replays it through the user logic attached to the bus — per message, or
+   in timestamp-ordered micro-batches when ``Scenario.batch_size`` is set
+   (``RosPlay.run_batched`` -> ``MessageBus.publish_batch``), so the logic
+   can be a jitted array step over assembled batches
+   (:func:`repro.data.pipeline.assemble_message_batch` +
+   :func:`repro.kernels.sensor_decode.sensor_decode`),
 4. records outputs into a memory bag whose image is the task result.
 
-``user_logic`` is any callable ``Message -> Optional[(topic, bytes)]`` — in
-production it is a jitted model step (see examples/distributed_playback.py);
-the platform is generic (§5: "the simulator ... can be replaced").
+``user_logic`` contracts:
+  per-message : ``Message -> Optional[(topic, bytes)]`` (output inherits the
+                input timestamp — the seed contract),
+  batched     : ``list[Message] -> Optional[iterable[(topic, ts, bytes)]]``.
+Either may be given as a ``"module:attr"`` string ref, resolved inside the
+worker — required for the process backend, where the callable must cross a
+pickle boundary.
 """
 
 from __future__ import annotations
 
+import importlib
+import random
 import time
 from dataclasses import dataclass
-from typing import Callable, Optional, Sequence
+from typing import Callable, Optional, Sequence, Union
 
 from .bag import Bag, Message, partition_bag
 from .binpipe import BinaryPartition, encode
+from .executors import ExecutorBackend
 from .playback import MessageBus, RosPlay, RosRecord
 from .scheduler import Scheduler
 
 UserLogic = Callable[[Message], Optional[tuple[str, bytes]]]
+BatchUserLogic = Callable[[Sequence[Message]],
+                          Optional[Sequence[tuple[str, int, bytes]]]]
+LogicRef = Union[UserLogic, BatchUserLogic, str]
+
+
+def resolve_logic_ref(ref: LogicRef) -> Callable:
+    """Resolve a ``"package.module:attr"`` string ref to the callable it
+    names; callables pass through.  String refs are what a process-backend
+    scenario ships across the pickle boundary."""
+    if callable(ref):
+        return ref
+    mod_name, _, attr = str(ref).partition(":")
+    if not attr:
+        raise ValueError(f"logic ref {ref!r} is not 'module:attr'")
+    fn = getattr(importlib.import_module(mod_name), attr)
+    if not callable(fn):
+        raise TypeError(f"logic ref {ref!r} resolved to non-callable {fn!r}")
+    return fn
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One entry of the test matrix.
+
+    ``batch_size=None`` replays per message (seed behaviour); an integer
+    switches to batched replay and the batched user-logic contract.
+    ``drop_rate`` is the fault profile: that fraction of input messages is
+    dropped (deterministically, per ``seed``) before reaching user logic —
+    simulated sensor dropouts.  ``latency_model_s`` sleeps once per user
+    logic invocation (per message, or per batch — batching amortizes it,
+    like a real accelerator-offloaded model step).
+    """
+    name: str
+    bag_path: str
+    user_logic: LogicRef
+    topics: Optional[tuple[str, ...]] = None
+    start: Optional[int] = None          # time window, ns (inclusive)
+    end: Optional[int] = None            # time window, ns (exclusive)
+    latency_model_s: float = 0.0
+    drop_rate: float = 0.0
+    seed: int = 0
+    batch_size: Optional[int] = None
+    num_partitions: Optional[int] = None
+    use_memory_cache: bool = True
 
 
 @dataclass
@@ -39,102 +105,240 @@ class SimulationReport:
     partitions: int
     scheduler_stats: dict
     output_images: list    # list[bytes] — memory-bag images, one per partition
+    scenario: str = ""
+    backend: str = ""
+    batch_size: Optional[int] = None
+    messages_dropped: int = 0
 
     @property
     def throughput_msgs_s(self) -> float:
         return self.messages_in / self.wall_time_s if self.wall_time_s else 0.0
 
 
-def _run_partition(bag_path: str, chunk_range: tuple[int, int],
-                   user_logic: UserLogic, use_memory_cache: bool,
-                   latency_model_s: float = 0.0) -> tuple[int, int, bytes]:
-    """One worker task: play a partition through user logic, record results.
+def _run_scenario_partition(scenario: Scenario, chunk_range: tuple[int, int],
+                            ) -> tuple[int, int, int, bytes]:
+    """One worker task: play a scenario partition through its user logic.
 
-    Returns (messages_in, messages_out, output bag image).
+    Returns (messages_in, messages_out, messages_dropped, output bag image).
     """
-    src = Bag.open_read(bag_path, backend="disk")
-    if use_memory_cache:
-        # materialise the partition into the ROSBag cache first (§3.2):
+    logic = resolve_logic_ref(scenario.user_logic)
+    topics = list(scenario.topics) if scenario.topics is not None else None
+    src = Bag.open_read(scenario.bag_path, backend="disk")
+    if scenario.use_memory_cache:
+        # materialise the (filtered) partition into the ROSBag cache (§3.2):
         cache = Bag.open_write(backend="memory")
-        for msg in src.read_messages(chunk_range=chunk_range):
+        for msg in src.read_messages(topics=topics, start=scenario.start,
+                                     end=scenario.end,
+                                     chunk_range=chunk_range):
             cache.write_message(msg)
         cache.close()
         play_bag = Bag.open_read(backend="memory",
                                  image=cache.chunked_file.image())
-        play_range = None
+        play = dict(chunk_range=None, topics=None, start=None, end=None)
+        input_topics = play_bag.topics
     else:
         play_bag = src
-        play_range = chunk_range
+        play = dict(chunk_range=chunk_range, topics=topics,
+                    start=scenario.start, end=scenario.end)
+        input_topics = ([t for t in src.topics if t in topics]
+                        if topics is not None else src.topics)
 
     bus = MessageBus()
     out_bag = Bag.open_write(backend="memory")
-    # record everything the user logic publishes, but not the replayed inputs
-    rec = RosRecord(bus, out_bag, topics=None, exclude_topics=src.topics)
+    # record everything the user logic publishes, but not the replayed
+    # inputs; in batched mode the recorder rides the batch subscription so
+    # no per-message callback remains on the replay hot path
+    rec = RosRecord(bus, out_bag, topics=None, exclude_topics=src.topics,
+                    batch=scenario.batch_size is not None)
 
     n_out = 0
+    n_drop = 0
+    # deterministic fault profile, decorrelated across partitions
+    rng = random.Random(scenario.seed * 1_000_003
+                        + chunk_range[0] * 8191 + chunk_range[1])
+    drop = scenario.drop_rate
 
-    def on_msg(msg: Message) -> None:
-        nonlocal n_out
-        if latency_model_s:
-            time.sleep(latency_model_s)      # simulated perception latency
-        out = user_logic(msg)
-        if out is not None:
-            topic, data = out
-            bus.advertise(topic).publish(msg.timestamp, data)
-            n_out += 1
+    if scenario.batch_size is None:
+        def on_msg(msg: Message) -> None:
+            nonlocal n_out, n_drop
+            if drop and rng.random() < drop:
+                n_drop += 1
+                return
+            if scenario.latency_model_s:
+                time.sleep(scenario.latency_model_s)  # simulated perception
+            out = logic(msg)
+            if out is not None:
+                topic, data = out
+                bus.advertise(topic).publish(msg.timestamp, data)
+                n_out += 1
 
-    # subscribe user logic to every *input* topic; outputs go to "/out/..."
-    for t in src.topics:
-        bus.subscribe(t, on_msg)
+        for t in input_topics:
+            bus.subscribe(t, on_msg)
+    else:
+        def on_batch(msgs: list[Message]) -> None:
+            nonlocal n_out, n_drop
+            if drop:
+                kept = [m for m in msgs if rng.random() >= drop]
+                n_drop += len(msgs) - len(kept)
+                msgs = kept
+                if not msgs:
+                    return
+            if scenario.latency_model_s:
+                time.sleep(scenario.latency_model_s)  # one model step/batch
+            outs = logic(msgs)
+            if outs:
+                out_msgs = [Message(t, ts, d) for t, ts, d in outs]
+                bus.publish_batch(out_msgs)
+                n_out += len(out_msgs)
+
+        for t in input_topics:
+            bus.subscribe_batch(t, on_batch)
+
     rec.start()
-    play = RosPlay(play_bag, bus, chunk_range=play_range)
-    n_in = play.run()
+    player = RosPlay(play_bag, bus, **play)
+    if scenario.batch_size is None:
+        n_in = player.run()
+    else:
+        n_in = player.run_batched(scenario.batch_size)
     rec.stop()
     out_bag.close()
+    # image() is close-safe by contract (captured at close time) — the
+    # use-after-close here was a latent bug before MemoryChunkedFile.close
+    # consolidated the image
+    image = out_bag.chunked_file.image()
     src.close()
-    if use_memory_cache:
+    if scenario.use_memory_cache:
         play_bag.close()
-    return n_in, n_out, out_bag.chunked_file.image()
+    return n_in, n_out, n_drop, image
+
+
+def _run_partition(bag_path: str, chunk_range: tuple[int, int],
+                   user_logic: UserLogic, use_memory_cache: bool,
+                   latency_model_s: float = 0.0) -> tuple[int, int, bytes]:
+    """Seed-compatible single-partition entry point (per-message replay).
+
+    Returns (messages_in, messages_out, output bag image).
+    """
+    sc = Scenario(name="partition", bag_path=bag_path, user_logic=user_logic,
+                  latency_model_s=latency_model_s,
+                  use_memory_cache=use_memory_cache)
+    n_in, n_out, _, image = _run_scenario_partition(sc, chunk_range)
+    return n_in, n_out, image
+
+
+class ScenarioSuite:
+    """Run a whole catalog of heterogeneous scenarios through ONE scheduler.
+
+    Every scenario is partitioned independently (its own ``num_partitions``,
+    default = ``num_workers``), all partitions are submitted up front, and
+    the shared worker pool — thread or process backend — drains the matrix
+    with the scheduler's full fault-tolerance/speculation semantics.
+
+    ``run`` returns ``{scenario.name: SimulationReport}``; each report's
+    ``wall_time_s`` spans suite start to that scenario's last finished
+    partition, and ``scheduler_stats`` is the shared pool's counters.
+
+    ``on_scheduler`` (if given) is called with the live Scheduler right
+    after submission — the hook fault-injection harnesses use to kill
+    workers / add elastic capacity mid-suite.
+    """
+
+    def __init__(self, scenarios: Sequence[Scenario], num_workers: int = 4,
+                 backend: Union[str, ExecutorBackend] = "thread",
+                 scheduler_kwargs: Optional[dict] = None,
+                 on_scheduler: Optional[Callable[[Scheduler], None]] = None):
+        names = [s.name for s in scenarios]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate scenario names in {names}")
+        self.scenarios = list(scenarios)
+        self.num_workers = num_workers
+        self.backend = backend
+        self.scheduler_kwargs = scheduler_kwargs or {}
+        self.on_scheduler = on_scheduler
+
+    def run(self, timeout: float = 300.0) -> dict[str, SimulationReport]:
+        plans: list[tuple[Scenario, list[tuple[int, int]]]] = []
+        for sc in self.scenarios:
+            src = Bag.open_read(sc.bag_path, backend="disk")
+            parts = partition_bag(src, sc.num_partitions or self.num_workers)
+            src.close()
+            plans.append((sc, parts))
+
+        t0 = time.monotonic()
+        owner: dict[int, tuple[int, int]] = {}   # tid -> (scenario i, part j)
+        with Scheduler(num_workers=self.num_workers, backend=self.backend,
+                       **self.scheduler_kwargs) as sched:
+            backend_name = sched.backend.name
+            for i, (sc, parts) in enumerate(plans):
+                for j, (lo, hi) in enumerate(parts):
+                    tid = sched.submit(
+                        _run_scenario_partition, sc, (lo, hi),
+                        lineage=("scenario", sc.name, sc.bag_path, lo, hi))
+                    owner[tid] = (i, j)
+            if self.on_scheduler is not None:
+                self.on_scheduler(sched)
+            results = sched.run(timeout=timeout)
+            stats = dict(sched.stats)
+            finished = {tid: sched.task_finished_at(tid) for tid in results}
+
+        reports: dict[str, SimulationReport] = {}
+        for i, (sc, parts) in enumerate(plans):
+            tids = [tid for tid, (si, _) in owner.items() if si == i]
+            rows = {owner[tid][1]: results[tid] for tid in tids}
+            ends = [finished[tid] for tid in tids if finished[tid] is not None]
+            wall = (max(ends) - t0) if ends else 0.0
+            reports[sc.name] = SimulationReport(
+                messages_in=sum(r[0] for r in rows.values()),
+                messages_out=sum(r[1] for r in rows.values()),
+                wall_time_s=wall,
+                partitions=len(parts),
+                scheduler_stats=stats,
+                output_images=[r[3] for _, r in sorted(rows.items())],
+                scenario=sc.name,
+                backend=backend_name,
+                batch_size=sc.batch_size,
+                messages_dropped=sum(r[2] for r in rows.values()),
+            )
+        return reports
 
 
 class DistributedSimulation:
     """Partition a recorded bag across a worker pool and replay it through
     user logic — the full platform of the paper, minus the physical cluster.
+
+    Now a thin wrapper over a one-scenario :class:`ScenarioSuite`; prefer
+    the suite API for anything beyond a single homogeneous replay.
     """
 
-    def __init__(self, bag_path: str, user_logic: UserLogic,
+    def __init__(self, bag_path: str, user_logic: LogicRef,
                  num_workers: int = 4, num_partitions: Optional[int] = None,
                  use_memory_cache: bool = True,
                  latency_model_s: float = 0.0,
+                 batch_size: Optional[int] = None,
+                 backend: Union[str, ExecutorBackend] = "thread",
                  scheduler_kwargs: Optional[dict] = None):
-        self.bag_path = bag_path
-        self.user_logic = user_logic
+        self.scenario = Scenario(
+            name="sim", bag_path=bag_path, user_logic=user_logic,
+            latency_model_s=latency_model_s, batch_size=batch_size,
+            num_partitions=num_partitions or num_workers,
+            use_memory_cache=use_memory_cache)
         self.num_workers = num_workers
-        self.num_partitions = num_partitions or num_workers
-        self.use_memory_cache = use_memory_cache
-        self.latency_model_s = latency_model_s
+        self.backend = backend
         self.scheduler_kwargs = scheduler_kwargs or {}
 
+    @property
+    def bag_path(self) -> str:
+        return self.scenario.bag_path
+
+    @property
+    def user_logic(self) -> LogicRef:
+        return self.scenario.user_logic
+
     def run(self, timeout: float = 300.0) -> SimulationReport:
-        src = Bag.open_read(self.bag_path, backend="disk")
-        parts = partition_bag(src, self.num_partitions)
-        src.close()
-        t0 = time.monotonic()
-        with Scheduler(num_workers=self.num_workers,
-                       **self.scheduler_kwargs) as sched:
-            for lo, hi in parts:
-                sched.submit(
-                    _run_partition, self.bag_path, (lo, hi),
-                    self.user_logic, self.use_memory_cache,
-                    self.latency_model_s,
-                    lineage=("bag", self.bag_path, lo, hi))
-            results = sched.run(timeout=timeout)
-            stats = dict(sched.stats)
-        wall = time.monotonic() - t0
-        n_in = sum(r[0] for r in results.values())
-        n_out = sum(r[1] for r in results.values())
-        images = [r[2] for _, r in sorted(results.items())]
-        return SimulationReport(n_in, n_out, wall, len(parts), stats, images)
+        suite = ScenarioSuite([self.scenario], num_workers=self.num_workers,
+                              backend=self.backend,
+                              scheduler_kwargs=self.scheduler_kwargs)
+        return suite.run(timeout=timeout)[self.scenario.name]
 
 
 def bag_to_partitions(bag_path: str, num_partitions: int,

@@ -14,12 +14,44 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Iterator, Optional
+from typing import Iterator, Optional, Sequence
 
 import numpy as np
 
-from repro.core.bag import Bag, partition_bag
+from repro.core.bag import Bag, Message, partition_bag
 from repro.core.binpipe import decode, encode
+
+
+def assemble_message_batch(messages: Sequence[Message], align: int = 128,
+                           scale: float = 1.0 / 255.0,
+                           zero_point: float = 0.0) -> dict[str, np.ndarray]:
+    """Fixed-layout batch assembly for jitted user logic (the BinPipedRDD
+    frame stage, shaped for :func:`repro.kernels.sensor_decode.sensor_decode`).
+
+    Packs a replay micro-batch (see ``RosPlay.run_batched``) into one
+    record-per-row matrix: ``payload`` (R, Nb) uint8 with Nb = max payload
+    length rounded up to ``align`` (128 = TPU lane width), plus per-record
+    ``lengths`` i32, ``timestamps`` i64, and dequantization ``scale`` /
+    ``zero_point`` f32 vectors.  One numpy copy per record; everything a
+    TPU step needs, nothing variable-length.
+    """
+    if not messages:
+        raise ValueError("empty message batch")
+    lengths = np.fromiter((len(m.data) for m in messages),
+                          dtype=np.int32, count=len(messages))
+    nb = max(int(lengths.max()), 1)
+    nb = (nb + align - 1) // align * align
+    payload = np.zeros((len(messages), nb), dtype=np.uint8)
+    for i, m in enumerate(messages):
+        payload[i, :lengths[i]] = np.frombuffer(m.data, dtype=np.uint8)
+    return {
+        "payload": payload,
+        "lengths": lengths,
+        "timestamps": np.fromiter((m.timestamp for m in messages),
+                                  dtype=np.int64, count=len(messages)),
+        "scale": np.full(len(messages), scale, dtype=np.float32),
+        "zero_point": np.full(len(messages), zero_point, dtype=np.float32),
+    }
 
 
 def write_token_bag(path: str, sequences: np.ndarray,

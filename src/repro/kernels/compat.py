@@ -1,0 +1,15 @@
+"""Pallas API compatibility shims.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` across
+jax releases; the kernels import the resolved name from here so they run on
+either side of the rename.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

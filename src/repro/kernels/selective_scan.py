@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, h_scr, *,
                  blk_s: int):
@@ -86,7 +88,7 @@ def selective_scan(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
         out_shape=jax.ShapeDtypeStruct((bsz, ns * blk_s, nd * blk_d),
                                        jnp.float32),
         scratch_shapes=[pltpu.VMEM((blk_d, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, B, C, A)

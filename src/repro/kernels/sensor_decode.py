@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _decode_kernel(payload_ref, scale_ref, zp_ref, len_ref, out_ref, *,
                    blk_n: int):
@@ -68,9 +70,25 @@ def sensor_decode(payload: jax.Array, scale: jax.Array, zero_point: jax.Array,
         ],
         out_specs=pl.BlockSpec((blk_r, blk_n), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((nr * blk_r, nn * blk_n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(payload, scale[:, None], zero_point[:, None],
       lengths.astype(jnp.int32)[:, None])
     return out[:R, :Nb]
+
+
+def decode_message_batch(batch: dict, *, interpret: bool = True) -> jax.Array:
+    """Run the decode stage on one assembled replay micro-batch.
+
+    ``batch`` is the dict produced by
+    :func:`repro.data.pipeline.assemble_message_batch` — the glue that puts
+    this kernel in the batched-replay hot loop (``RosPlay.run_batched`` ->
+    batch user logic -> assemble -> decode on device).  Returns (R, Nb) f32
+    normalized features with padding bytes zeroed.
+    """
+    return sensor_decode(jnp.asarray(batch["payload"]),
+                         jnp.asarray(batch["scale"]),
+                         jnp.asarray(batch["zero_point"]),
+                         jnp.asarray(batch["lengths"]),
+                         interpret=interpret)

@@ -1,12 +1,10 @@
-"""Bag / ChunkedFile / MemoryChunkedFile tests, incl. property-based
-round-trips (the invariant the whole platform rests on: replay == record)."""
-
-import os
+"""Bag / ChunkedFile / MemoryChunkedFile tests (the invariant the whole
+platform rests on: replay == record); hypothesis round-trips live in
+test_property_based.py."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import Bag, MemoryChunkedFile, Message, partition_bag
+from repro.core import Bag, MemoryChunkedFile, partition_bag
 
 
 def _write(bag, msgs):
@@ -102,19 +100,3 @@ class TestPartitioning:
                       for pr in parts)
             assert tot == 1000
 
-
-@settings(max_examples=30, deadline=None)
-@given(st.lists(
-    st.tuples(st.sampled_from(["/a", "/b", "/c"]),
-              st.integers(min_value=0, max_value=2**40),
-              st.binary(min_size=0, max_size=300)),
-    min_size=0, max_size=60))
-def test_property_bag_roundtrip_memory(msgs):
-    b = Bag.open_write(backend="memory", chunk_bytes=256)
-    for t, ts, d in msgs:
-        b.write(t, ts, d)
-    b.close()
-    r = Bag.open_read(backend="memory", image=b.chunked_file.image())
-    got = [(m.topic, m.timestamp, m.data) for m in r.read_messages()]
-    assert got == msgs
-    assert r.num_messages == len(msgs)

@@ -1,55 +1,10 @@
-"""BinPipedRDD stage tests: encode/decode, serialize/deserialize, frame —
-each stage round-trips (property-based), and map() applies user logic."""
+"""BinPipedRDD stage tests: encode/decode, serialize/deserialize, frame,
+and map() applying user logic; hypothesis round-trips live in
+test_property_based.py."""
 
-import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from hypothesis.extra import numpy as hnp
 
-from repro.core import (BinaryPartition, decode, deserialize, encode, frame,
-                        serialize, unframe)
-
-_field = st.one_of(
-    st.binary(max_size=200),
-    st.text(max_size=50),
-    st.integers(min_value=-2**62, max_value=2**62),
-    st.floats(allow_nan=False, allow_infinity=False, width=64),
-    hnp.arrays(dtype=st.sampled_from([np.uint8, np.int32, np.float32]),
-               shape=hnp.array_shapes(max_dims=3, max_side=8)),
-)
-
-
-def _eq(a, b):
-    if isinstance(a, np.ndarray):
-        return isinstance(b, np.ndarray) and a.dtype == b.dtype \
-            and a.shape == b.shape \
-            and np.array_equal(a, b, equal_nan=a.dtype.kind == "f")
-    return a == b
-
-
-@settings(max_examples=50, deadline=None)
-@given(st.lists(_field, max_size=8))
-def test_property_encode_decode(fields):
-    got = decode(encode(fields))
-    assert len(got) == len(fields)
-    assert all(_eq(a, b) for a, b in zip(fields, got))
-
-
-@settings(max_examples=50, deadline=None)
-@given(st.lists(st.binary(max_size=500), max_size=20))
-def test_property_serialize_roundtrip(records):
-    assert deserialize(serialize(records)) == records
-
-
-@settings(max_examples=50, deadline=None)
-@given(st.lists(st.binary(min_size=0, max_size=700), min_size=0, max_size=20),
-       st.sampled_from([1, 8, 128]))
-def test_property_frame_roundtrip(records, align):
-    payload, offsets, lengths = frame(records, align=align)
-    assert unframe(payload, offsets, lengths) == records
-    # alignment invariant: every record starts on an `align` boundary
-    assert all(o % align == 0 for o in offsets.tolist())
-    assert payload.dtype == np.uint8
+from repro.core import BinaryPartition, decode, encode, unframe
 
 
 def test_encode_rejects_unknown_type():

@@ -1,0 +1,257 @@
+"""Scenario engine tests: ScenarioSuite over heterogeneous scenarios on both
+executor backends, batched vs per-message replay equivalence, batch bus
+semantics, fault/latency profiles, logic refs, and the MemoryChunkedFile
+image-after-close regression.
+
+User-logic functions are module-level so they cross the process-backend
+pickle boundary.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (Bag, DistributedSimulation, MemoryChunkedFile,
+                        Message, MessageBus, RosPlay, Scenario, ScenarioSuite,
+                        resolve_logic_ref)
+
+TOPICS = ("/camera", "/lidar", "/imu")
+
+
+def _make_bag(path, n=600, topics=TOPICS):
+    b = Bag.open_write(path, chunk_bytes=4096)
+    rng = np.random.RandomState(0)
+    # round-robin topics with jittered timestamps so time order != write order
+    for i in range(n):
+        t = topics[i % len(topics)]
+        ts = i * 1000 + int(rng.randint(0, 500))
+        b.write(t, ts, bytes([i % 256]) * 64)
+    b.close()
+    return path
+
+
+def det_logic(msg):
+    return ("/det" + msg.topic, msg.data[:4])
+
+
+def det_batch_logic(msgs):
+    return [("/det" + m.topic, m.timestamp, m.data[:4]) for m in msgs]
+
+
+@pytest.fixture
+def bag_path(tmp_path):
+    return _make_bag(str(tmp_path / "drive.bag"))
+
+
+# -- ScenarioSuite ----------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["thread", "process"])
+def test_suite_heterogeneous_scenarios_one_scheduler(bag_path, backend):
+    """Acceptance: >= 3 heterogeneous scenarios (topic filter / time window /
+    latency+batched) through one Scheduler call, both backends, per-scenario
+    reports."""
+    suite = ScenarioSuite([
+        Scenario("cam-only", bag_path, det_logic, topics=("/camera",)),
+        Scenario("window", bag_path, det_logic, start=100_000, end=300_000),
+        Scenario("batched-latency", bag_path, det_batch_logic,
+                 batch_size=64, latency_model_s=0.0005),
+    ], num_workers=3, backend=backend)
+    reps = suite.run(timeout=120)
+    assert set(reps) == {"cam-only", "window", "batched-latency"}
+
+    cam = reps["cam-only"]
+    assert cam.messages_in == 200          # 600 msgs round-robin 3 topics
+    assert cam.messages_out == 200
+    src = Bag.open_read(bag_path)
+    in_window = sum(1 for m in src.read_messages(start=100_000, end=300_000))
+    src.close()
+    assert reps["window"].messages_in == in_window > 0
+    batched = reps["batched-latency"]
+    assert batched.messages_in == 600 == batched.messages_out
+    assert batched.batch_size == 64
+    for r in reps.values():
+        assert r.backend == backend
+        assert r.wall_time_s > 0
+        assert r.partitions >= 1
+        assert len(r.output_images) == r.partitions
+        assert r.scheduler_stats["tasks_done"] >= r.partitions
+
+
+def test_suite_rejects_duplicate_names(bag_path):
+    with pytest.raises(ValueError):
+        ScenarioSuite([Scenario("a", bag_path, det_logic),
+                       Scenario("a", bag_path, det_logic)])
+
+
+def test_suite_output_images_replayable(bag_path):
+    reps = ScenarioSuite([Scenario("all", bag_path, det_logic)],
+                         num_workers=2).run()
+    total = 0
+    for img in reps["all"].output_images:
+        rb = Bag.open_read(backend="memory", image=img)
+        for m in rb.read_messages():
+            assert m.topic.startswith("/det/")
+            total += 1
+    assert total == 600
+
+
+def test_drop_rate_fault_profile(bag_path):
+    reps = ScenarioSuite([
+        Scenario("all-dropped", bag_path, det_logic, drop_rate=1.0),
+        Scenario("half-dropped", bag_path, det_logic, drop_rate=0.5, seed=3),
+    ], num_workers=2).run()
+    assert reps["all-dropped"].messages_dropped == 600
+    assert reps["all-dropped"].messages_out == 0
+    half = reps["half-dropped"]
+    assert half.messages_dropped + half.messages_out == 600
+    assert 150 < half.messages_dropped < 450       # ~Binomial(600, .5)
+
+
+def test_drop_rate_deterministic(bag_path):
+    r1 = ScenarioSuite([Scenario("d", bag_path, det_logic, drop_rate=0.3,
+                                 seed=11)], num_workers=2).run()
+    r2 = ScenarioSuite([Scenario("d", bag_path, det_logic, drop_rate=0.3,
+                                 seed=11)], num_workers=2).run()
+    assert r1["d"].messages_dropped == r2["d"].messages_dropped
+
+
+def test_batched_equals_per_message_outputs(bag_path):
+    """The vectorized replay path must produce the same output set as the
+    per-message path — batching is an optimisation, not a semantic change."""
+    reps = ScenarioSuite([
+        Scenario("permsg", bag_path, det_logic),
+        Scenario("batched", bag_path, det_batch_logic, batch_size=32),
+    ], num_workers=2).run()
+
+    def outputs(rep):
+        out = []
+        for img in rep.output_images:
+            rb = Bag.open_read(backend="memory", image=img)
+            out.extend((m.topic, m.timestamp, m.data)
+                       for m in rb.read_messages())
+        return sorted(out)
+
+    assert outputs(reps["permsg"]) == outputs(reps["batched"])
+
+
+def test_logic_ref_resolution(bag_path):
+    assert resolve_logic_ref(det_logic) is det_logic
+    assert resolve_logic_ref(f"{__name__}:det_logic") is det_logic
+    with pytest.raises(ValueError):
+        resolve_logic_ref("no_colon_ref")
+    rep = DistributedSimulation(bag_path, f"{__name__}:det_logic",
+                                num_workers=2).run()
+    assert rep.messages_out == 600
+
+
+def test_distributed_simulation_is_thin_suite_wrapper(bag_path):
+    rep = DistributedSimulation(bag_path, det_logic, num_workers=4).run()
+    assert rep.messages_in == 600 == rep.messages_out
+    assert rep.partitions == 4
+    assert rep.scenario == "sim"
+    assert rep.backend == "thread"
+
+
+def test_distributed_simulation_batched_process_backend(bag_path):
+    rep = DistributedSimulation(
+        bag_path, f"{__name__}:det_batch_logic", num_workers=2,
+        batch_size=50, backend="process").run(timeout=120)
+    assert rep.messages_in == 600 == rep.messages_out
+    assert rep.backend == "process"
+
+
+def test_suite_fault_injection_hook(bag_path):
+    """on_scheduler lets harnesses kill/add workers mid-suite; lineage-based
+    recompute must still deliver every message."""
+    def chaos(sched):
+        sched.kill_worker("w0")
+        sched.add_worker("elastic")
+
+    reps = ScenarioSuite(
+        [Scenario("all", bag_path, det_logic, num_partitions=6)],
+        num_workers=2, scheduler_kwargs={"heartbeat_timeout": 0.3},
+        on_scheduler=chaos).run(timeout=120)
+    assert reps["all"].messages_in == 600
+
+
+# -- batched bus / playback semantics ---------------------------------------
+
+
+def test_publish_batch_per_topic_grouping_and_fallback(bag_path):
+    bus = MessageBus()
+    per_msg, batches, mixed = [], [], []
+    bus.subscribe("/camera", per_msg.append)
+    bus.subscribe_batch("/camera", batches.append)
+    bus.subscribe_batch(None, mixed.append)
+    msgs = [Message("/camera", 1, b"a"), Message("/lidar", 2, b"b"),
+            Message("/camera", 3, b"c")]
+    n = bus.publish_batch(msgs)
+    assert n == 3 and bus.published == 3
+    # per-message subscribers see each message individually
+    assert [m.timestamp for m in per_msg] == [1, 3]
+    # per-topic batch subscribers get the batch split by topic
+    assert len(batches) == 1
+    assert [m.timestamp for m in batches[0]] == [1, 3]
+    # all-topic batch subscribers get the whole mixed batch
+    assert len(mixed) == 1 and len(mixed[0]) == 3
+
+
+def test_run_batched_is_time_ordered_and_complete(bag_path):
+    bus = MessageBus()
+    seen = []
+    for t in TOPICS:
+        bus.subscribe_batch(t, seen.extend)
+    n = RosPlay(Bag.open_read(bag_path), bus).run_batched(37)
+    assert n == 600 == len(seen)
+    # per-topic groups of each micro-batch preserve global time order
+    # within a topic
+    by_topic = {}
+    for m in seen:
+        by_topic.setdefault(m.topic, []).append(m.timestamp)
+    for ts in by_topic.values():
+        assert ts == sorted(ts)
+
+
+def test_run_batched_mixed_order(bag_path):
+    bus = MessageBus()
+    stamps = []
+    bus.subscribe_batch(None, lambda b: stamps.extend(m.timestamp for m in b))
+    RosPlay(Bag.open_read(bag_path), bus).run_batched(64)
+    assert stamps == sorted(stamps)       # global timestamp order
+
+
+def test_rosplay_time_window(bag_path):
+    bus = MessageBus()
+    stamps = []
+    bus.subscribe(None, lambda m: stamps.append(m.timestamp))
+    RosPlay(Bag.open_read(bag_path), bus, start=100_000, end=300_000).run()
+    assert stamps and all(100_000 <= t < 300_000 for t in stamps)
+
+
+# -- MemoryChunkedFile close-safety regression ------------------------------
+
+
+def test_memory_bag_image_after_close_regression():
+    """_run_partition reads the output image after out_bag.close(); the image
+    must be captured at close time and stay identical afterwards."""
+    bag = Bag.open_write(backend="memory", chunk_bytes=512)
+    for i in range(100):
+        bag.write("/t", i, bytes([i]) * 40)
+    bag.close()
+    img1 = bag.chunked_file.image()
+    img2 = bag.chunked_file.image()
+    assert img1 == img2
+    rb = Bag.open_read(backend="memory", image=img1)
+    assert rb.num_messages == 100
+    assert [m.timestamp for m in rb.read_messages()] == list(range(100))
+
+
+def test_memory_bag_write_after_close_raises():
+    cf = MemoryChunkedFile()
+    cf.write_chunk(b"payload", 1)
+    cf.close()
+    with pytest.raises(RuntimeError):
+        cf.write_chunk(b"more", 1)
+    with pytest.raises(RuntimeError):
+        cf.write_blob(b"blob")
+    cf.close()                             # idempotent

@@ -1,11 +1,19 @@
 """Scheduler semantics: completion, fault tolerance (dead workers, failing
-tasks), straggler speculation, elasticity, poison-pill bounding."""
+tasks), straggler speculation, elasticity, poison-pill bounding.
 
+The fault-tolerance contract is backend-independent: the parametrized tests
+at the bottom run identically on ThreadBackend and ProcessBackend (task
+functions there are module-level so they cross the process pickle boundary).
+"""
+
+import os
 import time
 
 import pytest
 
 from repro.core import Scheduler, WorkerError
+
+BACKENDS = ["thread", "process"]
 
 
 def test_all_tasks_complete():
@@ -82,7 +90,8 @@ def test_straggler_speculation_wins():
         for i in range(30):
             s.submit(work, i)
         res = s.run(timeout=30)
-    wall = time.monotonic() - t0
+        # measure before __exit__: shutdown quiesce waits for the straggler
+        wall = time.monotonic() - t0
     assert sorted(res.values()) == list(range(30))
     assert s.stats["speculative_launches"] >= 1
     assert wall < 5.0                 # did not wait for the straggler
@@ -114,3 +123,131 @@ def test_lineage_recorded():
         tid = s.submit(lambda: 1, lineage=("bag", "/x.bag", 0, 4))
         s.run()
         assert s._tasks[tid].lineage == ("bag", "/x.bag", 0, 4)
+
+
+# ---------------------------------------------------------------------------
+# Backend-parametrized fault tolerance: identical semantics on thread and
+# process executor backends.  Module-level task fns — picklable for process.
+# ---------------------------------------------------------------------------
+
+
+def _triple(x):
+    return x * 3
+
+
+def _sleepy(x):
+    time.sleep(0.005)
+    return x
+
+
+def _poison():
+    raise ValueError("always fails")
+
+
+def _flaky_filecounted(path, x):
+    """Fails its first two attempts; attempt count survives the process
+    boundary by living in a file."""
+    with open(path, "a") as f:
+        f.write("x")
+    if os.path.getsize(path) <= 2:
+        raise RuntimeError("transient")
+    return x
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_all_tasks_complete(backend):
+    with Scheduler(num_workers=3, backend=backend) as s:
+        ids = [s.submit(_triple, i) for i in range(40)]
+        res = s.run(timeout=60)
+    assert sorted(res.keys()) == sorted(ids)
+    assert sorted(res.values()) == sorted(i * 3 for i in range(40))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_transient_failure_retried(backend, tmp_path):
+    with Scheduler(num_workers=1, speculation=False, backend=backend) as s:
+        s.submit(_flaky_filecounted, str(tmp_path / "attempts"), 7)
+        res = s.run(timeout=30)
+    assert list(res.values()) == [7]
+    assert s.stats["retries"] == 2
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_poison_task_fails_job_bounded(backend):
+    with Scheduler(num_workers=2, max_attempts=3, speculation=False,
+                   backend=backend) as s:
+        s.submit(_poison)
+        with pytest.raises(WorkerError):
+            s.run(timeout=30)
+    assert s.stats["retries"] == 3
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_worker_death_mid_task_recovered(backend):
+    """A worker that crashes mid-job (no report, no more heartbeats) loses
+    its in-flight and queued work; lost-assignment recompute + the heartbeat
+    sweep must recover every task."""
+    with Scheduler(num_workers=2, heartbeat_timeout=0.3,
+                   backend=backend) as s:
+        s.add_worker("dying", fail_after=2)
+        for i in range(30):
+            s.submit(_sleepy, i)
+        res = s.run(timeout=60)
+    assert sorted(res.values()) == list(range(30))
+    assert s.stats["worker_deaths"] >= 1
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_kill_worker_mid_job(backend):
+    with Scheduler(num_workers=3, heartbeat_timeout=0.3,
+                   backend=backend) as s:
+        for i in range(40):
+            s.submit(_sleepy, i)
+        s.kill_worker("w0")
+        res = s.run(timeout=60)
+    assert sorted(res.values()) == list(range(40))
+
+
+@pytest.mark.parametrize("backend_cls", ["thread", "process"])
+def test_backend_instance_reusable_across_schedulers(backend_cls):
+    """A caller-supplied backend instance must survive Scheduler shutdown
+    and work again under a fresh Scheduler (regression: stale stop event /
+    queue sentinels killed the second run's workers)."""
+    from repro.core import ProcessBackend, ThreadBackend
+    be = ThreadBackend() if backend_cls == "thread" else ProcessBackend()
+    for _ in range(2):
+        with Scheduler(num_workers=2, heartbeat_timeout=1.0,
+                       backend=be) as s:
+            for i in range(10):
+                s.submit(_triple, i)
+            res = s.run(timeout=30)
+        assert sorted(res.values()) == sorted(i * 3 for i in range(10))
+
+
+def test_process_backend_unpicklable_task_fails_cleanly():
+    """A lambda can't cross the process pickle boundary; the job must fail
+    with a bounded-retry WorkerError, not hang (regression: the send-failure
+    report used to re-enter the scheduler lock and deadlock)."""
+    with Scheduler(num_workers=1, max_attempts=2, speculation=False,
+                   backend="process") as s:
+        s.submit(lambda: 1)
+        with pytest.raises(WorkerError, match="picklable"):
+            s.run(timeout=20)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_speculative_reexecution(backend):
+    """A pathological straggler worker sits on its tasks; speculative
+    copies on healthy workers must finish the job long before it would."""
+    t0 = time.monotonic()
+    with Scheduler(num_workers=3, speculation=True, speculation_factor=3.0,
+                   speculation_min_done=3, backend=backend) as s:
+        s.add_worker("slug", slow_factor=5000.0)   # ~5 s per task
+        for i in range(20):
+            s.submit(_sleepy, i)
+        res = s.run(timeout=60)
+        # measure before __exit__: shutdown quiesce waits for the straggler
+        wall = time.monotonic() - t0
+    assert sorted(res.values()) == list(range(20))
+    assert s.stats["speculative_launches"] >= 1
+    assert wall < 5.0                 # did not wait for the straggler

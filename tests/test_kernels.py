@@ -1,11 +1,11 @@
 """Pallas kernel validation: interpret-mode execution vs ref.py oracles,
-swept over shapes and dtypes, plus hypothesis property tests."""
+swept over shapes and dtypes; hypothesis property tests live in
+test_property_based.py."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.binpipe import BinaryPartition
 from repro.kernels import ops, ref
@@ -148,20 +148,6 @@ def test_sensor_decode_vs_ref(R, Nb, blk_r, blk_n):
     want = ref.sensor_decode_reference(payload, scale, zp, lengths)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-6, atol=1e-6)
-
-
-@settings(max_examples=15, deadline=None)
-@given(st.integers(1, 12), st.integers(1, 600), st.integers(0, 3))
-def test_property_sensor_decode_roundtrip(R, Nb, seed):
-    """Dequantize(quantize(x)) recovers x up to scale quantisation."""
-    rng = np.random.RandomState(seed)
-    payload = jnp.asarray(rng.randint(0, 256, (R, Nb), np.uint8))
-    scale = jnp.ones((R,), jnp.float32)
-    zp = jnp.zeros((R,), jnp.float32)
-    lengths = jnp.full((R,), Nb, jnp.int32)
-    got = ops.decode_records(payload, scale, zp, lengths)
-    np.testing.assert_array_equal(np.asarray(got),
-                                  np.asarray(payload, np.float32))
 
 
 def test_decode_partition_end_to_end():

@@ -1,0 +1,103 @@
+"""Hypothesis property tests for the bag, binpipe, and kernel layers.
+
+Kept in their own module so a missing ``hypothesis`` (a dev dependency, see
+requirements-dev.txt) skips only the property tests — the example-based
+coverage in test_core_bag.py / test_core_binpipe.py / test_kernels.py still
+runs.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="dev dependency (see requirements-dev.txt); property tests skipped")
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import (Bag, decode, deserialize, encode, frame, serialize,
+                        unframe)
+
+# -- bag round-trip (the invariant the whole platform rests on) -------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(
+    st.tuples(st.sampled_from(["/a", "/b", "/c"]),
+              st.integers(min_value=0, max_value=2**40),
+              st.binary(min_size=0, max_size=300)),
+    min_size=0, max_size=60))
+def test_property_bag_roundtrip_memory(msgs):
+    b = Bag.open_write(backend="memory", chunk_bytes=256)
+    for t, ts, d in msgs:
+        b.write(t, ts, d)
+    b.close()
+    r = Bag.open_read(backend="memory", image=b.chunked_file.image())
+    got = [(m.topic, m.timestamp, m.data) for m in r.read_messages()]
+    assert got == msgs
+    assert r.num_messages == len(msgs)
+
+
+# -- binpipe stage round-trips ----------------------------------------------
+
+_field = st.one_of(
+    st.binary(max_size=200),
+    st.text(max_size=50),
+    st.integers(min_value=-2**62, max_value=2**62),
+    st.floats(allow_nan=False, allow_infinity=False, width=64),
+    hnp.arrays(dtype=st.sampled_from([np.uint8, np.int32, np.float32]),
+               shape=hnp.array_shapes(max_dims=3, max_side=8)),
+)
+
+
+def _eq(a, b):
+    if isinstance(a, np.ndarray):
+        return isinstance(b, np.ndarray) and a.dtype == b.dtype \
+            and a.shape == b.shape \
+            and np.array_equal(a, b, equal_nan=a.dtype.kind == "f")
+    return a == b
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(_field, max_size=8))
+def test_property_encode_decode(fields):
+    got = decode(encode(fields))
+    assert len(got) == len(fields)
+    assert all(_eq(a, b) for a, b in zip(fields, got))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.binary(max_size=500), max_size=20))
+def test_property_serialize_roundtrip(records):
+    assert deserialize(serialize(records)) == records
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.binary(min_size=0, max_size=700), min_size=0, max_size=20),
+       st.sampled_from([1, 8, 128]))
+def test_property_frame_roundtrip(records, align):
+    payload, offsets, lengths = frame(records, align=align)
+    assert unframe(payload, offsets, lengths) == records
+    # alignment invariant: every record starts on an `align` boundary
+    assert all(o % align == 0 for o in offsets.tolist())
+    assert payload.dtype == np.uint8
+
+
+# -- sensor decode kernel ---------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 600), st.integers(0, 3))
+def test_property_sensor_decode_roundtrip(R, Nb, seed):
+    """Dequantize(quantize(x)) recovers x up to scale quantisation."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    rng = np.random.RandomState(seed)
+    payload = jnp.asarray(rng.randint(0, 256, (R, Nb), np.uint8))
+    scale = jnp.ones((R,), jnp.float32)
+    zp = jnp.zeros((R,), jnp.float32)
+    lengths = jnp.full((R,), Nb, jnp.int32)
+    got = ops.decode_records(payload, scale, zp, lengths)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(payload, np.float32))
