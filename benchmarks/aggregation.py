@@ -1,0 +1,126 @@
+"""Aggregation-layer throughput: k-way shard merge + jitted metric/checksum
+reduction + golden comparison.
+
+The verdict layer is driver-side work that runs once per scenario after the
+fleet drains, so its throughput bounds how fast a regression suite can turn
+shard outputs into pass/fail signals.  Three stages measured on a synthetic
+fleet of shard output bags:
+
+  * **merge**    — ``merge_bags``: timestamp-ordered k-way merge of all
+    shard images into one bag with a rebuilt time/topic index,
+  * **metrics**  — ``Aggregator.compute_metrics``: per-topic counts, gap
+    percentiles and the jitted uint32 payload-checksum reduction over
+    ``assemble_message_batch`` arrays,
+  * **compare**  — ``Aggregator.compare`` of the merged bag against a
+    golden copy of itself (exact mode — the regression-suite hot case).
+
+Emits CSV rows plus machine-readable ``BENCH_aggregation.json``
+(msgs/s and MB/s per stage) so the perf trajectory is tracked across PRs.
+
+    PYTHONPATH=src python -m benchmarks.aggregation
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.aggregation import Aggregator
+from repro.core.bag import Bag, merge_bags
+
+N_SHARDS = 8
+MSGS_PER_SHARD = 2000
+PAYLOAD_BYTES = 512
+TOPICS = ("/det/camera", "/det/lidar")
+REPEATS = 3
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         os.pardir, "BENCH_aggregation.json")
+
+
+def _make_fleet_images() -> list[bytes]:
+    """Shard output images with interleaved timestamps, so the merge has
+    real k-way work to do (not a concatenation)."""
+    rng = np.random.RandomState(11)
+    images = []
+    for s in range(N_SHARDS):
+        bag = Bag.open_write(backend="memory", chunk_bytes=64 * 1024)
+        for i in range(MSGS_PER_SHARD):
+            bag.write(TOPICS[i % len(TOPICS)],
+                      i * 1000 + s * (1000 // N_SHARDS),
+                      rng.bytes(PAYLOAD_BYTES))
+        bag.close()
+        images.append(bag.chunked_file.image())
+    return images
+
+
+def _best_of(fn, repeats: int = REPEATS) -> tuple[float, object]:
+    best, out = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run_stages() -> list[dict]:
+    images = _make_fleet_images()
+    total_msgs = N_SHARDS * MSGS_PER_SHARD
+    total_mb = total_msgs * PAYLOAD_BYTES / 1e6
+    agg = Aggregator()
+
+    merge_s, merged = _best_of(lambda: merge_bags(images))
+    assert merged.num_messages == total_msgs
+
+    # warm the jit cache outside the timed region (one-off tracing cost)
+    agg.compute_metrics(merge_bags(images[:1]))
+    metric_s, metrics = _best_of(lambda: agg.compute_metrics(merged))
+    assert sum(m.count for m in metrics.values()) == total_msgs
+
+    golden = Bag.open_read(backend="memory",
+                           image=merged.chunked_file.image())
+    compare_s, diffs = _best_of(
+        lambda: agg.compare(merged, golden, actual_metrics=metrics))
+    assert diffs == []
+
+    return [
+        {"stage": "merge", "wall_s": merge_s, "shards": N_SHARDS},
+        {"stage": "metrics", "wall_s": metric_s,
+         "metric_batch": agg.metric_batch},
+        {"stage": "compare_golden", "wall_s": compare_s, "tolerance": 0},
+    ], total_msgs, total_mb
+
+
+def main(csv: bool = True, json_path: str = JSON_PATH) -> list[tuple]:
+    stages, total_msgs, total_mb = run_stages()
+    rows = []
+    for st in stages:
+        msgs_s = total_msgs / st["wall_s"]
+        mb_s = total_mb / st["wall_s"]
+        st.update({"messages": total_msgs, "payload_mb": total_mb,
+                   "msgs_per_s": msgs_s, "mb_per_s": mb_s})
+        rows.append((f"aggregation_{st['stage']}",
+                     st["wall_s"] * 1e6 / total_msgs,
+                     f"{msgs_s:.0f} msg/s {mb_s:.1f} MB/s "
+                     f"({N_SHARDS} shards x {MSGS_PER_SHARD} msgs)"))
+    if csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.2f},{derived}")
+    if json_path:
+        payload = {
+            "bench": "aggregation",
+            "shards": N_SHARDS, "msgs_per_shard": MSGS_PER_SHARD,
+            "payload_bytes": PAYLOAD_BYTES, "topics": list(TOPICS),
+            "results": stages,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

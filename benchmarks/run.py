@@ -10,6 +10,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
                          ``BENCH_scenario_matrix.json`` at the repo root
                          (msgs/s per backend × batch size) so the perf
                          trajectory is tracked across PRs
+    aggregation_*      — result-aggregation stages (k-way shard merge,
+                         jitted metrics/checksums, golden compare); writes
+                         ``BENCH_aggregation.json`` at the repo root
     binpipe_*          — paper Fig 4 (BinPipedRDD stage throughput)
     roofline_*         — dry-run roofline terms per (arch x shape x mesh)
 """
@@ -22,11 +25,11 @@ import traceback
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import (bag_cache, binpipe, roofline_report, scalability,
-                            scenario_matrix)
+    from benchmarks import (aggregation, bag_cache, binpipe, roofline_report,
+                            scalability, scenario_matrix)
     failures = 0
-    for mod in (bag_cache, scalability, scenario_matrix, binpipe,
-                roofline_report):
+    for mod in (bag_cache, scalability, scenario_matrix, aggregation,
+                binpipe, roofline_report):
         try:
             mod.main(csv=True)
         except Exception:  # noqa: BLE001

@@ -53,7 +53,8 @@ def run_curve(workers_list=(1, 2, 4, 8)) -> list[dict]:
         scenario = Scenario(
             name=f"scal-w{w}", bag_path=path, user_logic=_detect,
             latency_model_s=PER_FRAME_LATENCY_S, num_partitions=w)
-        rep = ScenarioSuite([scenario], num_workers=w).run()[scenario.name]
+        rep = ScenarioSuite([scenario],
+                            num_workers=w).run()[scenario.name].report
         out.append({"workers": w, "wall_s": rep.wall_time_s,
                     "msgs": rep.messages_in,
                     "throughput": rep.throughput_msgs_s})

@@ -94,7 +94,8 @@ def run_matrix(bag_path: str) -> list[dict]:
             rep = None
             for _ in range(3):
                 r = ScenarioSuite([scenario], num_workers=WORKERS,
-                                  backend=backend).run(timeout=300)[name]
+                                  backend=backend).run(
+                                      timeout=300)[name].report
                 assert r.messages_in == N_FRAMES == r.messages_out, \
                     (r.messages_in, r.messages_out)
                 if rep is None or r.wall_time_s < rep.wall_time_s:

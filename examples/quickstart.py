@@ -62,6 +62,8 @@ print(f"replayed {report.messages_in} msgs -> {report.messages_out} "
       f"{report.wall_time_s:.2f}s ({report.throughput_msgs_s:,.0f} msg/s)")
 print(f"scheduler stats: {report.scheduler_stats}")
 
-out = Bag.open_read(backend="memory", image=report.output_images[0])
+out = report.open_output_bag()            # merged, timestamp-ordered
 dets = [m.data[0] for m in out.read_messages()][:10]
 print(f"first detections: {dets}")
+print("per-topic metrics:", {t: (m.count, hex(m.checksum))
+                             for t, m in report.metrics.items()})

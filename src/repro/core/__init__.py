@@ -2,15 +2,19 @@
 platform (Spark+ROS -> JAX/TPU adaptation, see DESIGN.md).
 
 Layers:
-    bag        -- Bag / ChunkedFile / MemoryChunkedFile (ROSBag cache, §3.2)
-    binpipe    -- BinPipedRDD: encode/serialize/frame/decode (§3.1)
-    playback   -- MessageBus / RosPlay / RosRecord, batched replay (§2)
-    executors  -- ExecutorBackend: ThreadBackend / ProcessBackend pools
-    scheduler  -- driver scheduling semantics: fault tolerance, stragglers (§3)
-    simulation -- Scenario / ScenarioSuite / DistributedSimulation (Figs 3&5)
+    bag         -- Bag / ChunkedFile / MemoryChunkedFile (ROSBag cache, §3.2)
+                   + merge_bags (timestamp-ordered k-way shard merge)
+    binpipe     -- BinPipedRDD: encode/serialize/frame/decode (§3.1)
+    playback    -- MessageBus / RosPlay / RosRecord, batched replay (§2)
+    executors   -- ExecutorBackend: ThreadBackend / ProcessBackend pools
+    scheduler   -- driver scheduling semantics: fault tolerance, stragglers (§3)
+    simulation  -- Scenario / ScenarioSuite / DistributedSimulation (Figs 3&5)
+    aggregation -- Aggregator: merge -> metrics -> golden compare -> Verdict
 """
 
-from .bag import Bag, ChunkedFile, MemoryChunkedFile, Message, partition_bag
+from .aggregation import Aggregator, Diff, TopicMetrics, Verdict
+from .bag import (Bag, ChunkedFile, MemoryChunkedFile, Message,
+                  iter_time_ordered, merge_bags, partition_bag)
 from .binpipe import (BinaryPartition, decode, deserialize, encode, frame,
                       serialize, unframe)
 from .executors import (ExecutorBackend, ProcessBackend, ThreadBackend,
@@ -23,6 +27,7 @@ from .simulation import (DistributedSimulation, Scenario, ScenarioSuite,
 
 __all__ = [
     "Bag", "ChunkedFile", "MemoryChunkedFile", "Message", "partition_bag",
+    "iter_time_ordered", "merge_bags",
     "BinaryPartition", "encode", "decode", "serialize", "deserialize",
     "frame", "unframe",
     "MessageBus", "RosPlay", "RosRecord",
@@ -30,4 +35,5 @@ __all__ = [
     "Scheduler", "Task", "Worker", "WorkerError",
     "Scenario", "ScenarioSuite", "resolve_logic_ref",
     "DistributedSimulation", "SimulationReport", "bag_to_partitions",
+    "Aggregator", "Diff", "TopicMetrics", "Verdict",
 ]

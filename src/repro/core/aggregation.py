@@ -1,0 +1,317 @@
+"""Result aggregation: the verdict layer of the platform.
+
+The sibling cloud-platform paper makes the aggregation stage — not raw
+replay — the product of the pipeline: "massive functional and performance
+tests" only matter once merged, compared and scored.  This module turns
+per-partition/per-shard output bag images into exactly that:
+
+    partition images --merge_bags--> one time-ordered output Bag
+        --metrics--> per-topic TopicMetrics (counts, gaps, checksums)
+        --golden compare--> list[Diff]
+        --> Verdict (PASS / PASS-vacuous / FAIL)
+
+Metric reductions run over the same fixed-layout arrays batched replay
+uses (:func:`repro.data.pipeline.assemble_message_batch`): payload
+checksums are a jitted uint32 reduction over the (R, Nb) payload matrix,
+so the hot path stays on-device and amortises like the decode stage.
+Checksums are *order-free across records* (a wrapping sum of per-record
+digests) but position- and timestamp-sensitive within a record — the same
+fleet produces the same checksum regardless of shard/partition/batch
+split, while any payload or timestamp perturbation flips it.
+
+``Aggregator`` is the pipeline stage ``ScenarioSuite.run`` finishes with;
+it can also be used standalone against recorded bags for offline triage.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Iterable, Optional, Sequence
+
+import numpy as np
+
+from .bag import (Bag, BagSource, Message, _open_source, iter_time_ordered,
+                  merge_bags)
+
+_U32 = np.uint64(0xFFFFFFFF)        # digests live in wrapping uint32 space
+
+# Lazily-built jitted reductions (importing jax at module import would tax
+# every core/ consumer that never aggregates).
+_JITTED: dict[str, Any] = {}
+
+
+def _jitted():
+    if not _JITTED:
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def digest(payload, lengths, ts_low):
+            """Wrapping-uint32 digest of one assembled batch.
+
+            payload: (R, Nb) uint8, lengths: (R,) i32, ts_low: (R,) u32
+            (timestamps mod 2**32).  Per-record digest = position-weighted
+            byte sum mixed with the timestamp; records combine by wrapping
+            sum, so the total is invariant to record order and batch split.
+            """
+            p = payload.astype(jnp.uint32)
+            col = jnp.arange(payload.shape[1], dtype=jnp.uint32)
+            mask = col[None, :] < lengths.astype(jnp.uint32)[:, None]
+            w = col * jnp.uint32(2246822519) + jnp.uint32(0x9E3779B9)
+            rec = jnp.sum(jnp.where(mask, p * w[None, :], 0), axis=1,
+                          dtype=jnp.uint32)
+            rec = (rec ^ ts_low.astype(jnp.uint32)) * jnp.uint32(2654435761)
+            rec = rec + lengths.astype(jnp.uint32) * jnp.uint32(40503)
+            return jnp.sum(rec, dtype=jnp.uint32)
+
+        @jax.jit
+        def max_abs_diff(a, a_len, b, b_len):
+            """Max per-byte |a - b| over the valid prefix of each record
+            pair (padding excluded); (R, Nb) uint8 x2 -> scalar i32."""
+            col = jnp.arange(a.shape[1], dtype=jnp.int32)
+            valid = col[None, :] < jnp.minimum(a_len, b_len)[:, None]
+            d = jnp.abs(a.astype(jnp.int32) - b.astype(jnp.int32))
+            return jnp.max(jnp.where(valid, d, 0))
+
+        _JITTED["digest"] = digest
+        _JITTED["max_abs_diff"] = max_abs_diff
+    return _JITTED
+
+
+@dataclass(frozen=True)
+class TopicMetrics:
+    """Per-topic slice of a merged output bag."""
+    topic: str
+    count: int
+    bytes_total: int
+    t_min: Optional[int]
+    t_max: Optional[int]
+    gap_p50_ns: float            # inter-arrival gap percentiles (latency)
+    gap_p90_ns: float
+    gap_p99_ns: float
+    checksum: int                # order-free wrapping-u32 payload digest
+
+
+@dataclass(frozen=True)
+class Diff:
+    """One golden-comparison mismatch."""
+    topic: str
+    field: str        # count | checksum | t_min | t_max | timestamp | payload
+    expected: Any
+    actual: Any
+    detail: str = ""
+
+    def __str__(self) -> str:
+        extra = f" ({self.detail})" if self.detail else ""
+        return (f"{self.topic}: {self.field} expected {self.expected!r} "
+                f"got {self.actual!r}{extra}")
+
+
+@dataclass
+class Verdict:
+    """Per-scenario pass/fail — what a regression suite actually returns.
+
+    ``vacuous`` marks a PASS earned by an empty selection (zero input
+    messages and nothing the golden bag demanded) rather than by matching
+    outputs.  ``report`` carries the full :class:`SimulationReport` when
+    the verdict came out of ``ScenarioSuite.run``.
+    """
+    scenario: str
+    passed: bool
+    vacuous: bool = False
+    diffs: list[Diff] = field(default_factory=list)
+    metrics: dict[str, TopicMetrics] = field(default_factory=dict)
+    golden_path: Optional[str] = None
+    report: Optional[Any] = None        # SimulationReport (layer above)
+
+    @property
+    def status(self) -> str:
+        if not self.passed:
+            return "FAIL"
+        return "PASS(vacuous)" if self.vacuous else "PASS"
+
+    def __bool__(self) -> bool:
+        return self.passed
+
+    def summary(self) -> str:
+        head = f"{self.scenario}: {self.status}"
+        if self.diffs:
+            head += "".join(f"\n  - {d}" for d in self.diffs)
+        return head
+
+
+class Aggregator:
+    """The aggregation pipeline stage: merge -> metrics -> compare -> verdict.
+
+    ``tolerance`` selects the golden-matching mode: ``0`` (default) is
+    exact — per-topic counts, time bounds and payload checksums must match
+    bit-for-bit; ``> 0`` allows per-byte payload deviation up to
+    ``tolerance`` (in byte units) between time-aligned message pairs,
+    for scenarios whose user logic is numerically jittery.
+    ``metric_batch`` sizes the assembled batches the jitted reductions
+    consume (the aggregation analogue of replay ``batch_size``).
+    """
+
+    def __init__(self, tolerance: int = 0, metric_batch: int = 256):
+        if tolerance < 0:
+            raise ValueError("tolerance must be >= 0")
+        self.tolerance = tolerance
+        self.metric_batch = metric_batch
+
+    # -- merge --------------------------------------------------------------
+
+    def merge(self, sources: Iterable[BagSource],
+              path: Optional[str] = None) -> Bag:
+        """Timestamp-ordered k-way merge (see :func:`merge_bags`)."""
+        return merge_bags(sources, path=path)
+
+    # -- metrics ------------------------------------------------------------
+
+    def _topic_checksum(self, messages: Sequence[Message]) -> int:
+        from repro.data.pipeline import (assemble_message_batch,
+                                         iter_message_batches)
+        digest = _jitted()["digest"]
+        total = np.uint64(0)
+        for batch in iter_message_batches(messages, self.metric_batch):
+            arrays = assemble_message_batch(batch)
+            ts_low = (arrays["timestamps"].astype(np.uint64)
+                      & _U32).astype(np.uint32)
+            total = (total + np.uint64(int(digest(
+                arrays["payload"], arrays["lengths"], ts_low)))) & _U32
+        return int(total)
+
+    def compute_metrics(self, bag: Bag) -> dict[str, TopicMetrics]:
+        """Per-topic metrics over a (merged) output bag."""
+        by_topic: dict[str, list[Message]] = {}
+        for msg in iter_time_ordered(bag):
+            by_topic.setdefault(msg.topic, []).append(msg)
+        metrics: dict[str, TopicMetrics] = {}
+        for topic in sorted(by_topic):
+            msgs = by_topic[topic]
+            ts = np.fromiter((m.timestamp for m in msgs), dtype=np.int64,
+                             count=len(msgs))
+            gaps = np.diff(ts) if len(ts) > 1 else np.zeros(1, np.int64)
+            p50, p90, p99 = np.percentile(gaps, [50, 90, 99])
+            metrics[topic] = TopicMetrics(
+                topic=topic,
+                count=len(msgs),
+                bytes_total=sum(len(m.data) for m in msgs),
+                t_min=int(ts.min()),
+                t_max=int(ts.max()),
+                gap_p50_ns=float(p50),
+                gap_p90_ns=float(p90),
+                gap_p99_ns=float(p99),
+                checksum=self._topic_checksum(msgs),
+            )
+        return metrics
+
+    # -- golden comparison --------------------------------------------------
+
+    def compare(self, actual: Bag, golden: Bag,
+                actual_metrics: Optional[dict[str, TopicMetrics]] = None,
+                ) -> list[Diff]:
+        """Diff a merged output bag against a golden bag.
+
+        Exact mode (``tolerance == 0``) compares the per-topic metric
+        summaries — counts, time bounds, checksums — without pairing
+        individual messages.  Tolerance mode time-aligns message pairs per
+        topic and bounds the per-byte payload deviation with a jitted
+        reduction; counts and timestamps must still match exactly.
+        """
+        if actual_metrics is None:
+            actual_metrics = self.compute_metrics(actual)
+        golden_metrics = self.compute_metrics(golden)
+        diffs: list[Diff] = []
+        for topic in sorted(set(actual_metrics) | set(golden_metrics)):
+            a = actual_metrics.get(topic)
+            g = golden_metrics.get(topic)
+            if g is None:
+                diffs.append(Diff(topic, "count", 0, a.count,
+                                  "topic absent from golden"))
+                continue
+            if a is None:
+                diffs.append(Diff(topic, "count", g.count, 0,
+                                  "topic missing from output"))
+                continue
+            if a.count != g.count:
+                diffs.append(Diff(topic, "count", g.count, a.count))
+                continue        # aligned compare is meaningless off-count
+            for fld in ("t_min", "t_max"):
+                if getattr(a, fld) != getattr(g, fld):
+                    diffs.append(Diff(topic, fld, getattr(g, fld),
+                                      getattr(a, fld)))
+            if self.tolerance == 0:
+                if a.checksum != g.checksum:
+                    diffs.append(Diff(
+                        topic, "checksum", g.checksum, a.checksum,
+                        "payload or timestamp mismatch"))
+            else:
+                diffs.extend(self._compare_payloads(topic, actual, golden))
+        return diffs
+
+    def _compare_payloads(self, topic: str, actual: Bag,
+                          golden: Bag) -> list[Diff]:
+        from repro.data.pipeline import assemble_message_batch
+        max_abs_diff = _jitted()["max_abs_diff"]
+        a_msgs = list(iter_time_ordered(actual, topics=[topic]))
+        g_msgs = list(iter_time_ordered(golden, topics=[topic]))
+        diffs: list[Diff] = []
+        worst = 0
+        for lo in range(0, len(a_msgs), self.metric_batch):
+            a_batch = a_msgs[lo:lo + self.metric_batch]
+            g_batch = g_msgs[lo:lo + self.metric_batch]
+            for a, g in zip(a_batch, g_batch):
+                if a.timestamp != g.timestamp:
+                    diffs.append(Diff(topic, "timestamp", g.timestamp,
+                                      a.timestamp, "pairwise time mismatch"))
+                    return diffs
+                if len(a.data) != len(g.data):
+                    diffs.append(Diff(topic, "payload", len(g.data),
+                                      len(a.data),
+                                      f"length mismatch at t={a.timestamp}"))
+                    return diffs
+            aa = assemble_message_batch(a_batch)
+            gg = assemble_message_batch(g_batch)
+            nb = max(aa["payload"].shape[1], gg["payload"].shape[1])
+            ap = np.zeros((len(a_batch), nb), np.uint8)
+            gp = np.zeros((len(g_batch), nb), np.uint8)
+            ap[:, :aa["payload"].shape[1]] = aa["payload"]
+            gp[:, :gg["payload"].shape[1]] = gg["payload"]
+            worst = max(worst, int(max_abs_diff(ap, aa["lengths"],
+                                                gp, gg["lengths"])))
+        if worst > self.tolerance:
+            diffs.append(Diff(topic, "payload",
+                              f"<= {self.tolerance}/byte", worst,
+                              "max abs byte deviation over tolerance"))
+        return diffs
+
+    # -- the full stage -----------------------------------------------------
+
+    def aggregate(self, scenario: str, sources: Iterable[BagSource],
+                  golden: Optional[BagSource] = None,
+                  messages_in: Optional[int] = None) -> tuple[Bag, Verdict]:
+        """Merge shard/partition outputs and score them.
+
+        Returns ``(merged bag, verdict)``.  With no golden source the
+        verdict passes by construction (metrics-only aggregation); a zero
+        input selection is a *vacuous* pass unless the golden bag demanded
+        output.  ``messages_in`` (when known from the replay report) feeds
+        the vacuous-pass determination.
+        """
+        merged = self.merge(sources)
+        metrics = self.compute_metrics(merged)
+        golden_path = golden if isinstance(golden, str) else None
+        diffs: list[Diff] = []
+        if golden is not None:
+            gbag, owned = _open_source(golden)
+            try:
+                diffs = self.compare(merged, gbag, actual_metrics=metrics)
+            finally:
+                if owned:
+                    gbag.close()
+        vacuous = (merged.num_messages == 0 and not diffs
+                   and (messages_in in (None, 0)))
+        verdict = Verdict(scenario=scenario, passed=not diffs,
+                          vacuous=vacuous, diffs=diffs, metrics=metrics,
+                          golden_path=golden_path)
+        return merged, verdict

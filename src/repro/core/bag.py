@@ -19,12 +19,13 @@ Chunk payload = concatenated records:
 
 from __future__ import annotations
 
+import heapq
 import io
 import os
 import struct
 import threading
 from dataclasses import dataclass, field
-from typing import Callable, Iterator, Optional, Sequence
+from typing import Iterable, Iterator, Optional, Sequence, Union
 
 _MAGIC = b"REPROBAG"
 _VERSION = 2
@@ -236,9 +237,15 @@ class MemoryChunkedFile(ChunkedFile):
 
     def image(self) -> bytes:
         """Materialise the disk-format byte image (single join).  Safe to
-        call before or after :meth:`close`."""
+        call before or after :meth:`close`.  Read mode over a full bytes
+        image returns it as-is (zero copy — bytes is immutable), so
+        image -> open_read -> image round-trips don't duplicate fleets of
+        merged output on the driver."""
         with self._lock:
             if self._ro is not None:
+                base = self._ro.obj
+                if type(base) is bytes and len(base) == self._size:
+                    return base
                 return bytes(self._ro)
             return self._join_segs()
 
@@ -453,6 +460,90 @@ class Bag:
                 if end is not None and msg.timestamp >= end:
                     continue
                 yield msg
+
+
+def iter_time_ordered(bag: Bag, topics: Optional[Sequence[str]] = None,
+                      start: Optional[int] = None, end: Optional[int] = None,
+                      chunk_range: Optional[tuple[int, int]] = None,
+                      window: int = 4096) -> Iterator[Message]:
+    """Globally time-ordered replay over a bag selection.
+
+    Bag chunks are time-ordered per chunk but may interleave across chunk
+    boundaries (e.g. jittered multi-topic writes); a merge-sort over a
+    small heap window restores global order without materialising the
+    selection.  This is the ordering contract ``RosPlay`` publishes with
+    and :func:`merge_bags` merges with.
+    """
+    it = bag.read_messages(topics=topics, start=start, end=end,
+                           chunk_range=chunk_range)
+    heap: list[tuple[int, int, Message]] = []
+    seq = 0
+    for msg in it:
+        heapq.heappush(heap, (msg.timestamp, seq, msg))
+        seq += 1
+        if len(heap) > window:
+            yield heapq.heappop(heap)[2]
+    while heap:
+        yield heapq.heappop(heap)[2]
+
+
+BagSource = Union["Bag", bytes, bytearray, memoryview, str]
+
+
+def _open_source(source: BagSource) -> tuple[Bag, bool]:
+    """Open a merge source; returns (bag, owned).  Accepts an already-open
+    ``Bag``, a memory-bag image (``bytes``), or a disk path (``str``)."""
+    if isinstance(source, Bag):
+        return source, False
+    if isinstance(source, (bytes, bytearray, memoryview)):
+        return Bag.open_read(backend="memory", image=bytes(source)), True
+    return Bag.open_read(str(source), backend="disk"), True
+
+
+def merge_bags(sources: Iterable[BagSource], path: Optional[str] = None,
+               chunk_bytes: int = DEFAULT_CHUNK_BYTES) -> Bag:
+    """Timestamp-ordered k-way merge of bags into one output bag with a
+    rebuilt time/topic index — the bag-layer half of the aggregation stage
+    (shard/partition output images -> one fleet-level result bag).
+
+    ``sources`` are ``Bag`` instances, memory-bag images (``bytes``) or
+    disk paths; source order breaks timestamp ties, so merging partition
+    images in (shard, partition) order is deterministic.  Returns a
+    read-mode ``Bag``: memory-backed when ``path`` is None, else persisted
+    to ``path`` on disk.  Merging zero sources yields a valid empty bag.
+
+    Each source must come out of :func:`iter_time_ordered` monotonic —
+    true for anything recorded from time-ordered replay.  A pathological
+    source whose internal disorder exceeds the heap window would silently
+    poison ``heapq.merge``, so monotonicity is checked and raises
+    ``ValueError`` instead.
+    """
+    bags: list[tuple[Bag, bool]] = [_open_source(s) for s in sources]
+
+    def keyed(idx: int, bag: Bag) -> Iterator[tuple[tuple[int, int, int],
+                                                    Message]]:
+        last = None
+        for seq, msg in enumerate(iter_time_ordered(bag)):
+            if last is not None and msg.timestamp < last:
+                raise ValueError(
+                    f"merge source {idx} is out of timestamp order beyond "
+                    "the ordering window; re-record it through time-ordered "
+                    "replay before merging")
+            last = msg.timestamp
+            yield (msg.timestamp, idx, seq), msg
+
+    backend = "disk" if path is not None else "memory"
+    out = Bag.open_write(path=path, backend=backend, chunk_bytes=chunk_bytes)
+    streams = [keyed(i, b) for i, (b, _) in enumerate(bags)]
+    for _, msg in heapq.merge(*streams, key=lambda kv: kv[0]):
+        out.write_message(msg)
+    out.close()
+    for bag, owned in bags:
+        if owned:
+            bag.close()
+    if path is not None:
+        return Bag.open_read(path, backend="disk")
+    return Bag.open_read(backend="memory", image=out.chunked_file.image())
 
 
 def partition_bag(bag: Bag, num_partitions: int) -> list[tuple[int, int]]:

@@ -18,13 +18,12 @@ Together with :mod:`repro.core.bag`'s ``MemoryChunkedFile`` these are the two
 
 from __future__ import annotations
 
-import heapq
 import threading
 import time
 from collections import defaultdict
 from typing import Callable, Iterable, Optional, Sequence
 
-from .bag import Bag, Message
+from .bag import Bag, Message, iter_time_ordered
 
 Callback = Callable[[Message], None]
 BatchCallback = Callable[[list[Message]], None]
@@ -160,21 +159,12 @@ class RosPlay:
 
     def _time_ordered(self) -> Iterable[Message]:
         """Bag chunks are time-ordered per-chunk but may interleave across
-        topic boundaries; merge-sort on a small heap window keeps global
-        order without materialising the partition."""
-        it = self._bag.read_messages(topics=self._topics,
-                                     chunk_range=self._chunk_range,
-                                     start=self._start, end=self._end)
-        heap: list[tuple[int, int, Message]] = []
-        seq = 0
-        WINDOW = 4096
-        for msg in it:
-            heapq.heappush(heap, (msg.timestamp, seq, msg))
-            seq += 1
-            if len(heap) > WINDOW:
-                yield heapq.heappop(heap)[2]
-        while heap:
-            yield heapq.heappop(heap)[2]
+        topic boundaries; :func:`repro.core.bag.iter_time_ordered` merge-sorts
+        on a small heap window to keep global order without materialising
+        the partition."""
+        return iter_time_ordered(self._bag, topics=self._topics,
+                                 chunk_range=self._chunk_range,
+                                 start=self._start, end=self._end)
 
     def run(self) -> int:
         pubs: dict[str, Publisher] = {}

@@ -13,8 +13,11 @@ at thousand-node scale:
   the task; recompute is safe because every task carries its *lineage*
   (source partition handle), like RDDs,
 * **straggler mitigation**: speculative re-execution — when a task has run
-  longer than ``speculation_factor ×`` the median completed duration, a
-  backup copy is launched on another worker and the first finisher wins,
+  longer than ``speculation_factor ×`` the median completed duration *of its
+  own lineage stage* (e.g. its scenario), a backup copy is launched on
+  another worker and the first finisher wins.  Medians are per stage so a
+  fast scenario's completions never flag a slow scenario's perfectly
+  healthy tasks in a heterogeneous suite,
 * **elastic scaling**: workers can join and leave (or die) mid-job,
 * bounded retries: a task failing ``max_attempts`` times fails the job
   (poison-pill semantics, not an infinite loop).
@@ -86,7 +89,9 @@ class Scheduler:
         self._tasks: dict[int, Task] = {}
         self._next_id = 0
         self._lock = threading.Lock()
-        self._done_durations: list[float] = []
+        # completed-task durations keyed by lineage stage (see _stage_key):
+        # speculation thresholds are per stage, not global
+        self._done_durations: dict[tuple, list[float]] = {}
         self._last_beat: dict[str, float] = {}
         self._max_attempts = max_attempts
         self._hb_timeout = heartbeat_timeout
@@ -157,6 +162,14 @@ class Scheduler:
         payload: TaskPayload = (task.task_id, task.fn, task.args, task.attempt)
         self._backend.submit(payload)
 
+    @staticmethod
+    def _stage_key(lineage: tuple) -> tuple:
+        """Duration-statistics bucket for a task.  Scenario-engine lineage
+        is ``("scenario", name, shard, path, lo, hi)`` — the first two
+        elements identify the stage; tasks submitted without lineage share
+        the ``()`` bucket (the seed-era global median)."""
+        return tuple(lineage[:2])
+
     # -- worker callbacks --------------------------------------------------------
 
     def _on_beat(self, worker_id: str) -> None:
@@ -177,7 +190,9 @@ class Scheduler:
                 task.finished_at = time.monotonic()
                 start = task.started_at.get(attempt)
                 if start is not None:
-                    self._done_durations.append(task.finished_at - start)
+                    self._done_durations.setdefault(
+                        self._stage_key(task.lineage), []).append(
+                            task.finished_at - start)
                 self._outstanding -= 1
                 self.stats["tasks_done"] += 1
             elif attempt == task.attempt:
@@ -231,16 +246,26 @@ class Scheduler:
         if not self._spec:
             return
         with self._lock:
-            if len(self._done_durations) < self._spec_min_done:
+            # per-stage thresholds: a task is a straggler only relative to
+            # completed tasks of its *own* lineage stage, so heterogeneous
+            # suites don't cross-flag
+            thresholds: dict[tuple, float] = {}
+            for key, durs in self._done_durations.items():
+                if len(durs) < self._spec_min_done:
+                    continue
+                ordered = sorted(durs)
+                median = ordered[len(ordered) // 2]
+                thresholds[key] = max(self._spec_factor * median, 0.05)
+            if not thresholds:
                 return
-            durs = sorted(self._done_durations)
-            median = durs[len(durs) // 2]
-            threshold = max(self._spec_factor * median, 0.05)
             now = time.monotonic()
             backups: list[TaskPayload] = []
             for task in self._tasks.values():
                 if task.state != TaskState.RUNNING or task.speculated:
                     continue
+                threshold = thresholds.get(self._stage_key(task.lineage))
+                if threshold is None:
+                    continue        # stage has too few completions to judge
                 started = task.started_at.get(task.attempt)
                 if started is None:
                     continue

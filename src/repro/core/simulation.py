@@ -1,16 +1,21 @@
 """The scenario engine: distributed simulation over a suite of scenarios
 (paper Fig 3 + Fig 5 workflow, generalized from "replay one bag" to "run a
-test matrix").
+test matrix over a drive fleet").
 
     Scenario catalog --ScenarioSuite--> Scheduler/ExecutorBackend
         --RosPlay--> MessageBus --User Logic--> RosRecord --> Bag
+        --Aggregator--> merged Bag + metrics --> Verdict
 
-A :class:`Scenario` describes one functional/performance test: a bag source,
-a topic filter, a time window, a latency/fault profile and a user-logic ref.
-A :class:`ScenarioSuite` fans every partition of every scenario through ONE
-scheduler (thread or process backend) and returns per-scenario
-:class:`SimulationReport`\\ s — the paper's "massive test suites over a
-shared cluster" shape.
+A :class:`Scenario` describes one functional/performance test: one bag
+(``bag_path``) or a sharded fleet of bags (``bag_paths``), a topic filter,
+a time window, a latency/fault profile, a user-logic ref and an optional
+golden bag.  A :class:`ScenarioSuite` fans every partition of every shard
+of every scenario through ONE scheduler (thread or process backend), then
+hands each scenario's partition outputs to the aggregation layer
+(:mod:`repro.core.aggregation`): shard outputs are k-way merged into one
+timestamp-ordered bag, per-topic metrics are computed, golden bags are
+compared, and ``run`` returns per-scenario :class:`Verdict`\\ s — the
+paper's "massive test suites over a shared cluster", scored.
 
 Per the paper: "Each Spark worker first reads the Rosbag data into memory
 and then launches a ROS node to process the incoming data."  Here each task:
@@ -39,11 +44,15 @@ pickle boundary.
 from __future__ import annotations
 
 import importlib
+import os
 import random
 import time
-from dataclasses import dataclass
+import warnings
+import zlib
+from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence, Union
 
+from .aggregation import Aggregator, TopicMetrics, Verdict
 from .bag import Bag, Message, partition_bag
 from .binpipe import BinaryPartition, encode
 from .executors import ExecutorBackend
@@ -75,6 +84,13 @@ def resolve_logic_ref(ref: LogicRef) -> Callable:
 class Scenario:
     """One entry of the test matrix.
 
+    The bag source is either ``bag_path`` (one recorded drive) or
+    ``bag_paths`` (a sharded fleet — one bag per vehicle/segment); exactly
+    one must be given.  Every shard is partitioned, replayed and recorded
+    independently; the aggregation layer merges the shard outputs back
+    into one timestamp-ordered result bag.  ``num_partitions`` is
+    *per shard*.
+
     ``batch_size=None`` replays per message (seed behaviour); an integer
     switches to batched replay and the batched user-logic contract.
     ``drop_rate`` is the fault profile: that fraction of input messages is
@@ -82,10 +98,15 @@ class Scenario:
     simulated sensor dropouts.  ``latency_model_s`` sleeps once per user
     logic invocation (per message, or per batch — batching amortizes it,
     like a real accelerator-offloaded model step).
+
+    ``golden_bag_path`` names a recorded expected-output bag; the
+    aggregator diffs the merged output against it (exact or
+    tolerance-based, see :class:`repro.core.aggregation.Aggregator`) and
+    the scenario's verdict fails on any mismatch.
     """
     name: str
-    bag_path: str
-    user_logic: LogicRef
+    bag_path: Optional[str] = None
+    user_logic: LogicRef = None
     topics: Optional[tuple[str, ...]] = None
     start: Optional[int] = None          # time window, ns (inclusive)
     end: Optional[int] = None            # time window, ns (exclusive)
@@ -95,35 +116,82 @@ class Scenario:
     batch_size: Optional[int] = None
     num_partitions: Optional[int] = None
     use_memory_cache: bool = True
+    bag_paths: Optional[tuple[str, ...]] = None   # fleet shards
+    golden_bag_path: Optional[str] = None
+
+    def __post_init__(self):
+        if self.user_logic is None:
+            raise ValueError(f"scenario {self.name!r} has no user_logic")
+        if (self.bag_path is None) == (self.bag_paths is None):
+            raise ValueError(f"scenario {self.name!r}: give exactly one of "
+                             "bag_path / bag_paths")
+        if self.bag_paths is not None and not isinstance(self.bag_paths,
+                                                         tuple):
+            object.__setattr__(self, "bag_paths", tuple(self.bag_paths))
+
+    @property
+    def shard_paths(self) -> tuple[str, ...]:
+        """The fleet as a tuple of bag paths (length 1 for ``bag_path``)."""
+        return ((self.bag_path,) if self.bag_path is not None
+                else self.bag_paths)
 
 
 @dataclass
 class SimulationReport:
+    """Per-scenario replay outcome, post-aggregation.
+
+    ``output_image`` is the merged, timestamp-ordered output bag (all
+    shards, all partitions — one image), and ``metrics`` the per-topic
+    :class:`TopicMetrics` the aggregator computed over it.  The seed-era
+    per-partition ``output_images`` list survives as a deprecated
+    accessor.
+    """
     messages_in: int
     messages_out: int
     wall_time_s: float
     partitions: int
     scheduler_stats: dict
-    output_images: list    # list[bytes] — memory-bag images, one per partition
     scenario: str = ""
     backend: str = ""
     batch_size: Optional[int] = None
     messages_dropped: int = 0
+    shards: int = 1
+    output_image: Optional[bytes] = None     # merged output bag image
+    metrics: dict[str, TopicMetrics] = field(default_factory=dict)
+    partition_images: list = field(default_factory=list, repr=False)
 
     @property
     def throughput_msgs_s(self) -> float:
         return self.messages_in / self.wall_time_s if self.wall_time_s else 0.0
 
+    def open_output_bag(self) -> Bag:
+        """The merged output as a readable memory bag."""
+        if self.output_image is None:
+            raise ValueError("report has no merged output image")
+        return Bag.open_read(backend="memory", image=self.output_image)
 
-def _run_scenario_partition(scenario: Scenario, chunk_range: tuple[int, int],
+    @property
+    def output_images(self) -> list:
+        """Deprecated seed-era accessor: per-partition output bag images in
+        (shard, partition) order.  Prefer ``output_image`` /
+        ``open_output_bag()`` — the merged, timestamp-ordered result."""
+        warnings.warn(
+            "SimulationReport.output_images is deprecated; use the merged "
+            "output_image / open_output_bag() instead",
+            DeprecationWarning, stacklevel=2)
+        return list(self.partition_images)
+
+
+def _run_scenario_partition(scenario: Scenario, shard_path: str,
+                            chunk_range: tuple[int, int],
                             ) -> tuple[int, int, int, bytes]:
-    """One worker task: play a scenario partition through its user logic.
+    """One worker task: play one shard partition through the user logic.
 
     Returns (messages_in, messages_out, messages_dropped, output bag image).
     """
     logic = resolve_logic_ref(scenario.user_logic)
     topics = list(scenario.topics) if scenario.topics is not None else None
-    src = Bag.open_read(scenario.bag_path, backend="disk")
+    src = Bag.open_read(shard_path, backend="disk")
     if scenario.use_memory_cache:
         # materialise the (filtered) partition into the ROSBag cache (§3.2):
         cache = Bag.open_write(backend="memory")
@@ -153,8 +221,10 @@ def _run_scenario_partition(scenario: Scenario, chunk_range: tuple[int, int],
 
     n_out = 0
     n_drop = 0
-    # deterministic fault profile, decorrelated across partitions
+    # deterministic fault profile, decorrelated across shards + partitions
+    # (crc32, not hash(): str hashing is per-process randomized)
     rng = random.Random(scenario.seed * 1_000_003
+                        + zlib.crc32(shard_path.encode()) * 131
                         + chunk_range[0] * 8191 + chunk_range[1])
     drop = scenario.drop_rate
 
@@ -222,31 +292,60 @@ def _run_partition(bag_path: str, chunk_range: tuple[int, int],
     sc = Scenario(name="partition", bag_path=bag_path, user_logic=user_logic,
                   latency_model_s=latency_model_s,
                   use_memory_cache=use_memory_cache)
-    n_in, n_out, _, image = _run_scenario_partition(sc, chunk_range)
+    n_in, n_out, _, image = _run_scenario_partition(sc, bag_path, chunk_range)
     return n_in, n_out, image
 
 
+def _selection_matches_nothing(src: Bag, sc: Scenario) -> bool:
+    """True when the scenario's topic filter / time window provably selects
+    zero messages of ``src`` (from the chunk index alone).  Such shards get
+    no tasks at all — an empty selection is a clean zero-message report and
+    a vacuous PASS, not a degenerate partition plan."""
+    if not src.num_chunks:
+        return True
+    if sc.topics is not None and not (set(sc.topics) & set(src.topics)):
+        return True
+    if sc.start is not None or sc.end is not None:
+        for info in src.chunk_infos():
+            if sc.start is not None and info.t_max < sc.start:
+                continue
+            if sc.end is not None and info.t_min >= sc.end:
+                continue
+            return False
+        return True
+    return False
+
+
 class ScenarioSuite:
-    """Run a whole catalog of heterogeneous scenarios through ONE scheduler.
+    """Run a whole catalog of heterogeneous scenarios through ONE scheduler
+    and score the results through the aggregation layer.
 
-    Every scenario is partitioned independently (its own ``num_partitions``,
-    default = ``num_workers``), all partitions are submitted up front, and
-    the shared worker pool — thread or process backend — drains the matrix
-    with the scheduler's full fault-tolerance/speculation semantics.
+    Every shard of every scenario is partitioned independently (its own
+    ``num_partitions`` per shard, default = ``num_workers``), all
+    partitions are submitted up front, and the shared worker pool — thread
+    or process backend — drains the matrix with the scheduler's full
+    fault-tolerance/speculation semantics.  Shards whose topic filter /
+    time window provably selects nothing are pruned at planning time.
 
-    ``run`` returns ``{scenario.name: SimulationReport}``; each report's
-    ``wall_time_s`` spans suite start to that scenario's last finished
-    partition, and ``scheduler_stats`` is the shared pool's counters.
+    ``run`` returns ``{scenario.name: Verdict}``: each verdict carries the
+    golden-comparison outcome (or an unconditional pass when the scenario
+    has no golden bag), per-topic metrics, and the full
+    :class:`SimulationReport` — whose ``output_image`` is the merged,
+    timestamp-ordered output of all shards, whose ``wall_time_s`` spans
+    suite start to the scenario's last finished partition, and whose
+    ``scheduler_stats`` are the shared pool's counters.
 
     ``on_scheduler`` (if given) is called with the live Scheduler right
     after submission — the hook fault-injection harnesses use to kill
-    workers / add elastic capacity mid-suite.
+    workers / add elastic capacity mid-suite.  ``aggregator`` overrides
+    the default exact-matching :class:`Aggregator`.
     """
 
     def __init__(self, scenarios: Sequence[Scenario], num_workers: int = 4,
                  backend: Union[str, ExecutorBackend] = "thread",
                  scheduler_kwargs: Optional[dict] = None,
-                 on_scheduler: Optional[Callable[[Scheduler], None]] = None):
+                 on_scheduler: Optional[Callable[[Scheduler], None]] = None,
+                 aggregator: Optional[Aggregator] = None):
         names = [s.name for s in scenarios]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate scenario names in {names}")
@@ -255,51 +354,83 @@ class ScenarioSuite:
         self.backend = backend
         self.scheduler_kwargs = scheduler_kwargs or {}
         self.on_scheduler = on_scheduler
+        self.aggregator = aggregator or Aggregator()
 
-    def run(self, timeout: float = 300.0) -> dict[str, SimulationReport]:
-        plans: list[tuple[Scenario, list[tuple[int, int]]]] = []
-        for sc in self.scenarios:
-            src = Bag.open_read(sc.bag_path, backend="disk")
+    def _plan(self, sc: Scenario) -> list[tuple[int, str, tuple[int, int]]]:
+        """One (shard index, shard path, chunk range) triple per task."""
+        tasks: list[tuple[int, str, tuple[int, int]]] = []
+        for si, shard in enumerate(sc.shard_paths):
+            src = Bag.open_read(shard, backend="disk")
+            if _selection_matches_nothing(src, sc):
+                src.close()
+                continue
             parts = partition_bag(src, sc.num_partitions or self.num_workers)
             src.close()
-            plans.append((sc, parts))
+            tasks.extend((si, shard, pr) for pr in parts)
+        return tasks
+
+    def run(self, timeout: float = 300.0) -> dict[str, Verdict]:
+        for sc in self.scenarios:
+            # fail before burning replay time, not at aggregation
+            if (sc.golden_bag_path is not None
+                    and not os.path.exists(sc.golden_bag_path)):
+                raise FileNotFoundError(
+                    f"scenario {sc.name!r}: golden bag "
+                    f"{sc.golden_bag_path!r} does not exist")
+        plans = [(sc, self._plan(sc)) for sc in self.scenarios]
 
         t0 = time.monotonic()
-        owner: dict[int, tuple[int, int]] = {}   # tid -> (scenario i, part j)
+        # tid -> (scenario i, (shard j, partition k)) for result assembly
+        owner: dict[int, tuple[int, tuple[int, int]]] = {}
         with Scheduler(num_workers=self.num_workers, backend=self.backend,
                        **self.scheduler_kwargs) as sched:
             backend_name = sched.backend.name
-            for i, (sc, parts) in enumerate(plans):
-                for j, (lo, hi) in enumerate(parts):
+            for i, (sc, tasks) in enumerate(plans):
+                part_of_shard: dict[int, int] = {}
+                for si, shard, (lo, hi) in tasks:
+                    k = part_of_shard.get(si, 0)
+                    part_of_shard[si] = k + 1
                     tid = sched.submit(
-                        _run_scenario_partition, sc, (lo, hi),
-                        lineage=("scenario", sc.name, sc.bag_path, lo, hi))
-                    owner[tid] = (i, j)
+                        _run_scenario_partition, sc, shard, (lo, hi),
+                        lineage=("scenario", sc.name, si, shard, lo, hi))
+                    owner[tid] = (i, (si, k))
             if self.on_scheduler is not None:
                 self.on_scheduler(sched)
             results = sched.run(timeout=timeout)
             stats = dict(sched.stats)
             finished = {tid: sched.task_finished_at(tid) for tid in results}
 
-        reports: dict[str, SimulationReport] = {}
-        for i, (sc, parts) in enumerate(plans):
+        verdicts: dict[str, Verdict] = {}
+        for i, (sc, tasks) in enumerate(plans):
             tids = [tid for tid, (si, _) in owner.items() if si == i]
             rows = {owner[tid][1]: results[tid] for tid in tids}
             ends = [finished[tid] for tid in tids if finished[tid] is not None]
             wall = (max(ends) - t0) if ends else 0.0
-            reports[sc.name] = SimulationReport(
-                messages_in=sum(r[0] for r in rows.values()),
+            # (shard, partition) order keeps the merge deterministic
+            images = [r[3] for _, r in sorted(rows.items())]
+            messages_in = sum(r[0] for r in rows.values())
+            merged, verdict = self.aggregator.aggregate(
+                sc.name, images, golden=sc.golden_bag_path,
+                messages_in=messages_in)
+            report = SimulationReport(
+                messages_in=messages_in,
                 messages_out=sum(r[1] for r in rows.values()),
                 wall_time_s=wall,
-                partitions=len(parts),
+                partitions=len(tasks),
                 scheduler_stats=stats,
-                output_images=[r[3] for _, r in sorted(rows.items())],
                 scenario=sc.name,
                 backend=backend_name,
                 batch_size=sc.batch_size,
                 messages_dropped=sum(r[2] for r in rows.values()),
+                shards=len(sc.shard_paths),
+                output_image=merged.chunked_file.image(),
+                metrics=verdict.metrics,
+                partition_images=images,
             )
-        return reports
+            merged.close()
+            verdict.report = report
+            verdicts[sc.name] = verdict
+        return verdicts
 
 
 class DistributedSimulation:
@@ -338,7 +469,7 @@ class DistributedSimulation:
         suite = ScenarioSuite([self.scenario], num_workers=self.num_workers,
                               backend=self.backend,
                               scheduler_kwargs=self.scheduler_kwargs)
-        return suite.run(timeout=timeout)[self.scenario.name]
+        return suite.run(timeout=timeout)[self.scenario.name].report
 
 
 def bag_to_partitions(bag_path: str, num_partitions: int,

@@ -54,6 +54,24 @@ def assemble_message_batch(messages: Sequence[Message], align: int = 128,
     }
 
 
+def iter_message_batches(messages: "Iterator[Message] | Sequence[Message]",
+                         batch_size: int) -> Iterator[list[Message]]:
+    """Slice a message stream into non-empty lists of up to ``batch_size``
+    messages — the framing step between a replayed/merged bag and
+    :func:`assemble_message_batch` (used by both batched user logic and the
+    aggregation layer's jitted metric reductions)."""
+    if batch_size < 1:
+        raise ValueError("batch_size must be >= 1")
+    batch: list[Message] = []
+    for msg in messages:
+        batch.append(msg)
+        if len(batch) >= batch_size:
+            yield batch
+            batch = []
+    if batch:
+        yield batch
+
+
 def write_token_bag(path: str, sequences: np.ndarray,
                     chunk_bytes: int = 256 * 1024) -> str:
     """sequences: (N, seq_len) int32 -> one Bag record per sequence."""

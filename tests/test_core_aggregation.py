@@ -1,0 +1,292 @@
+"""Aggregation layer: merge_bags k-way merge semantics, per-topic metrics,
+jitted payload checksums, golden comparison (exact + tolerance) and the
+PASS -> FAIL flip on payload perturbation — end-to-end through
+ScenarioSuite and standalone against bags.
+
+User-logic functions are module-level so they cross the process-backend
+pickle boundary.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (Aggregator, Bag, Message, Scenario, ScenarioSuite,
+                        merge_bags)
+
+# -- merge_bags -------------------------------------------------------------
+
+
+def _write_bag(path_or_none, rows, chunk_bytes=1024):
+    """rows: (topic, ts, data).  Returns a disk path or a memory image."""
+    if path_or_none is None:
+        bag = Bag.open_write(backend="memory", chunk_bytes=chunk_bytes)
+    else:
+        bag = Bag.open_write(path_or_none, chunk_bytes=chunk_bytes)
+    for topic, ts, data in rows:
+        bag.write(topic, ts, data)
+    bag.close()
+    return path_or_none or bag.chunked_file.image()
+
+
+def test_merge_bags_interleaves_by_timestamp(tmp_path):
+    a = _write_bag(str(tmp_path / "a.bag"),
+                   [("/x", t, b"a") for t in (0, 10, 20, 30)])
+    b = _write_bag(str(tmp_path / "b.bag"),
+                   [("/x", t, b"b") for t in (5, 15, 25)])
+    c = _write_bag(None, [("/y", t, b"c") for t in (1, 2, 50)])
+    merged = merge_bags([a, b, c])
+    rows = [(m.timestamp, m.data) for m in merged.read_messages()]
+    assert [t for t, _ in rows] == [0, 1, 2, 5, 10, 15, 20, 25, 30, 50]
+    # the index was rebuilt: topic filtering works on the merged bag
+    assert sorted(merged.topics) == ["/x", "/y"]
+    assert [m.timestamp for m in merged.read_messages(topics=["/y"])] \
+        == [1, 2, 50]
+    assert merged.num_messages == 10
+
+
+def test_merge_bags_tie_break_is_source_order():
+    imgs = [_write_bag(None, [("/t", 7, bytes([i]))]) for i in range(4)]
+    merged = merge_bags(imgs)
+    assert [m.data[0] for m in merged.read_messages()] == [0, 1, 2, 3]
+
+
+def test_merge_bags_accepts_open_bags_and_empty_sources(tmp_path):
+    img = _write_bag(None, [("/t", 1, b"x")])
+    open_bag = Bag.open_read(backend="memory", image=img)
+    merged = merge_bags([open_bag, _write_bag(None, [])])
+    assert merged.num_messages == 1
+    # caller-owned bags stay open
+    assert open_bag.num_messages == 1
+
+
+def test_merge_bags_zero_sources_is_valid_empty_bag():
+    merged = merge_bags([])
+    assert merged.num_messages == 0
+    assert merged.topics == []
+    assert list(merged.read_messages()) == []
+
+
+def test_merge_bags_to_disk_path(tmp_path):
+    out = str(tmp_path / "merged.bag")
+    merged = merge_bags([_write_bag(None, [("/t", 2, b"b")]),
+                         _write_bag(None, [("/t", 1, b"a")])], path=out)
+    assert merged.chunked_file.path == out
+    merged.close()
+    reread = Bag.open_read(out)
+    assert [m.data for m in reread.read_messages()] == [b"a", b"b"]
+
+
+def test_merge_bags_rejects_pathologically_unordered_source():
+    """Disorder beyond iter_time_ordered's heap window must raise, not
+    silently poison the k-way merge."""
+    rows = [("/t", t, b"x") for t in range(5000, 0, -1)]   # fully reversed
+    img = _write_bag(None, rows, chunk_bytes=64)
+    with pytest.raises(ValueError, match="out of timestamp order"):
+        merge_bags([img])
+
+
+def test_memory_image_roundtrip_is_zero_copy():
+    """image -> open_read -> image must hand back the same bytes object
+    (fleet-sized merged outputs shouldn't duplicate on the driver)."""
+    img = _write_bag(None, [("/t", 1, b"x" * 100)])
+    reread = Bag.open_read(backend="memory", image=img)
+    assert reread.chunked_file.image() is img
+
+
+# -- metrics + checksums ----------------------------------------------------
+
+
+def _metric_bag(n=300, period=1000):
+    rng = np.random.RandomState(5)
+    rows = [("/cam" if i % 2 else "/lid", i * period, rng.bytes(48))
+            for i in range(n)]
+    return Bag.open_read(backend="memory", image=_write_bag(None, rows))
+
+
+def test_topic_metrics_counts_gaps_bytes():
+    bag = _metric_bag(n=300, period=1000)
+    metrics = Aggregator().compute_metrics(bag)
+    assert set(metrics) == {"/cam", "/lid"}
+    cam = metrics["/cam"]
+    assert cam.count == 150
+    assert cam.bytes_total == 150 * 48
+    assert cam.t_min == 1000 and cam.t_max == 299_000
+    # per-topic inter-arrival gap is uniform: every percentile == 2*period
+    assert cam.gap_p50_ns == cam.gap_p99_ns == 2000.0
+
+
+def test_checksum_invariant_to_batch_split_and_record_order():
+    """The jitted digest must not depend on how the aggregation batches or
+    orders records — only on (payload bytes, lengths, timestamps)."""
+    bag = _metric_bag(n=257)          # not a multiple of any batch size
+    msgs = list(bag.read_messages(topics=["/cam"]))
+    a1 = Aggregator(metric_batch=7)
+    a2 = Aggregator(metric_batch=256)
+    assert a1._topic_checksum(msgs) == a2._topic_checksum(msgs)
+    assert a1._topic_checksum(msgs[::-1]) == a1._topic_checksum(msgs)
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda m: Message(m.topic, m.timestamp, b"\x00" + m.data[1:]),
+    lambda m: Message(m.topic, m.timestamp + 1, m.data),
+    lambda m: Message(m.topic, m.timestamp, m.data[:-1]),
+])
+def test_checksum_sensitive_to_payload_timestamp_length(mutate):
+    bag = _metric_bag(n=64)
+    msgs = list(bag.read_messages(topics=["/cam"]))
+    agg = Aggregator()
+    mutated = [mutate(m) if i == 17 else m for i, m in enumerate(msgs)]
+    if mutated[17].data == msgs[17].data and \
+            mutated[17].timestamp == msgs[17].timestamp:
+        pytest.skip("mutation was a no-op on this payload")
+    assert agg._topic_checksum(mutated) != agg._topic_checksum(msgs)
+
+
+def test_checksum_position_sensitive():
+    agg = Aggregator()
+    a = [Message("/t", 0, b"\x01\x00\x00\x00")]
+    b = [Message("/t", 0, b"\x00\x00\x01\x00")]
+    assert agg._topic_checksum(a) != agg._topic_checksum(b)
+
+
+# -- golden comparison ------------------------------------------------------
+
+
+def test_compare_exact_passes_on_identical_bags():
+    img = _write_bag(None, [("/t", i, bytes([i])) for i in range(20)])
+    a = Bag.open_read(backend="memory", image=img)
+    g = Bag.open_read(backend="memory", image=img)
+    assert Aggregator().compare(a, g) == []
+
+
+def test_compare_exact_flags_count_checksum_and_topic_diffs():
+    base = [("/t", i, bytes([i])) for i in range(20)]
+    golden = Bag.open_read(backend="memory", image=_write_bag(None, base))
+    # one payload byte perturbed
+    perturbed = [("/t", i, bytes([i ^ 4])) if i == 3 else r
+                 for i, r in enumerate(base)]
+    diffs = Aggregator().compare(
+        Bag.open_read(backend="memory", image=_write_bag(None, perturbed)),
+        golden)
+    assert [d.field for d in diffs] == ["checksum"]
+    # one message missing
+    diffs = Aggregator().compare(
+        Bag.open_read(backend="memory", image=_write_bag(None, base[:-1])),
+        golden)
+    assert any(d.field == "count" for d in diffs)
+    # extra topic in output
+    diffs = Aggregator().compare(
+        Bag.open_read(backend="memory",
+                      image=_write_bag(None, base + [("/new", 5, b"!")])),
+        golden)
+    assert any(d.topic == "/new" and d.detail == "topic absent from golden"
+               for d in diffs)
+
+
+def test_compare_tolerance_mode():
+    base = [("/t", i * 10, bytes([100, 100, 100])) for i in range(8)]
+    wobble = [("/t", i * 10, bytes([100, 102, 99])) for i in range(8)]
+    golden = Bag.open_read(backend="memory", image=_write_bag(None, base))
+    actual = Bag.open_read(backend="memory", image=_write_bag(None, wobble))
+    assert Aggregator(tolerance=2).compare(actual, golden) == []
+    diffs = Aggregator(tolerance=1).compare(actual, golden)
+    assert [d.field for d in diffs] == ["payload"]
+    assert diffs[0].actual == 2        # measured worst deviation
+    # an interior timestamp shift (t_min/t_max unchanged) is labelled
+    # "timestamp", not misattributed to a bound
+    shifted = [("/t", 31 if t == 30 else t, d) for _, t, d in base]
+    diffs = Aggregator(tolerance=2).compare(
+        Bag.open_read(backend="memory", image=_write_bag(None, shifted)),
+        golden)
+    assert [d.field for d in diffs] == ["timestamp"]
+
+
+# -- the verdict flip, end-to-end through ScenarioSuite ---------------------
+
+SHARD_TOPICS = ("/camera", "/lidar")
+
+
+def _fleet(tmp_path, n_shards=3, n=90):
+    paths = []
+    for s in range(n_shards):
+        p = str(tmp_path / f"shard{s}.bag")
+        bag = Bag.open_write(p, chunk_bytes=1024)
+        for i in range(n):
+            bag.write(SHARD_TOPICS[i % 2], i * 1000 + s * 3,
+                      bytes([(7 * i + s) % 256]) * 24)
+        bag.close()
+        paths.append(p)
+    return paths
+
+
+def fleet_logic(msg):
+    return ("/det" + msg.topic, msg.data[:8])
+
+
+def fleet_logic_perturbed(msg):
+    data = msg.data[:8]
+    if msg.timestamp == 41_003:        # one message of one shard
+        data = bytes([data[0] ^ 1]) + data[1:]
+    return ("/det" + msg.topic, data)
+
+
+def test_golden_comparison_flips_pass_to_fail(tmp_path):
+    """Acceptance: record a golden from a clean run, rerun -> PASS; perturb
+    one payload byte in one shard -> FAIL with a checksum diff."""
+    shards = _fleet(tmp_path)
+    golden_path = str(tmp_path / "golden.bag")
+
+    clean = ScenarioSuite(
+        [Scenario("fleet", bag_paths=shards, user_logic=fleet_logic,
+                  num_partitions=2)],
+        num_workers=2).run()["fleet"]
+    assert clean.passed and not clean.vacuous
+    with open(golden_path, "wb") as f:
+        f.write(clean.report.output_image)
+
+    rerun = ScenarioSuite(
+        [Scenario("fleet", bag_paths=shards, user_logic=fleet_logic,
+                  num_partitions=2, golden_bag_path=golden_path)],
+        num_workers=2).run()["fleet"]
+    assert rerun.passed
+    assert rerun.status == "PASS"
+    assert rerun.golden_path == golden_path
+
+    bad = ScenarioSuite(
+        [Scenario("fleet", bag_paths=shards,
+                  user_logic=fleet_logic_perturbed,
+                  num_partitions=2, golden_bag_path=golden_path)],
+        num_workers=2).run()["fleet"]
+    assert not bad.passed
+    assert bad.status == "FAIL"
+    assert not bool(bad)
+    assert [d.field for d in bad.diffs] == ["checksum"]
+    assert bad.diffs[0].topic == "/det/lidar"
+    assert "FAIL" in bad.summary() and "checksum" in bad.summary()
+
+
+def test_verdict_metrics_ride_report_and_verdict(tmp_path):
+    shards = _fleet(tmp_path, n_shards=3, n=60)
+    v = ScenarioSuite(
+        [Scenario("fleet", bag_paths=shards, user_logic=fleet_logic)],
+        num_workers=2).run()["fleet"]
+    assert v.metrics is v.report.metrics
+    assert sum(m.count for m in v.metrics.values()) == 3 * 60
+    for m in v.metrics.values():
+        assert m.checksum == v.report.metrics[m.topic].checksum
+        assert m.bytes_total == m.count * 8
+
+
+def test_aggregate_standalone_vacuous_rules():
+    agg = Aggregator()
+    merged, verdict = agg.aggregate("empty", [], golden=None)
+    assert verdict.passed and verdict.vacuous
+    assert merged.num_messages == 0
+    # an empty output against an empty golden is still vacuous
+    empty_golden = _write_bag(None, [])
+    _, v2 = agg.aggregate("empty", [], golden=empty_golden)
+    assert v2.passed and v2.vacuous
+    # ...but not when the golden demands output
+    demanding = _write_bag(None, [("/t", 1, b"x")])
+    _, v3 = agg.aggregate("empty", [], golden=demanding)
+    assert not v3.passed and not v3.vacuous

@@ -3,8 +3,8 @@ DistributedSimulation behaviour incl. fault injection."""
 
 import numpy as np
 
-from repro.core import (Bag, DistributedSimulation, MessageBus, RosPlay,
-                        RosRecord, bag_to_partitions, decode)
+from repro.core import (Bag, DistributedSimulation, Message, MessageBus,
+                        RosPlay, RosRecord, bag_to_partitions, decode)
 
 
 def _make_bag(path, n=600, topics=("/camera", "/lidar", "/imu")):
@@ -71,11 +71,7 @@ def test_distributed_simulation_end_to_end(tmp_path):
         assert rep.messages_in == 600
         assert rep.messages_out == 600
         assert rep.partitions == 4
-        total_out = 0
-        for img in rep.output_images:
-            rb = Bag.open_read(backend="memory", image=img)
-            total_out += rb.num_messages
-        assert total_out == 600
+        assert rep.open_output_bag().num_messages == 600
 
 
 def test_distributed_simulation_with_faults(tmp_path):
@@ -100,6 +96,72 @@ def test_distributed_simulation_with_faults(tmp_path):
                          lineage=("bag", p, lo, hi))
         res = sched.run(timeout=60)
     assert sum(r[0] for r in res.values()) == 900   # nothing lost
+
+
+def test_publish_batch_empty_is_a_noop():
+    """An empty micro-batch delivers nothing: no callbacks, no counter."""
+    bus = MessageBus()
+    hits = []
+    bus.subscribe("/t", hits.append)
+    bus.subscribe_batch("/t", hits.append)
+    bus.subscribe_batch(None, hits.append)
+    assert bus.publish_batch([]) == 0
+    assert bus.published == 0
+    assert hits == []
+
+
+def test_publish_batch_unsubscribe_during_dispatch():
+    """A callback that unsubscribes itself (or another) mid-dispatch must
+    not break the in-flight delivery — subscriber lists are snapshotted
+    per publish, and the unsubscribed callback stops receiving afterwards."""
+    bus = MessageBus()
+    seen_a, seen_b, seen_batch = [], [], []
+
+    def cb_a(msg):
+        if not seen_a:
+            bus.unsubscribe("/t", cb_a)        # self-removal mid-dispatch
+            bus.unsubscribe_batch("/t", bcb)   # cross-removal mid-dispatch
+        seen_a.append(msg.timestamp)
+
+    def bcb(msgs):
+        seen_batch.append([m.timestamp for m in msgs])
+
+    bus.subscribe("/t", cb_a)
+    bus.subscribe("/t", seen_b.append)
+    bus.subscribe_batch("/t", bcb)
+    msgs = [Message("/t", i, b"x") for i in range(3)]
+    assert bus.publish_batch(msgs) == 3
+    # subscriber lists are snapshotted at publish time: the in-flight batch
+    # still reaches cb_a and bcb in full despite the mid-dispatch removals
+    assert seen_a == [0, 1, 2]
+    assert [m.timestamp for m in seen_b] == [0, 1, 2]
+    assert seen_batch == [[0, 1, 2]]
+    # ...but later publishes honour both removals
+    bus.publish_batch([Message("/t", 9, b"y")])
+    assert seen_a == [0, 1, 2] and seen_batch == [[0, 1, 2]]
+    assert [m.timestamp for m in seen_b] == [0, 1, 2, 9]
+
+
+def test_publish_batch_split_ordering_vs_mixed():
+    """Per-topic batch subscribers see their topic's messages in batch
+    order (the split preserves relative order); the None subscriber sees
+    the mixed batch exactly as published — and per-topic splits are
+    delivered before the mixed-batch fallback."""
+    bus = MessageBus()
+    events = []
+    bus.subscribe_batch("/a", lambda b: events.append(
+        ("a", [m.timestamp for m in b])))
+    bus.subscribe_batch("/b", lambda b: events.append(
+        ("b", [m.timestamp for m in b])))
+    bus.subscribe_batch(None, lambda b: events.append(
+        ("*", [m.timestamp for m in b])))
+    msgs = [Message("/a", 1, b""), Message("/b", 2, b""),
+            Message("/a", 3, b""), Message("/b", 4, b""),
+            Message("/a", 5, b"")]
+    bus.publish_batch(msgs)
+    assert ("a", [1, 3, 5]) in events
+    assert ("b", [2, 4]) in events
+    assert events[-1] == ("*", [1, 2, 3, 4, 5])   # mixed batch, publish order
 
 
 def test_bag_to_partitions_encodes_uniform_format(tmp_path):

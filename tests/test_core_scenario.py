@@ -49,32 +49,35 @@ def bag_path(tmp_path):
 def test_suite_heterogeneous_scenarios_one_scheduler(bag_path, backend):
     """Acceptance: >= 3 heterogeneous scenarios (topic filter / time window /
     latency+batched) through one Scheduler call, both backends, per-scenario
-    reports."""
+    verdicts wrapping full reports."""
     suite = ScenarioSuite([
         Scenario("cam-only", bag_path, det_logic, topics=("/camera",)),
         Scenario("window", bag_path, det_logic, start=100_000, end=300_000),
         Scenario("batched-latency", bag_path, det_batch_logic,
                  batch_size=64, latency_model_s=0.0005),
     ], num_workers=3, backend=backend)
-    reps = suite.run(timeout=120)
-    assert set(reps) == {"cam-only", "window", "batched-latency"}
+    verdicts = suite.run(timeout=120)
+    assert set(verdicts) == {"cam-only", "window", "batched-latency"}
 
-    cam = reps["cam-only"]
+    cam = verdicts["cam-only"].report
     assert cam.messages_in == 200          # 600 msgs round-robin 3 topics
     assert cam.messages_out == 200
     src = Bag.open_read(bag_path)
     in_window = sum(1 for m in src.read_messages(start=100_000, end=300_000))
     src.close()
-    assert reps["window"].messages_in == in_window > 0
-    batched = reps["batched-latency"]
+    assert verdicts["window"].report.messages_in == in_window > 0
+    batched = verdicts["batched-latency"].report
     assert batched.messages_in == 600 == batched.messages_out
     assert batched.batch_size == 64
-    for r in reps.values():
+    for v in verdicts.values():
+        assert v.passed and not v.vacuous      # no goldens -> plain PASS
+        r = v.report
         assert r.backend == backend
         assert r.wall_time_s > 0
         assert r.partitions >= 1
-        assert len(r.output_images) == r.partitions
+        assert len(r.partition_images) == r.partitions
         assert r.scheduler_stats["tasks_done"] >= r.partitions
+        assert sum(m.count for m in r.metrics.values()) == r.messages_out
 
 
 def test_suite_rejects_duplicate_names(bag_path):
@@ -83,26 +86,38 @@ def test_suite_rejects_duplicate_names(bag_path):
                        Scenario("a", bag_path, det_logic)])
 
 
-def test_suite_output_images_replayable(bag_path):
-    reps = ScenarioSuite([Scenario("all", bag_path, det_logic)],
-                         num_workers=2).run()
+def test_suite_merged_output_replayable(bag_path):
+    rep = ScenarioSuite([Scenario("all", bag_path, det_logic)],
+                        num_workers=2).run()["all"].report
+    out = rep.open_output_bag()
     total = 0
-    for img in reps["all"].output_images:
-        rb = Bag.open_read(backend="memory", image=img)
-        for m in rb.read_messages():
-            assert m.topic.startswith("/det/")
-            total += 1
+    last = -1
+    for m in out.read_messages():
+        assert m.topic.startswith("/det/")
+        assert m.timestamp >= last          # merged bag is time-ordered
+        last = m.timestamp
+        total += 1
     assert total == 600
 
 
+def test_output_images_deprecated_accessor(bag_path):
+    rep = ScenarioSuite([Scenario("all", bag_path, det_logic)],
+                        num_workers=2).run()["all"].report
+    with pytest.warns(DeprecationWarning):
+        imgs = rep.output_images
+    assert imgs == rep.partition_images
+    assert sum(Bag.open_read(backend="memory", image=i).num_messages
+               for i in imgs) == 600
+
+
 def test_drop_rate_fault_profile(bag_path):
-    reps = ScenarioSuite([
+    verdicts = ScenarioSuite([
         Scenario("all-dropped", bag_path, det_logic, drop_rate=1.0),
         Scenario("half-dropped", bag_path, det_logic, drop_rate=0.5, seed=3),
     ], num_workers=2).run()
-    assert reps["all-dropped"].messages_dropped == 600
-    assert reps["all-dropped"].messages_out == 0
-    half = reps["half-dropped"]
+    assert verdicts["all-dropped"].report.messages_dropped == 600
+    assert verdicts["all-dropped"].report.messages_out == 0
+    half = verdicts["half-dropped"].report
     assert half.messages_dropped + half.messages_out == 600
     assert 150 < half.messages_dropped < 450       # ~Binomial(600, .5)
 
@@ -112,26 +127,29 @@ def test_drop_rate_deterministic(bag_path):
                                  seed=11)], num_workers=2).run()
     r2 = ScenarioSuite([Scenario("d", bag_path, det_logic, drop_rate=0.3,
                                  seed=11)], num_workers=2).run()
-    assert r1["d"].messages_dropped == r2["d"].messages_dropped
+    assert (r1["d"].report.messages_dropped
+            == r2["d"].report.messages_dropped)
 
 
 def test_batched_equals_per_message_outputs(bag_path):
     """The vectorized replay path must produce the same output set as the
     per-message path — batching is an optimisation, not a semantic change."""
-    reps = ScenarioSuite([
+    verdicts = ScenarioSuite([
         Scenario("permsg", bag_path, det_logic),
         Scenario("batched", bag_path, det_batch_logic, batch_size=32),
     ], num_workers=2).run()
 
     def outputs(rep):
-        out = []
-        for img in rep.output_images:
-            rb = Bag.open_read(backend="memory", image=img)
-            out.extend((m.topic, m.timestamp, m.data)
-                       for m in rb.read_messages())
-        return sorted(out)
+        return sorted((m.topic, m.timestamp, m.data)
+                      for m in rep.open_output_bag().read_messages())
 
-    assert outputs(reps["permsg"]) == outputs(reps["batched"])
+    assert (outputs(verdicts["permsg"].report)
+            == outputs(verdicts["batched"].report))
+    # and the aggregation checksums agree without any message pairing
+    pm = verdicts["permsg"].report.metrics
+    bm = verdicts["batched"].report.metrics
+    assert {t: m.checksum for t, m in pm.items()} \
+        == {t: m.checksum for t, m in bm.items()}
 
 
 def test_logic_ref_resolution(bag_path):
@@ -167,11 +185,102 @@ def test_suite_fault_injection_hook(bag_path):
         sched.kill_worker("w0")
         sched.add_worker("elastic")
 
-    reps = ScenarioSuite(
+    verdicts = ScenarioSuite(
         [Scenario("all", bag_path, det_logic, num_partitions=6)],
         num_workers=2, scheduler_kwargs={"heartbeat_timeout": 0.3},
         on_scheduler=chaos).run(timeout=120)
-    assert reps["all"].messages_in == 600
+    assert verdicts["all"].report.messages_in == 600
+
+
+# -- fleet sharding ---------------------------------------------------------
+
+
+def _make_fleet(tmp_path, n_shards=3, n=150):
+    """Shard bags with interleaved timestamp ranges, so a correct merge
+    must actually interleave across shards (not just concatenate)."""
+    paths = []
+    for s in range(n_shards):
+        p = str(tmp_path / f"shard{s}.bag")
+        b = Bag.open_write(p, chunk_bytes=2048)
+        for i in range(n):
+            b.write("/camera" if i % 2 else "/lidar",
+                    i * 10_000 + s * 37, bytes([(s * n + i) % 256]) * 32)
+        b.close()
+        paths.append(p)
+    return paths
+
+
+@pytest.mark.parametrize("backend", ["thread", "process"])
+def test_multi_shard_scenario_merges_time_ordered(tmp_path, backend):
+    """Acceptance: a >= 3-bag fleet scenario merges every shard's outputs
+    into ONE timestamp-ordered bag, on both backends."""
+    shards = _make_fleet(tmp_path, n_shards=3, n=150)
+    logic = f"{__name__}:det_logic"
+    v = ScenarioSuite(
+        [Scenario("fleet", bag_paths=shards, user_logic=logic,
+                  num_partitions=2)],
+        num_workers=2, backend=backend).run(timeout=120)["fleet"]
+    rep = v.report
+    assert rep.shards == 3
+    assert rep.partitions == 6                   # 2 per shard
+    assert rep.messages_in == 450 == rep.messages_out
+    stamps = [m.timestamp for m in rep.open_output_bag().read_messages()]
+    assert len(stamps) == 450
+    assert stamps == sorted(stamps)
+    # outputs from every shard are present (payload bytes are shard-coded)
+    seen = {m.data[0] for m in rep.open_output_bag().read_messages()}
+    assert seen & set(range(0, 150)) and seen & set(range(150, 256))
+
+
+def test_scenario_requires_exactly_one_bag_source(bag_path):
+    with pytest.raises(ValueError):
+        Scenario("both", bag_path=bag_path, bag_paths=(bag_path,),
+                 user_logic=det_logic)
+    with pytest.raises(ValueError):
+        Scenario("neither", user_logic=det_logic)
+    with pytest.raises(ValueError):
+        Scenario("no-logic", bag_path=bag_path)
+    fleet = Scenario("list-ok", bag_paths=[bag_path], user_logic=det_logic)
+    assert fleet.bag_paths == (bag_path,)        # normalized to tuple
+    assert fleet.shard_paths == (bag_path,)
+
+
+# -- empty-selection scenarios ----------------------------------------------
+
+
+@pytest.mark.parametrize("kw", [
+    {"topics": ("/absent",)},
+    {"start": 10**15, "end": 2 * 10**15},
+    {"end": -1},
+])
+def test_empty_selection_yields_vacuous_pass(bag_path, kw):
+    """Regression: a topic filter / time window matching zero messages must
+    produce a clean zero-message report and a PASS-vacuous verdict — no
+    degenerate partition plan, no tasks."""
+    v = ScenarioSuite([Scenario("empty", bag_path, det_logic, **kw)],
+                      num_workers=2).run()["empty"]
+    assert v.passed and v.vacuous
+    assert v.status == "PASS(vacuous)"
+    rep = v.report
+    assert rep.partitions == 0
+    assert rep.messages_in == 0 == rep.messages_out
+    assert rep.metrics == {}
+    assert rep.open_output_bag().num_messages == 0
+    assert rep.scheduler_stats["tasks_done"] == 0
+
+
+def test_empty_selection_fails_against_nonempty_golden(bag_path, tmp_path):
+    """An empty selection is only vacuously green when nothing was
+    expected: a golden bag that demands output must flip it to FAIL."""
+    golden = str(tmp_path / "golden.bag")
+    b = Bag.open_write(golden)
+    b.write("/det/camera", 1, b"x")
+    b.close()
+    v = ScenarioSuite([Scenario("empty", bag_path, det_logic,
+                                topics=("/absent",),
+                                golden_bag_path=golden)]).run()["empty"]
+    assert not v.passed and not v.vacuous
+    assert any(d.detail == "topic missing from output" for d in v.diffs)
 
 
 # -- batched bus / playback semantics ---------------------------------------

@@ -97,6 +97,54 @@ def test_straggler_speculation_wins():
     assert wall < 5.0                 # did not wait for the straggler
 
 
+def test_speculation_medians_are_per_lineage_stage():
+    """A uniformly-slow scenario must not be flagged by a fast scenario's
+    median: straggler thresholds are keyed by lineage stage.  (Under the
+    seed-era global median, every slow task here exceeds 4x the fast
+    median and gets a pointless backup copy.)"""
+    def fast(x):
+        time.sleep(0.002)
+        return x
+
+    def slow(x):
+        time.sleep(0.25)        # uniform: none of these is a straggler
+        return x
+
+    with Scheduler(num_workers=4, speculation=True, speculation_factor=4.0,
+                   speculation_min_done=3) as s:
+        for i in range(12):
+            s.submit(fast, i, lineage=("scenario", "fast", i))
+        for i in range(4):
+            s.submit(slow, 100 + i, lineage=("scenario", "slow", i))
+        res = s.run(timeout=30)
+    assert sorted(res.values()) == list(range(12)) + [100, 101, 102, 103]
+    assert s.stats["speculative_launches"] == 0
+
+
+def test_speculation_still_fires_within_a_stage():
+    """Per-stage medians still catch a genuine straggler inside its own
+    stage."""
+    slow_once = {"done": False}
+
+    def work(x):
+        if x == 7 and not slow_once["done"]:
+            slow_once["done"] = True
+            time.sleep(5.0)
+        time.sleep(0.002)
+        return x
+
+    t0 = time.monotonic()
+    with Scheduler(num_workers=4, speculation=True, speculation_factor=3.0,
+                   speculation_min_done=3) as s:
+        for i in range(30):
+            s.submit(work, i, lineage=("scenario", "only", i))
+        res = s.run(timeout=30)
+        wall = time.monotonic() - t0
+    assert sorted(res.values()) == list(range(30))
+    assert s.stats["speculative_launches"] >= 1
+    assert wall < 5.0
+
+
 def test_elastic_scale_up_mid_job():
     with Scheduler(num_workers=1, speculation=False) as s:
         for i in range(40):
