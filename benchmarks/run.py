@@ -11,7 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
                          (msgs/s per backend × batch size) so the perf
                          trajectory is tracked across PRs
     aggregation_*      — result-aggregation stages (k-way shard merge,
-                         jitted metrics/checksums, golden compare); writes
+                         single-pass metrics/checksums, golden compare,
+                         fused vs two-pass metrics race); writes
                          ``BENCH_aggregation.json`` at the repo root
     binpipe_*          — paper Fig 4 (BinPipedRDD stage throughput)
     roofline_*         — dry-run roofline terms per (arch x shape x mesh)

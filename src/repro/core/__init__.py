@@ -12,7 +12,8 @@ Layers:
     aggregation -- Aggregator: merge -> metrics -> golden compare -> Verdict
 """
 
-from .aggregation import Aggregator, Diff, TopicMetrics, Verdict
+from .aggregation import (Aggregator, Diff, TopicMetrics, Verdict,
+                          combine_digests, combine_metrics)
 from .bag import (Bag, ChunkedFile, MemoryChunkedFile, Message,
                   iter_time_ordered, merge_bags, partition_bag)
 from .binpipe import (BinaryPartition, decode, deserialize, encode, frame,
@@ -36,4 +37,5 @@ __all__ = [
     "Scenario", "ScenarioSuite", "resolve_logic_ref",
     "DistributedSimulation", "SimulationReport", "bag_to_partitions",
     "Aggregator", "Diff", "TopicMetrics", "Verdict",
+    "combine_digests", "combine_metrics",
 ]

@@ -12,15 +12,29 @@ per-partition/per-shard output bag images into exactly that:
 
 Metric reductions run over the same fixed-layout arrays batched replay
 uses (:func:`repro.data.pipeline.assemble_message_batch`): payload
-checksums are a jitted uint32 reduction over the (R, Nb) payload matrix,
-so the hot path stays on-device and amortises like the decode stage.
-Checksums are *order-free across records* (a wrapping sum of per-record
-digests) but position- and timestamp-sensitive within a record — the same
-fleet produces the same checksum regardless of shard/partition/batch
-split, while any payload or timestamp perturbation flips it.
+checksums are a wrapping-uint32 reduction of *per-record digests*, so the
+hot path stays on-device and amortises like the decode stage.  Checksums
+are *order-free across records* but position- and timestamp-sensitive
+within a record — the same fleet produces the same checksum regardless of
+shard/partition/batch split, while any payload or timestamp perturbation
+flips it.
 
-``Aggregator`` is the pipeline stage ``ScenarioSuite.run`` finishes with;
-it can also be used standalone against recorded bags for offline triage.
+Since ISSUE 3 the metric stage is **single-pass and off-driver**:
+
+* per-record digests come pre-reduced — either from the fused Pallas
+  kernel (:func:`repro.kernels.sensor_decode.sensor_decode_metrics`,
+  which emits them in the same grid sweep that decodes the payload) or
+  from the jitted ``record_digest`` reduction over one time-ordered scan,
+* :class:`TopicMetrics` carries its (sorted) per-topic timestamps and is
+  a *mergeable partial*: :meth:`TopicMetrics.merge` combines partials
+  from different shards/partitions associatively and exactly (counts,
+  bytes and checksums add; time bounds extend; gap percentiles are
+  recomputed from the merged timestamp multiset), so workers ship
+  KB-sized digests instead of the driver re-reading MB-sized payloads.
+
+``Aggregator`` is the pipeline stage ``ScenarioSuite.run`` schedules per
+scenario; it can also be used standalone against recorded bags for
+offline triage.
 """
 
 from __future__ import annotations
@@ -45,14 +59,16 @@ def _jitted():
         import jax
         import jax.numpy as jnp
 
-        @jax.jit
-        def digest(payload, lengths, ts_low):
-            """Wrapping-uint32 digest of one assembled batch.
+        def _record_digest(payload, lengths, ts_low):
+            """Per-record wrapping-uint32 digests of one assembled batch.
 
             payload: (R, Nb) uint8, lengths: (R,) i32, ts_low: (R,) u32
             (timestamps mod 2**32).  Per-record digest = position-weighted
-            byte sum mixed with the timestamp; records combine by wrapping
-            sum, so the total is invariant to record order and batch split.
+            byte sum mixed with the timestamp; the value depends only on a
+            record's own (bytes, length, timestamp), never on batch
+            composition.  The fused Pallas kernel
+            (:func:`repro.kernels.sensor_decode.sensor_decode_metrics`)
+            computes the same reduction op-for-op in the decode sweep.
             """
             p = payload.astype(jnp.uint32)
             col = jnp.arange(payload.shape[1], dtype=jnp.uint32)
@@ -61,8 +77,18 @@ def _jitted():
             rec = jnp.sum(jnp.where(mask, p * w[None, :], 0), axis=1,
                           dtype=jnp.uint32)
             rec = (rec ^ ts_low.astype(jnp.uint32)) * jnp.uint32(2654435761)
-            rec = rec + lengths.astype(jnp.uint32) * jnp.uint32(40503)
-            return jnp.sum(rec, dtype=jnp.uint32)
+            return rec + lengths.astype(jnp.uint32) * jnp.uint32(40503)
+
+        @jax.jit
+        def record_digest(payload, lengths, ts_low):
+            return _record_digest(payload, lengths, ts_low)
+
+        @jax.jit
+        def digest(payload, lengths, ts_low):
+            """Batch total: wrapping sum of the per-record digests, so it
+            is invariant to record order and batch split."""
+            return jnp.sum(_record_digest(payload, lengths, ts_low),
+                           dtype=jnp.uint32)
 
         @jax.jit
         def max_abs_diff(a, a_len, b, b_len):
@@ -73,14 +99,60 @@ def _jitted():
             d = jnp.abs(a.astype(jnp.int32) - b.astype(jnp.int32))
             return jnp.max(jnp.where(valid, d, 0))
 
+        _JITTED["record_digest"] = record_digest
         _JITTED["digest"] = digest
         _JITTED["max_abs_diff"] = max_abs_diff
     return _JITTED
 
 
+def record_digests_np(payload: np.ndarray, lengths: np.ndarray,
+                      ts_low: np.ndarray) -> np.ndarray:
+    """Pure-numpy per-record digests, bit-identical to the jitted
+    ``record_digest`` reduction and the fused Pallas kernel (wrapping
+    uint32 arithmetic is the same in all three).
+
+    This is the **fork-safe engine**: process-backend workers compute
+    partial metrics with it, because initialising jax inside a forked
+    worker of a jax-multithreaded driver can deadlock, and a per-process
+    jit warm-up would tax every worker.  Device contexts use the Pallas
+    kernel (metrics ride the decode sweep) or the jitted reduction.
+    """
+    p = payload.astype(np.uint32)
+    col = np.arange(payload.shape[1], dtype=np.uint32)
+    mask = col[None, :] < lengths.astype(np.uint32)[:, None]
+    w = col * np.uint32(2246822519) + np.uint32(0x9E3779B9)
+    rec = np.where(mask, p * w[None, :], np.uint32(0)).sum(
+        axis=1, dtype=np.uint32)
+    rec = (rec ^ ts_low.astype(np.uint32)) * np.uint32(2654435761)
+    return rec + lengths.astype(np.uint32) * np.uint32(40503)
+
+
+def _max_abs_diff_np(a: np.ndarray, a_len: np.ndarray,
+                     b: np.ndarray, b_len: np.ndarray) -> int:
+    """Numpy twin of the jitted ``max_abs_diff`` tolerance reduction."""
+    col = np.arange(a.shape[1], dtype=np.int32)
+    valid = col[None, :] < np.minimum(a_len, b_len)[:, None]
+    d = np.abs(a.astype(np.int32) - b.astype(np.int32))
+    return int(np.where(valid, d, 0).max(initial=0))
+
+
+def combine_digests(record_digests: "np.ndarray | Sequence[int]") -> int:
+    """Wrapping-uint32 sum of pre-reduced per-record digests — how the
+    fused kernel's ``record_digests`` output becomes a topic checksum."""
+    arr = np.asarray(record_digests, dtype=np.uint64)
+    return int(arr.sum(dtype=np.uint64) & _U32)
+
+
 @dataclass(frozen=True)
 class TopicMetrics:
-    """Per-topic slice of a merged output bag."""
+    """Per-topic slice of a merged output bag — also the *mergeable
+    partial* workers ship.
+
+    ``timestamps`` (sorted int64, excluded from equality/repr) is the
+    exact state :meth:`merge` needs to recompute gap percentiles over a
+    combined multiset; it weighs 8 bytes per message — KBs where the
+    payloads it summarises weigh MBs.
+    """
     topic: str
     count: int
     bytes_total: int
@@ -90,6 +162,86 @@ class TopicMetrics:
     gap_p90_ns: float
     gap_p99_ns: float
     checksum: int                # order-free wrapping-u32 payload digest
+    timestamps: Optional[np.ndarray] = field(default=None, repr=False,
+                                             compare=False)
+
+    @classmethod
+    def from_state(cls, topic: str, bytes_total: int, checksum: int,
+                   timestamps: np.ndarray) -> "TopicMetrics":
+        """Build finalized metrics from reduced state: a sorted int64
+        timestamp array plus pre-combined byte and checksum totals."""
+        ts = np.asarray(timestamps, dtype=np.int64)
+        gaps = np.diff(ts) if len(ts) > 1 else np.zeros(1, np.int64)
+        p50, p90, p99 = np.percentile(gaps, [50, 90, 99])
+        return cls(topic=topic, count=len(ts), bytes_total=int(bytes_total),
+                   t_min=int(ts[0]), t_max=int(ts[-1]),
+                   gap_p50_ns=float(p50), gap_p90_ns=float(p90),
+                   gap_p99_ns=float(p99), checksum=int(checksum) & 0xFFFFFFFF,
+                   timestamps=ts)
+
+    def merge(self, other: "TopicMetrics") -> "TopicMetrics":
+        """Pure associative combine of two partials of the same topic.
+
+        Counts/bytes add, checksums add in wrapping uint32 space, time
+        bounds extend, and gap percentiles are recomputed from the merged
+        timestamp multiset — so merging per-partition partials is *exactly*
+        ``compute_metrics`` over the merged bag, in any association order.
+        """
+        if self.topic != other.topic:
+            raise ValueError(f"cannot merge metrics of {self.topic!r} "
+                             f"with {other.topic!r}")
+        if other.count == 0:
+            return self
+        if self.count == 0:
+            return other
+        if self.timestamps is None or other.timestamps is None:
+            raise ValueError(
+                f"topic {self.topic!r}: merging requires timestamp-carrying "
+                "partials (metrics loaded without their timestamps cannot "
+                "be combined exactly)")
+        ts = np.sort(np.concatenate([self.timestamps, other.timestamps]))
+        return TopicMetrics.from_state(
+            self.topic, self.bytes_total + other.bytes_total,
+            (np.uint64(self.checksum) + np.uint64(other.checksum)) & _U32,
+            ts)
+
+
+def combine_metrics(partials: Iterable[dict[str, TopicMetrics]],
+                    ) -> dict[str, TopicMetrics]:
+    """Fold per-shard/partition metric dicts into fleet-level metrics with
+    :meth:`TopicMetrics.merge` — no payload bytes touched."""
+    out: dict[str, TopicMetrics] = {}
+    for part in partials:
+        for topic, m in part.items():
+            prev = out.get(topic)
+            out[topic] = m if prev is None else prev.merge(m)
+    return {t: out[t] for t in sorted(out)}
+
+
+def accumulate_topic_state(state: dict[str, list], batch: Sequence[Message],
+                           arrays: dict, digests: np.ndarray) -> None:
+    """Scatter one assembled batch's per-record digests into per-topic
+    reduction state (``topic -> [bytes_total, wrapping-u32 checksum,
+    timestamp chunks]``).  The single source of truth for the combine
+    shape — shared by :meth:`Aggregator.compute_metrics` and the
+    fused-kernel consumers in ``benchmarks/aggregation.py``, so the
+    bit-parity they assert can't drift apart."""
+    digests = digests.astype(np.uint64)
+    topics = np.asarray([m.topic for m in batch])
+    for topic in dict.fromkeys(m.topic for m in batch):
+        sel = topics == topic
+        st = state.setdefault(topic, [0, np.uint64(0), []])
+        st[0] += int(arrays["lengths"][sel].sum())
+        st[1] = (st[1] + digests[sel].sum(dtype=np.uint64)) & _U32
+        st[2].append(arrays["timestamps"][sel])
+
+
+def finalize_topic_state(state: dict[str, list]) -> dict[str, TopicMetrics]:
+    """Turn accumulated per-topic state into finalized (mergeable)
+    :class:`TopicMetrics`, topics sorted."""
+    return {topic: TopicMetrics.from_state(
+                topic, st[0], st[1], np.concatenate(st[2]))
+            for topic, st in sorted(state.items())}
 
 
 @dataclass(frozen=True)
@@ -148,15 +300,31 @@ class Aggregator:
     bit-for-bit; ``> 0`` allows per-byte payload deviation up to
     ``tolerance`` (in byte units) between time-aligned message pairs,
     for scenarios whose user logic is numerically jittery.
-    ``metric_batch`` sizes the assembled batches the jitted reductions
+    ``metric_batch`` sizes the assembled batches the digest reductions
     consume (the aggregation analogue of replay ``batch_size``).
+
+    ``engine`` selects the digest reduction: ``"numpy"`` (default) is the
+    fork-safe vectorized path worker pools use; ``"jax"`` the jitted
+    device path.  Both are bit-identical (and identical to the fused
+    Pallas kernel), so the choice never moves a checksum or a verdict.
     """
 
-    def __init__(self, tolerance: int = 0, metric_batch: int = 256):
+    def __init__(self, tolerance: int = 0, metric_batch: int = 256,
+                 engine: str = "numpy"):
         if tolerance < 0:
             raise ValueError("tolerance must be >= 0")
+        if engine not in ("numpy", "jax"):
+            raise ValueError(f"unknown digest engine {engine!r}")
         self.tolerance = tolerance
         self.metric_batch = metric_batch
+        self.engine = engine
+
+    def _record_digests(self, payload: np.ndarray, lengths: np.ndarray,
+                        ts_low: np.ndarray) -> np.ndarray:
+        if self.engine == "jax":
+            return np.asarray(_jitted()["record_digest"](
+                payload, lengths, ts_low))
+        return record_digests_np(payload, lengths, ts_low)
 
     # -- merge --------------------------------------------------------------
 
@@ -168,42 +336,56 @@ class Aggregator:
     # -- metrics ------------------------------------------------------------
 
     def _topic_checksum(self, messages: Sequence[Message]) -> int:
+        """Order-free wrapping-u32 checksum of a message sequence (one
+        topic's worth) — a reduction over pre-reduced per-record digests."""
         from repro.data.pipeline import (assemble_message_batch,
                                          iter_message_batches)
-        digest = _jitted()["digest"]
         total = np.uint64(0)
         for batch in iter_message_batches(messages, self.metric_batch):
             arrays = assemble_message_batch(batch)
             ts_low = (arrays["timestamps"].astype(np.uint64)
                       & _U32).astype(np.uint32)
-            total = (total + np.uint64(int(digest(
-                arrays["payload"], arrays["lengths"], ts_low)))) & _U32
+            digests = self._record_digests(arrays["payload"],
+                                           arrays["lengths"], ts_low)
+            total = (total + digests.astype(np.uint64).sum()) & _U32
         return int(total)
 
-    def compute_metrics(self, bag: Bag) -> dict[str, TopicMetrics]:
-        """Per-topic metrics over a (merged) output bag."""
-        by_topic: dict[str, list[Message]] = {}
-        for msg in iter_time_ordered(bag):
-            by_topic.setdefault(msg.topic, []).append(msg)
-        metrics: dict[str, TopicMetrics] = {}
-        for topic in sorted(by_topic):
-            msgs = by_topic[topic]
-            ts = np.fromiter((m.timestamp for m in msgs), dtype=np.int64,
-                             count=len(msgs))
-            gaps = np.diff(ts) if len(ts) > 1 else np.zeros(1, np.int64)
-            p50, p90, p99 = np.percentile(gaps, [50, 90, 99])
-            metrics[topic] = TopicMetrics(
-                topic=topic,
-                count=len(msgs),
-                bytes_total=sum(len(m.data) for m in msgs),
-                t_min=int(ts.min()),
-                t_max=int(ts.max()),
-                gap_p50_ns=float(p50),
-                gap_p90_ns=float(p90),
-                gap_p99_ns=float(p99),
-                checksum=self._topic_checksum(msgs),
-            )
-        return metrics
+    def compute_metrics(self, source: "Bag | Iterable[Message]",
+                        ) -> dict[str, TopicMetrics]:
+        """Per-topic metrics over a (merged) output bag or message stream.
+
+        **Single pass**: the time-ordered stream is consumed once in
+        mixed-topic batches; per-record digests come from one reduction
+        per batch and are scattered to topic accumulators, so no
+        per-topic re-grouping or payload re-sweep happens.  The result
+        dicts are the mergeable partials workers ship
+        (:meth:`TopicMetrics.merge`).
+
+        A message-iterator source must be timestamp-ordered (what
+        :func:`iter_time_ordered` or a merged bag yields); disorder would
+        silently corrupt time bounds and gap percentiles, so it raises
+        ``ValueError`` instead — same contract as :func:`merge_bags`.
+        """
+        from repro.data.pipeline import (assemble_message_batch,
+                                         iter_message_batches)
+        stream = iter_time_ordered(source) if isinstance(source, Bag) \
+            else iter(source)
+        state: dict[str, list] = {}
+        last = None
+        for batch in iter_message_batches(stream, self.metric_batch):
+            arrays = assemble_message_batch(batch)
+            ts = arrays["timestamps"]
+            if ((last is not None and ts[0] < last)
+                    or (len(ts) > 1 and np.any(np.diff(ts) < 0))):
+                raise ValueError(
+                    "compute_metrics stream is out of timestamp order; "
+                    "feed it a merged bag or a time-ordered iterator")
+            last = int(ts[-1])
+            ts_low = (ts.astype(np.uint64) & _U32).astype(np.uint32)
+            digests = self._record_digests(arrays["payload"],
+                                           arrays["lengths"], ts_low)
+            accumulate_topic_state(state, batch, arrays, digests)
+        return finalize_topic_state(state)
 
     # -- golden comparison --------------------------------------------------
 
@@ -252,7 +434,11 @@ class Aggregator:
     def _compare_payloads(self, topic: str, actual: Bag,
                           golden: Bag) -> list[Diff]:
         from repro.data.pipeline import assemble_message_batch
-        max_abs_diff = _jitted()["max_abs_diff"]
+        if self.engine == "jax":
+            jit_mad = _jitted()["max_abs_diff"]
+            max_abs_diff = lambda *a: int(jit_mad(*a))   # noqa: E731
+        else:
+            max_abs_diff = _max_abs_diff_np
         a_msgs = list(iter_time_ordered(actual, topics=[topic]))
         g_msgs = list(iter_time_ordered(golden, topics=[topic]))
         diffs: list[Diff] = []
@@ -289,7 +475,10 @@ class Aggregator:
 
     def aggregate(self, scenario: str, sources: Iterable[BagSource],
                   golden: Optional[BagSource] = None,
-                  messages_in: Optional[int] = None) -> tuple[Bag, Verdict]:
+                  messages_in: Optional[int] = None,
+                  partials: Optional[
+                      Sequence[dict[str, TopicMetrics]]] = None,
+                  ) -> tuple[Bag, Verdict]:
         """Merge shard/partition outputs and score them.
 
         Returns ``(merged bag, verdict)``.  With no golden source the
@@ -297,9 +486,16 @@ class Aggregator:
         input selection is a *vacuous* pass unless the golden bag demanded
         output.  ``messages_in`` (when known from the replay report) feeds
         the vacuous-pass determination.
+
+        ``partials`` — per-source metric dicts the workers computed next
+        to replay — short-circuits the metric stage to a pure
+        :meth:`TopicMetrics.merge` fold: the merged payload matrix is
+        never re-swept (zero-extra-pass metrics).  Callers must pass one
+        partial per source, covering exactly the merged messages.
         """
         merged = self.merge(sources)
-        metrics = self.compute_metrics(merged)
+        metrics = (combine_metrics(partials) if partials is not None
+                   else self.compute_metrics(merged))
         golden_path = golden if isinstance(golden, str) else None
         diffs: list[Diff] = []
         if golden is not None:

@@ -25,7 +25,7 @@ import os
 import struct
 import threading
 from dataclasses import dataclass, field
-from typing import Iterable, Iterator, Optional, Sequence, Union
+from typing import Callable, Iterable, Iterator, Optional, Sequence, Union
 
 _MAGIC = b"REPROBAG"
 _VERSION = 2
@@ -487,17 +487,44 @@ def iter_time_ordered(bag: Bag, topics: Optional[Sequence[str]] = None,
         yield heapq.heappop(heap)[2]
 
 
-BagSource = Union["Bag", bytes, bytearray, memoryview, str]
+BagSource = Union["Bag", bytes, bytearray, memoryview, str,
+                  Iterable[Message], "Callable[[], object]"]
 
 
 def _open_source(source: BagSource) -> tuple[Bag, bool]:
-    """Open a merge source; returns (bag, owned).  Accepts an already-open
-    ``Bag``, a memory-bag image (``bytes``), or a disk path (``str``)."""
+    """Open a bag-backed merge source; returns (bag, owned).  Accepts an
+    already-open ``Bag``, a memory-bag image (``bytes``), or a disk path
+    (``str``)."""
     if isinstance(source, Bag):
         return source, False
     if isinstance(source, (bytes, bytearray, memoryview)):
         return Bag.open_read(backend="memory", image=bytes(source)), True
     return Bag.open_read(str(source), backend="disk"), True
+
+
+def _iter_source(source: BagSource) -> Iterator[Message]:
+    """Time-ordered message stream out of any merge source.
+
+    Bag-backed sources (``Bag`` / image / path) are opened lazily inside
+    the generator and closed as soon as they are exhausted, so a k-way
+    merge holds each owned source only while it is still feeding the
+    heap.  A zero-argument callable is resolved on first pull (deferred
+    open — e.g. a temp-file spill that appears once a worker lands); any
+    other iterable is streamed as-is — the hook that lets shard iterators
+    (worker result streams, spilled partitions) merge without ever
+    materialising their partition image on the driver.
+    """
+    if callable(source):
+        source = source()
+    if isinstance(source, (Bag, bytes, bytearray, memoryview, str)):
+        bag, owned = _open_source(source)
+        try:
+            yield from iter_time_ordered(bag)
+        finally:
+            if owned:
+                bag.close()
+    else:
+        yield from source
 
 
 def merge_bags(sources: Iterable[BagSource], path: Optional[str] = None,
@@ -506,11 +533,17 @@ def merge_bags(sources: Iterable[BagSource], path: Optional[str] = None,
     rebuilt time/topic index — the bag-layer half of the aggregation stage
     (shard/partition output images -> one fleet-level result bag).
 
-    ``sources`` are ``Bag`` instances, memory-bag images (``bytes``) or
-    disk paths; source order breaks timestamp ties, so merging partition
-    images in (shard, partition) order is deterministic.  Returns a
-    read-mode ``Bag``: memory-backed when ``path`` is None, else persisted
-    to ``path`` on disk.  Merging zero sources yields a valid empty bag.
+    ``sources`` are ``Bag`` instances, memory-bag images (``bytes``),
+    disk paths, time-ordered ``Message`` iterators, or zero-argument
+    callables resolving to any of those; source order breaks timestamp
+    ties, so merging partition images in (shard, partition) order is
+    deterministic.  Iterator/callable sources are the **streaming mode**:
+    nothing is materialised per source on the driver — shard outputs
+    spilled to disk merge through index-only disk readers, and exhausted
+    sources are closed mid-merge instead of being held until the end.
+    Returns a read-mode ``Bag``: memory-backed when ``path`` is None,
+    else persisted to ``path`` on disk.  Merging zero sources yields a
+    valid empty bag.
 
     Each source must come out of :func:`iter_time_ordered` monotonic —
     true for anything recorded from time-ordered replay.  A pathological
@@ -518,12 +551,10 @@ def merge_bags(sources: Iterable[BagSource], path: Optional[str] = None,
     poison ``heapq.merge``, so monotonicity is checked and raises
     ``ValueError`` instead.
     """
-    bags: list[tuple[Bag, bool]] = [_open_source(s) for s in sources]
-
-    def keyed(idx: int, bag: Bag) -> Iterator[tuple[tuple[int, int, int],
-                                                    Message]]:
+    def keyed(idx: int, source: BagSource,
+              ) -> Iterator[tuple[tuple[int, int, int], Message]]:
         last = None
-        for seq, msg in enumerate(iter_time_ordered(bag)):
+        for seq, msg in enumerate(_iter_source(source)):
             if last is not None and msg.timestamp < last:
                 raise ValueError(
                     f"merge source {idx} is out of timestamp order beyond "
@@ -534,13 +565,10 @@ def merge_bags(sources: Iterable[BagSource], path: Optional[str] = None,
 
     backend = "disk" if path is not None else "memory"
     out = Bag.open_write(path=path, backend=backend, chunk_bytes=chunk_bytes)
-    streams = [keyed(i, b) for i, (b, _) in enumerate(bags)]
+    streams = [keyed(i, s) for i, s in enumerate(sources)]
     for _, msg in heapq.merge(*streams, key=lambda kv: kv[0]):
         out.write_message(msg)
     out.close()
-    for bag, owned in bags:
-        if owned:
-            bag.close()
     if path is not None:
         return Bag.open_read(path, backend="disk")
     return Bag.open_read(backend="memory", image=out.chunked_file.image())

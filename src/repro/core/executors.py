@@ -32,7 +32,10 @@ from __future__ import annotations
 import multiprocessing
 import multiprocessing.connection
 import os
+import pickle
 import queue
+import shutil
+import tempfile
 import threading
 import time
 from typing import Any, Callable, Optional
@@ -287,7 +290,9 @@ class ThreadBackend(ExecutorBackend):
 
 def _process_worker_main(worker_id: str, conn,
                          fail_after: Optional[int],
-                         slow_factor: float) -> None:
+                         slow_factor: float,
+                         spill_bytes: Optional[int] = None,
+                         spill_dir: Optional[str] = None) -> None:
     """Worker-process loop: recv task, execute, report.
 
     A daemon beater thread heartbeats continuously — like a node's
@@ -295,6 +300,12 @@ def _process_worker_main(worker_id: str, conn,
     stragglers rather than node loss.  Crash semantics mirror the thread
     Worker: on ``fail_after`` the whole process exits without reporting
     (beater included — heartbeats stop), like a segfaulted node.
+
+    Results whose pickle exceeds ``spill_bytes`` (partition bag images,
+    merged scenario outputs) are routed through a temp-file spill: the
+    worker writes the pickle to disk and ships only the path, so bulk
+    payload bytes ride the filesystem cache instead of being copied
+    through the result pipe — the first bite of the shared-memory plan.
     """
     send_lock = threading.Lock()
 
@@ -333,13 +344,37 @@ def _process_worker_main(worker_id: str, conn,
         except BaseException as e:     # noqa: BLE001 - report any failure
             out = ("done", worker_id, task_id, attempt, None, e)
         try:
-            with send_lock:
-                conn.send(out)
-        except (EOFError, OSError, BrokenPipeError):
-            return
+            blob = pickle.dumps(out)
         except Exception as e:         # unpicklable result/exception
             send(("done", worker_id, task_id, attempt, None,
                   RuntimeError(f"unpicklable task output: {e!r}")))
+            continue
+        if spill_bytes is not None and len(blob) > spill_bytes:
+            spill_path = None
+            try:
+                # files live in the backend-owned spill dir, which the
+                # driver removes wholesale at shutdown — a worker killed
+                # with a spill message still in the pipe can't leak
+                fd, spill_path = tempfile.mkstemp(prefix="repro-spill-",
+                                                  suffix=".pkl",
+                                                  dir=spill_dir)
+                with os.fdopen(fd, "wb") as f:
+                    f.write(blob)
+                if send(("spill", worker_id, task_id, attempt, spill_path)):
+                    continue
+                os.unlink(spill_path)  # driver gone; don't leak the file
+                return
+            except OSError:            # disk trouble: fall through to pipe
+                if spill_path is not None:
+                    try:
+                        os.unlink(spill_path)
+                    except OSError:
+                        pass
+        try:
+            with send_lock:
+                conn.send_bytes(blob)
+        except (EOFError, OSError, BrokenPipeError):
+            return
 
 
 class _ProcWorker:
@@ -371,11 +406,18 @@ class ProcessBackend(ExecutorBackend):
 
     name = "process"
 
-    def __init__(self, mp_context: Optional[str] = None):
+    #: results whose pickle exceeds this ride a temp file, not the pipe
+    DEFAULT_SPILL_BYTES = 1 << 20
+
+    def __init__(self, mp_context: Optional[str] = None,
+                 spill_bytes: Optional[int] = DEFAULT_SPILL_BYTES):
         try:
             self._ctx = multiprocessing.get_context(mp_context or "fork")
         except ValueError:             # platform without fork
             self._ctx = multiprocessing.get_context()
+        self.spill_bytes = spill_bytes       # None disables spilling
+        self.spills = 0                      # results that rode a temp file
+        self._spill_dir: Optional[str] = None
         self._workers: dict[str, _ProcWorker] = {}
         self._pending: list[TaskPayload] = []
         self._send_failures: list[tuple[TaskPayload, BaseException]] = []
@@ -462,7 +504,24 @@ class ProcessBackend(ExecutorBackend):
                     continue
                 if msg[0] == "beat":
                     self._beat(msg[1])
-                elif msg[0] == "done":
+                    continue
+                if msg[0] == "spill":
+                    # bulk result parked in a temp file: load and unlink
+                    _, wid, task_id, attempt, spill_path = msg
+                    try:
+                        with open(spill_path, "rb") as f:
+                            msg = pickle.load(f)
+                        self.spills += 1
+                    except Exception as e:     # lost/corrupt spill: retry
+                        msg = ("done", wid, task_id, attempt, None,
+                               RuntimeError(f"result spill unreadable: "
+                                            f"{e!r}"))
+                    finally:
+                        try:
+                            os.unlink(spill_path)
+                        except OSError:
+                            pass
+                if msg[0] == "done":
                     _, wid, task_id, attempt, result, error = msg
                     with self._lock:
                         w.outstanding.pop((task_id, attempt), None)
@@ -473,10 +532,13 @@ class ProcessBackend(ExecutorBackend):
 
     def add_worker(self, worker_id: str, fail_after: Optional[int] = None,
                    slow_factor: float = 1.0) -> None:
+        if self.spill_bytes is not None and self._spill_dir is None:
+            self._spill_dir = tempfile.mkdtemp(prefix="repro-spill-")
         parent, child = self._ctx.Pipe(duplex=True)
         proc = self._ctx.Process(
             target=_process_worker_main,
-            args=(worker_id, child, fail_after, slow_factor),
+            args=(worker_id, child, fail_after, slow_factor,
+                  self.spill_bytes, self._spill_dir),
             name=f"worker-{worker_id}", daemon=True)
         proc.start()
         child.close()
@@ -546,6 +608,10 @@ class ProcessBackend(ExecutorBackend):
                 w.conn.close()
             except OSError:
                 pass
+        if self._spill_dir is not None:
+            # reap spill files orphaned by killed workers / unread pipes
+            shutil.rmtree(self._spill_dir, ignore_errors=True)
+            self._spill_dir = None
 
 
 def make_backend(backend: "str | ExecutorBackend") -> ExecutorBackend:

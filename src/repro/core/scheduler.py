@@ -99,6 +99,7 @@ class Scheduler:
         self._spec_factor = speculation_factor
         self._spec_min_done = speculation_min_done
         self._outstanding = 0
+        self._newly_done: list[int] = []     # completions not yet notified
         self._failed_job: Optional[BaseException] = None
         self.stats = {"retries": 0, "speculative_launches": 0,
                       "worker_deaths": 0, "tasks_done": 0}
@@ -195,6 +196,7 @@ class Scheduler:
                             task.finished_at - start)
                 self._outstanding -= 1
                 self.stats["tasks_done"] += 1
+                self._newly_done.append(task_id)
             elif attempt == task.attempt:
                 self._retry_locked(task, error)
             # else: stale failure from a superseded attempt — a newer
@@ -280,27 +282,70 @@ class Scheduler:
         for payload in backups:
             self._backend.submit(payload)
 
-    def run(self, timeout: float = 120.0) -> dict[int, Any]:
-        """Drive to completion; returns {task_id: result}."""
+    def run(self, timeout: float = 120.0,
+            on_task_done: Optional[Callable[[int, Any], None]] = None,
+            ) -> dict[int, Any]:
+        """Drive to completion; returns {task_id: result}.
+
+        ``on_task_done(task_id, result)`` — if given — is invoked from the
+        *driver loop* (never a worker thread) once per completed task, in
+        completion order.  The callback may call :meth:`submit`, which is
+        how pipeline stages chain: e.g. the scenario suite schedules a
+        scenario's aggregation task the moment its last replay partition
+        reports, so aggregation overlaps the remaining replay work.  The
+        loop only exits when nothing is outstanding *and* every completion
+        has been notified, so late submissions from callbacks are never
+        dropped.
+        """
         deadline = time.monotonic() + timeout
         while True:
             with self._lock:
+                fresh, self._newly_done = self._newly_done, []
+            if on_task_done is not None:
+                for tid in fresh:
+                    with self._lock:
+                        task = self._tasks.get(tid)
+                        result = task.result if task is not None else None
+                    on_task_done(tid, result)
+            with self._lock:
                 outstanding = self._outstanding
                 failed = self._failed_job
+                drained = not self._newly_done
             if failed is not None:
                 raise WorkerError(f"job failed: {failed}") from failed
-            if outstanding == 0:
+            if outstanding == 0 and drained and not fresh:
                 break
-            if time.monotonic() > deadline:
-                raise TimeoutError("scheduler run timed out")
-            if self.num_alive_workers == 0:
-                raise WorkerError("no alive workers and tasks outstanding")
+            if outstanding > 0:
+                if time.monotonic() > deadline:
+                    raise TimeoutError("scheduler run timed out")
+                if self.num_alive_workers == 0:
+                    raise WorkerError(
+                        "no alive workers and tasks outstanding")
+            # fault/straggler sweeps run every iteration — a steady stream
+            # of completions must not starve dead-worker detection
             self._check_faults()
             self._check_stragglers()
-            time.sleep(0.005)
+            if not fresh:
+                time.sleep(0.005)   # idle tick; skip the nap mid-burst
         with self._lock:
             return {tid: t.result for tid, t in self._tasks.items()
                     if t.state == TaskState.DONE}
+
+    def discard(self, task_id: int) -> None:
+        """Drop a DONE task's result and args from driver memory.
+
+        The task record (state, lineage, timings) survives, so stats and
+        ``task_finished_at`` keep working — only the payload references
+        are released.  This is what keeps driver residency at O(one
+        in-flight scenario) instead of O(total fleet output): callers that
+        consume a result inside an ``on_task_done`` callback discard it
+        immediately after.
+        """
+        with self._lock:
+            task = self._tasks.get(task_id)
+            if task is not None and task.state == TaskState.DONE:
+                task.result = None
+                task.args = ()
 
     def task_finished_at(self, task_id: int) -> Optional[float]:
         with self._lock:

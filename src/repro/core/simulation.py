@@ -30,7 +30,10 @@ and then launches a ROS node to process the incoming data."  Here each task:
    can be a jitted array step over assembled batches
    (:func:`repro.data.pipeline.assemble_message_batch` +
    :func:`repro.kernels.sensor_decode.sensor_decode`),
-4. records outputs into a memory bag whose image is the task result.
+4. records outputs into a memory bag and ships its image plus KB-sized
+   partial per-topic metrics (fork-safe numpy digests) as the task result;
+   per-scenario aggregation then runs as its own scheduled task
+   (lineage stage ``"aggregate"``), overlapping remaining replay work.
 
 ``user_logic`` contracts:
   per-message : ``Message -> Optional[(topic, bytes)]`` (output inherits the
@@ -47,7 +50,6 @@ import importlib
 import os
 import random
 import time
-import warnings
 import zlib
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence, Union
@@ -143,8 +145,9 @@ class SimulationReport:
     ``output_image`` is the merged, timestamp-ordered output bag (all
     shards, all partitions — one image), and ``metrics`` the per-topic
     :class:`TopicMetrics` the aggregator computed over it.  The seed-era
-    per-partition ``output_images`` list survives as a deprecated
-    accessor.
+    per-partition image list (``partition_images`` / the deprecated
+    ``output_images`` accessor) is gone: the driver holds exactly one
+    merged image per scenario.
     """
     messages_in: int
     messages_out: int
@@ -158,7 +161,6 @@ class SimulationReport:
     shards: int = 1
     output_image: Optional[bytes] = None     # merged output bag image
     metrics: dict[str, TopicMetrics] = field(default_factory=dict)
-    partition_images: list = field(default_factory=list, repr=False)
 
     @property
     def throughput_msgs_s(self) -> float:
@@ -170,24 +172,18 @@ class SimulationReport:
             raise ValueError("report has no merged output image")
         return Bag.open_read(backend="memory", image=self.output_image)
 
-    @property
-    def output_images(self) -> list:
-        """Deprecated seed-era accessor: per-partition output bag images in
-        (shard, partition) order.  Prefer ``output_image`` /
-        ``open_output_bag()`` — the merged, timestamp-ordered result."""
-        warnings.warn(
-            "SimulationReport.output_images is deprecated; use the merged "
-            "output_image / open_output_bag() instead",
-            DeprecationWarning, stacklevel=2)
-        return list(self.partition_images)
-
 
 def _run_scenario_partition(scenario: Scenario, shard_path: str,
                             chunk_range: tuple[int, int],
-                            ) -> tuple[int, int, int, bytes]:
+                            ) -> tuple[int, int, int, bytes, dict]:
     """One worker task: play one shard partition through the user logic.
 
-    Returns (messages_in, messages_out, messages_dropped, output bag image).
+    Returns (messages_in, messages_out, messages_dropped, output bag image,
+    partial metrics).  The partial metrics — per-topic mergeable
+    :class:`TopicMetrics` over this partition's *output* — are computed
+    here, on the worker, next to replay: the driver combines KB-sized
+    partials instead of re-reading MB-sized payload matrices
+    (zero-extra-driver-pass metric extraction).
     """
     logic = resolve_logic_ref(scenario.user_logic)
     topics = list(scenario.topics) if scenario.topics is not None else None
@@ -279,7 +275,34 @@ def _run_scenario_partition(scenario: Scenario, shard_path: str,
     src.close()
     if scenario.use_memory_cache:
         play_bag.close()
-    return n_in, n_out, n_drop, image
+    partials = {}
+    if n_out:
+        partials = Aggregator().compute_metrics(
+            Bag.open_read(backend="memory", image=image))
+    return n_in, n_out, n_drop, image, partials
+
+
+def _run_scenario_aggregate(aggregator: Aggregator, scenario_name: str,
+                            images: Sequence[bytes],
+                            partials: Sequence[dict],
+                            golden_path: Optional[str],
+                            messages_in: int) -> tuple[bytes, Verdict]:
+    """One worker task: the aggregation stage of one scenario.
+
+    Merges the (shard, partition)-ordered output images into one
+    timestamp-ordered bag, folds the worker-computed partial metrics
+    (no payload re-sweep), compares against the golden bag, and returns
+    ``(merged image, verdict)``.  Scheduled on the shared pool with
+    lineage stage ``"aggregate"`` so it overlaps remaining replay work
+    and gets the scheduler's full retry/speculation semantics — it is a
+    pure function of its arguments, so recompute is safe.
+    """
+    merged, verdict = aggregator.aggregate(
+        scenario_name, images, golden=golden_path,
+        messages_in=messages_in, partials=list(partials))
+    image = merged.chunked_file.image()
+    merged.close()
+    return image, verdict
 
 
 def _run_partition(bag_path: str, chunk_range: tuple[int, int],
@@ -292,7 +315,8 @@ def _run_partition(bag_path: str, chunk_range: tuple[int, int],
     sc = Scenario(name="partition", bag_path=bag_path, user_logic=user_logic,
                   latency_model_s=latency_model_s,
                   use_memory_cache=use_memory_cache)
-    n_in, n_out, _, image = _run_scenario_partition(sc, bag_path, chunk_range)
+    n_in, n_out, _, image, _ = _run_scenario_partition(sc, bag_path,
+                                                       chunk_range)
     return n_in, n_out, image
 
 
@@ -326,6 +350,15 @@ class ScenarioSuite:
     or process backend — drains the matrix with the scheduler's full
     fault-tolerance/speculation semantics.  Shards whose topic filter /
     time window provably selects nothing are pruned at planning time.
+
+    Aggregation is itself scheduled: the moment a scenario's last replay
+    partition reports, its merge + metrics + golden-compare run as one
+    ordinary task (lineage stage ``"aggregate"``) on the same pool,
+    overlapping the other scenarios' remaining replay work instead of
+    running serially on the driver after the drain.  Workers ship partial
+    per-topic metrics (KBs) next to each partition image, so the metric
+    stage is a pure combine — the driver never re-reads payload bytes,
+    and per-task results are discarded as soon as they are consumed.
 
     ``run`` returns ``{scenario.name: Verdict}``: each verdict carries the
     golden-comparison outcome (or an unconditional pass when the scenario
@@ -382,9 +415,62 @@ class ScenarioSuite:
         t0 = time.monotonic()
         # tid -> (scenario i, (shard j, partition k)) for result assembly
         owner: dict[int, tuple[int, tuple[int, int]]] = {}
+        pending = [len(tasks) for _, tasks in plans]
+        # scenario i -> (shard, partition) -> (image, partial metrics);
+        # released to the aggregation task as soon as the scenario drains
+        parts: list[Optional[dict]] = [{} for _ in plans]
+        counts = [[0, 0, 0] for _ in plans]      # in / out / dropped
+        replay_end = [0.0 for _ in plans]        # last replay-task finish
+        agg_owner: dict[int, int] = {}           # aggregation tid -> i
+        agg_out: dict[int, tuple[bytes, Verdict]] = {}
+
         with Scheduler(num_workers=self.num_workers, backend=self.backend,
                        **self.scheduler_kwargs) as sched:
             backend_name = sched.backend.name
+            pool_agg = self.aggregator
+            if backend_name == "process" and pool_agg.engine != "numpy":
+                # never initialize jax inside a forked worker of a
+                # jax-loaded driver (deadlock risk) — the numpy engine is
+                # bit-identical, so the downgrade can't move a verdict
+                pool_agg = Aggregator(tolerance=pool_agg.tolerance,
+                                      metric_batch=pool_agg.metric_batch,
+                                      engine="numpy")
+
+            def submit_aggregate(i: int) -> None:
+                sc = plans[i][0]
+                rows = parts[i]
+                ordered = sorted(rows)       # (shard, partition): merge
+                images = [rows[k][0] for k in ordered]       # deterministic
+                partials = [rows[k][1] for k in ordered]
+                tid = sched.submit(
+                    _run_scenario_aggregate, pool_agg, sc.name,
+                    images, partials, sc.golden_bag_path, counts[i][0],
+                    lineage=("aggregate", sc.name))
+                agg_owner[tid] = i
+                parts[i] = None              # driver drops its references
+
+            def on_task_done(tid: int, result) -> None:
+                if tid in owner:
+                    i, key = owner[tid]
+                    n_in, n_out, n_drop, image, partial = result
+                    counts[i][0] += n_in
+                    counts[i][1] += n_out
+                    counts[i][2] += n_drop
+                    parts[i][key] = (image, partial)
+                    end = sched.task_finished_at(tid)
+                    if end is not None:
+                        replay_end[i] = max(replay_end[i], end)
+                    sched.discard(tid)
+                    pending[i] -= 1
+                    if pending[i] == 0:
+                        # the scenario's last partition just reported:
+                        # its aggregation overlaps the other scenarios'
+                        # remaining replay work on the same pool
+                        submit_aggregate(i)
+                else:
+                    agg_out[agg_owner[tid]] = result
+                    sched.discard(tid)
+
             for i, (sc, tasks) in enumerate(plans):
                 part_of_shard: dict[int, int] = {}
                 for si, shard, (lo, hi) in tasks:
@@ -396,38 +482,35 @@ class ScenarioSuite:
                     owner[tid] = (i, (si, k))
             if self.on_scheduler is not None:
                 self.on_scheduler(sched)
-            results = sched.run(timeout=timeout)
+            sched.run(timeout=timeout, on_task_done=on_task_done)
             stats = dict(sched.stats)
-            finished = {tid: sched.task_finished_at(tid) for tid in results}
 
         verdicts: dict[str, Verdict] = {}
         for i, (sc, tasks) in enumerate(plans):
-            tids = [tid for tid, (si, _) in owner.items() if si == i]
-            rows = {owner[tid][1]: results[tid] for tid in tids}
-            ends = [finished[tid] for tid in tids if finished[tid] is not None]
-            wall = (max(ends) - t0) if ends else 0.0
-            # (shard, partition) order keeps the merge deterministic
-            images = [r[3] for _, r in sorted(rows.items())]
-            messages_in = sum(r[0] for r in rows.values())
-            merged, verdict = self.aggregator.aggregate(
-                sc.name, images, golden=sc.golden_bag_path,
-                messages_in=messages_in)
+            if tasks:
+                image, verdict = agg_out[i]
+            else:
+                # pruned-empty scenario: a clean zero-message vacuous
+                # verdict, no tasks burned on the pool
+                merged, verdict = self.aggregator.aggregate(
+                    sc.name, [], golden=sc.golden_bag_path, messages_in=0)
+                image = merged.chunked_file.image()
+                merged.close()
+            wall = (replay_end[i] - t0) if replay_end[i] else 0.0
             report = SimulationReport(
-                messages_in=messages_in,
-                messages_out=sum(r[1] for r in rows.values()),
+                messages_in=counts[i][0],
+                messages_out=counts[i][1],
                 wall_time_s=wall,
                 partitions=len(tasks),
                 scheduler_stats=stats,
                 scenario=sc.name,
                 backend=backend_name,
                 batch_size=sc.batch_size,
-                messages_dropped=sum(r[2] for r in rows.values()),
+                messages_dropped=counts[i][2],
                 shards=len(sc.shard_paths),
-                output_image=merged.chunked_file.image(),
+                output_image=image,
                 metrics=verdict.metrics,
-                partition_images=images,
             )
-            merged.close()
             verdict.report = report
             verdicts[sc.name] = verdict
         return verdicts

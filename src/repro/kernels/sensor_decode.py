@@ -20,6 +20,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -78,6 +79,140 @@ def sensor_decode(payload: jax.Array, scale: jax.Array, zero_point: jax.Array,
     return out[:R, :Nb]
 
 
+def _decode_metrics_kernel(payload_ref, scale_ref, zp_ref, len_ref, ts_ref,
+                           out_ref, dig_ref, cnt_ref, min_ref, max_ref, *,
+                           blk_n: int):
+    """Fused decode + per-record reductions (one VMEM sweep).
+
+    The byte-block grid dimension is sequential ("arbitrary"): the
+    reduction outputs live in (blk_r, 1) accumulator tiles revisited across
+    byte blocks — initialised at the first block, accumulated after, and
+    finalised (timestamp/length mixing of the digest) at the last block.
+    Digest arithmetic is wrapping uint32, identical op-for-op to the jitted
+    ``record_digest`` reduction in :mod:`repro.core.aggregation`, so the
+    fused checksums are bit-identical to the two-pass ones and golden
+    verdicts are stable across the upgrade.
+    """
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+    u8 = payload_ref[...]                               # (blk_r, blk_n)
+    u = u8.astype(jnp.float32)
+    scale = scale_ref[...].astype(jnp.float32)          # (blk_r, 1)
+    zp = zp_ref[...].astype(jnp.float32)                # (blk_r, 1)
+    ln = len_ref[...]                                   # (blk_r, 1) int32
+    col = j * blk_n + jax.lax.broadcasted_iota(
+        jnp.int32, u.shape, 1)                          # absolute byte index
+    mask = col < ln
+    out_ref[...] = jnp.where(mask, (u - zp) * scale, 0.0)
+
+    # per-record reduction partials over this byte block
+    w = (col.astype(jnp.uint32) * jnp.uint32(2246822519)
+         + jnp.uint32(0x9E3779B9))
+    part = jnp.sum(jnp.where(mask, u8.astype(jnp.uint32) * w, 0),
+                   axis=1, keepdims=True, dtype=jnp.uint32)
+    cnt = jnp.sum(mask, axis=1, keepdims=True, dtype=jnp.int32)
+    b32 = u8.astype(jnp.int32)
+    mn = jnp.min(jnp.where(mask, b32, 256), axis=1, keepdims=True)
+    mx = jnp.max(jnp.where(mask, b32, -1), axis=1, keepdims=True)
+
+    @pl.when(j == 0)
+    def _init():
+        dig_ref[...] = part
+        cnt_ref[...] = cnt
+        min_ref[...] = mn
+        max_ref[...] = mx
+
+    @pl.when(j > 0)
+    def _accumulate():
+        dig_ref[...] = dig_ref[...] + part
+        cnt_ref[...] = cnt_ref[...] + cnt
+        min_ref[...] = jnp.minimum(min_ref[...], mn)
+        max_ref[...] = jnp.maximum(max_ref[...], mx)
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        ts = ts_ref[...]                                # (blk_r, 1) uint32
+        d = (dig_ref[...] ^ ts) * jnp.uint32(2654435761)
+        dig_ref[...] = d + ln.astype(jnp.uint32) * jnp.uint32(40503)
+        # empty records keep the documented (255, 0) sentinel, not the
+        # out-of-range block sentinels
+        min_ref[...] = jnp.minimum(min_ref[...], 255)
+        max_ref[...] = jnp.maximum(max_ref[...], 0)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_r", "blk_n", "interpret"))
+def sensor_decode_metrics(payload: jax.Array, scale: jax.Array,
+                          zero_point: jax.Array, lengths: jax.Array,
+                          ts_low: jax.Array, *, blk_r: int = 128,
+                          blk_n: int = 512,
+                          interpret: bool = True) -> dict[str, jax.Array]:
+    """Single-pass decode **and** metric extraction (ISSUE 3 tentpole).
+
+    Same contract as :func:`sensor_decode` plus ``ts_low``: (R,) uint32
+    timestamps mod 2**32.  One grid sweep emits the decoded features and
+    the per-record reductions the aggregation layer consumes, so metrics
+    ride the replay decode pass instead of re-sweeping the payload matrix:
+
+    ``features``        (R, Nb) f32 — identical to :func:`sensor_decode`,
+    ``record_digests``  (R,) uint32 — wrapping checksum over valid bytes,
+                        mixed with timestamp and length; bit-identical to
+                        the aggregation layer's jitted ``record_digest``,
+    ``counts``          (R,) int32 valid-byte counts (== ``lengths``),
+    ``min_byte`` / ``max_byte``  (R,) int32 over valid bytes (255 / 0 for
+                        empty records).
+
+    The default record block is larger than :func:`sensor_decode`'s: the
+    (blk_r, 1) accumulator tiles amortize the sequential byte-block sweep
+    best over wide record blocks (measured optimum ~128 rows).
+    """
+    R, Nb = payload.shape
+    blk_r = min(blk_r, R)
+    blk_n = min(blk_n, Nb)
+    nr = -(-R // blk_r)
+    nn = -(-Nb // blk_n)
+    pad_r = nr * blk_r - R
+    pad_n = nn * blk_n - Nb
+    if pad_r or pad_n:
+        payload = jnp.pad(payload, ((0, pad_r), (0, pad_n)))
+        scale = jnp.pad(scale, (0, pad_r))
+        zero_point = jnp.pad(zero_point, (0, pad_r))
+        lengths = jnp.pad(lengths, (0, pad_r))
+        ts_low = jnp.pad(ts_low, (0, pad_r))
+
+    col_spec = pl.BlockSpec((blk_r, 1), lambda i, j: (i, 0))
+    feats, dig, cnt, mn, mx = pl.pallas_call(
+        functools.partial(_decode_metrics_kernel, blk_n=blk_n),
+        grid=(nr, nn),
+        in_specs=[
+            pl.BlockSpec((blk_r, blk_n), lambda i, j: (i, j)),
+            col_spec, col_spec, col_spec, col_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((blk_r, blk_n), lambda i, j: (i, j)),
+            col_spec, col_spec, col_spec, col_spec,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nr * blk_r, nn * blk_n), jnp.float32),
+            jax.ShapeDtypeStruct((nr * blk_r, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((nr * blk_r, 1), jnp.int32),
+            jax.ShapeDtypeStruct((nr * blk_r, 1), jnp.int32),
+            jax.ShapeDtypeStruct((nr * blk_r, 1), jnp.int32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(payload, scale[:, None], zero_point[:, None],
+      lengths.astype(jnp.int32)[:, None],
+      ts_low.astype(jnp.uint32)[:, None])
+    return {
+        "features": feats[:R, :Nb],
+        "record_digests": dig[:R, 0],
+        "counts": cnt[:R, 0],
+        "min_byte": mn[:R, 0],
+        "max_byte": mx[:R, 0],
+    }
+
+
 def decode_message_batch(batch: dict, *, interpret: bool = True) -> jax.Array:
     """Run the decode stage on one assembled replay micro-batch.
 
@@ -92,3 +227,19 @@ def decode_message_batch(batch: dict, *, interpret: bool = True) -> jax.Array:
                          jnp.asarray(batch["zero_point"]),
                          jnp.asarray(batch["lengths"]),
                          interpret=interpret)
+
+
+def decode_message_batch_metrics(batch: dict, *,
+                                 interpret: bool = True) -> dict:
+    """Fused decode + metrics over one assembled replay micro-batch: the
+    features ``decode_message_batch`` returns plus the per-record digest /
+    count / min / max reductions, from one payload sweep (see
+    :func:`sensor_decode_metrics`)."""
+    ts_low = (np.asarray(batch["timestamps"]).astype(np.uint64)
+              & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    return sensor_decode_metrics(jnp.asarray(batch["payload"]),
+                                 jnp.asarray(batch["scale"]),
+                                 jnp.asarray(batch["zero_point"]),
+                                 jnp.asarray(batch["lengths"]),
+                                 jnp.asarray(ts_low),
+                                 interpret=interpret)

@@ -11,7 +11,7 @@ import numpy as np
 import pytest
 
 from repro.core import (Aggregator, Bag, Message, Scenario, ScenarioSuite,
-                        merge_bags)
+                        combine_metrics, merge_bags)
 
 # -- merge_bags -------------------------------------------------------------
 
@@ -147,6 +147,135 @@ def test_checksum_position_sensitive():
     a = [Message("/t", 0, b"\x01\x00\x00\x00")]
     b = [Message("/t", 0, b"\x00\x00\x01\x00")]
     assert agg._topic_checksum(a) != agg._topic_checksum(b)
+
+
+def test_digest_engines_bit_identical():
+    """The numpy (fork-safe worker) and jax (device) digest engines must
+    agree bit-for-bit, so engine choice never moves a golden verdict."""
+    jax = pytest.importorskip("jax")        # noqa: F841
+    bag = _metric_bag(n=257)
+    msgs = list(bag.read_messages())
+    a_np = Aggregator(engine="numpy")
+    a_jx = Aggregator(engine="jax")
+    assert a_np._topic_checksum(msgs) == a_jx._topic_checksum(msgs)
+    m_np = a_np.compute_metrics(_metric_bag(n=257))
+    m_jx = a_jx.compute_metrics(_metric_bag(n=257))
+    assert m_np == m_jx
+
+
+# -- mergeable partials -----------------------------------------------------
+
+
+def _split_images(rows, cuts):
+    """Write `rows` into several bag images split at the given indices —
+    simulated per-partition worker outputs."""
+    images = []
+    lo = 0
+    for hi in list(cuts) + [len(rows)]:
+        images.append(_write_bag(None, rows[lo:hi]))
+        lo = hi
+    return images
+
+
+def test_topic_metrics_merge_equals_merged_bag_metrics():
+    """Invariance (ISSUE 3): folding per-partition partials with
+    TopicMetrics.merge is exactly compute_metrics over the merged bag —
+    counts, bounds, gap percentiles and checksums — for any split."""
+    rng = np.random.RandomState(9)
+    rows = [("/cam" if i % 3 else "/lid", i * 1000 + int(rng.randint(200)),
+             rng.bytes(int(rng.randint(1, 96)))) for i in range(301)]
+    agg = Aggregator()
+    want = agg.compute_metrics(
+        Bag.open_read(backend="memory", image=_write_bag(None, rows)))
+    for cuts in [(100, 200), (1,), (7, 8, 9, 300), (150,)]:
+        images = _split_images(rows, cuts)
+        partials = [agg.compute_metrics(
+            Bag.open_read(backend="memory", image=img)) for img in images]
+        got = combine_metrics(partials)
+        assert got == want
+        # association order must not matter either
+        folded = {}
+        for part in reversed(partials):
+            folded = combine_metrics([part, folded])
+        assert folded == want
+
+
+def test_aggregate_with_partials_matches_rescan(tmp_path):
+    """aggregate(partials=...) — the zero-extra-pass path — must produce
+    the same metrics and the same verdict as the payload re-scan."""
+    rng = np.random.RandomState(4)
+    rows = [("/t", i * 50, rng.bytes(32)) for i in range(120)]
+    images = _split_images(rows, (40, 80))
+    agg = Aggregator()
+    partials = [agg.compute_metrics(
+        Bag.open_read(backend="memory", image=img)) for img in images]
+    golden = str(tmp_path / "golden.bag")
+    merge_bags(images, path=golden).close()
+
+    m1, v1 = agg.aggregate("s", images, golden=golden, messages_in=120)
+    m2, v2 = agg.aggregate("s", images, golden=golden, messages_in=120,
+                           partials=partials)
+    assert v1.metrics == v2.metrics
+    assert v1.passed and v2.passed
+    assert m1.chunked_file.image() == m2.chunked_file.image()
+
+
+def test_compute_metrics_rejects_unordered_stream():
+    """An unordered message iterator would silently corrupt time bounds
+    and gap percentiles — it must raise instead (merge_bags contract)."""
+    msgs = [Message("/t", 10, b"x"), Message("/t", 5, b"y")]
+    with pytest.raises(ValueError, match="out of timestamp order"):
+        Aggregator().compute_metrics(iter(msgs))
+    # disorder across batch boundaries is caught too
+    many = ([Message("/t", i, b"x") for i in range(300)]
+            + [Message("/t", 7, b"late")])
+    with pytest.raises(ValueError, match="out of timestamp order"):
+        Aggregator(metric_batch=256).compute_metrics(iter(many))
+
+
+def test_merge_without_timestamps_raises():
+    from repro.core import TopicMetrics
+    a = TopicMetrics("/t", 2, 10, 0, 1, 0.0, 0.0, 0.0, 7)
+    b = TopicMetrics("/t", 3, 12, 2, 4, 0.0, 0.0, 0.0, 9)
+    with pytest.raises(ValueError, match="timestamp-carrying"):
+        a.merge(b)
+    with pytest.raises(ValueError, match="cannot merge"):
+        a.merge(TopicMetrics("/u", 0, 0, None, None, 0.0, 0.0, 0.0, 0))
+
+
+# -- streaming merge sources ------------------------------------------------
+
+
+def test_merge_bags_streaming_iterator_and_callable_sources(tmp_path):
+    """merge_bags accepts message iterators and deferred-open callables —
+    the streaming mode that merges spilled shard outputs without
+    materialising their partition images on the driver."""
+    a_rows = [("/x", t, b"a") for t in (0, 10, 20)]
+    b_rows = [("/x", t, b"b") for t in (5, 15, 25)]
+    c_rows = [("/y", t, b"c") for t in (1, 2, 50)]
+    want = [(m.timestamp, m.data) for m in merge_bags(
+        [_write_bag(None, a_rows), _write_bag(None, b_rows),
+         _write_bag(None, c_rows)]).read_messages()]
+
+    disk = str(tmp_path / "a.bag")
+    _write_bag(disk, a_rows)
+    sources = [
+        iter(Message(t_, ts, d) for t_, ts, d in a_rows),   # raw iterator
+        lambda: _write_bag(None, b_rows),                   # deferred image
+        lambda: iter(Message(t_, ts, d) for t_, ts, d in c_rows),
+    ]
+    got = [(m.timestamp, m.data) for m in merge_bags(sources).read_messages()]
+    assert got == want
+    # disk path source still streams through an index-only reader
+    got2 = merge_bags([disk, _write_bag(None, b_rows),
+                       _write_bag(None, c_rows)])
+    assert [(m.timestamp, m.data) for m in got2.read_messages()] == want
+
+
+def test_merge_bags_streaming_rejects_unordered_iterator():
+    bad = iter([Message("/t", 10, b"x"), Message("/t", 5, b"y")])
+    with pytest.raises(ValueError, match="out of timestamp order"):
+        merge_bags([bad])
 
 
 # -- golden comparison ------------------------------------------------------

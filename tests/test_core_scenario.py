@@ -75,8 +75,9 @@ def test_suite_heterogeneous_scenarios_one_scheduler(bag_path, backend):
         assert r.backend == backend
         assert r.wall_time_s > 0
         assert r.partitions >= 1
-        assert len(r.partition_images) == r.partitions
-        assert r.scheduler_stats["tasks_done"] >= r.partitions
+        assert r.output_image is not None
+        # replay partitions + the scenario's scheduled aggregation task
+        assert r.scheduler_stats["tasks_done"] >= r.partitions + 1
         assert sum(m.count for m in r.metrics.values()) == r.messages_out
 
 
@@ -100,14 +101,15 @@ def test_suite_merged_output_replayable(bag_path):
     assert total == 600
 
 
-def test_output_images_deprecated_accessor(bag_path):
+def test_partition_images_are_not_retained(bag_path):
+    """The seed-era per-partition image list (and its deprecated
+    ``output_images`` accessor) is gone: the driver keeps exactly one
+    merged image per scenario, and it is complete."""
     rep = ScenarioSuite([Scenario("all", bag_path, det_logic)],
                         num_workers=2).run()["all"].report
-    with pytest.warns(DeprecationWarning):
-        imgs = rep.output_images
-    assert imgs == rep.partition_images
-    assert sum(Bag.open_read(backend="memory", image=i).num_messages
-               for i in imgs) == 600
+    assert not hasattr(rep, "partition_images")
+    assert not hasattr(rep, "output_images")
+    assert rep.open_output_bag().num_messages == 600
 
 
 def test_drop_rate_fault_profile(bag_path):
@@ -243,6 +245,88 @@ def test_scenario_requires_exactly_one_bag_source(bag_path):
     fleet = Scenario("list-ok", bag_paths=[bag_path], user_logic=det_logic)
     assert fleet.bag_paths == (bag_path,)        # normalized to tuple
     assert fleet.shard_paths == (bag_path,)
+
+
+# -- scheduled aggregation --------------------------------------------------
+
+
+def slow_logic(msg):
+    import time
+    time.sleep(0.002)
+    return ("/det" + msg.topic, msg.data[:4])
+
+
+def test_aggregation_tasks_overlap_replay(bag_path):
+    """Acceptance (ISSUE 3): per-scenario aggregation runs as ordinary
+    scheduler tasks, so a finished scenario's merge+metrics start while
+    other scenarios' replay tasks are still in flight — not serially on
+    the driver after the drain."""
+    grabbed = {}
+    suite = ScenarioSuite([
+        Scenario("fast", bag_path, det_logic, num_partitions=2),
+        Scenario("slow", bag_path, f"{__name__}:slow_logic",
+                 num_partitions=4),
+    ], num_workers=3, on_scheduler=lambda s: grabbed.update(sched=s))
+    verdicts = suite.run(timeout=120)
+    assert all(v.passed for v in verdicts.values())
+
+    sched = grabbed["sched"]
+    agg_tasks = [t for t in sched._tasks.values()
+                 if t.lineage[:1] == ("aggregate",)]
+    replay_tasks = [t for t in sched._tasks.values()
+                    if t.lineage[:1] == ("scenario",)]
+    assert len(agg_tasks) == 2          # one per scenario, on the pool
+    assert all(t.finished_at is not None for t in agg_tasks)
+    first_agg_start = min(min(t.started_at.values()) for t in agg_tasks)
+    last_replay_end = max(t.finished_at for t in replay_tasks)
+    assert first_agg_start < last_replay_end, \
+        "aggregation did not overlap in-flight replay work"
+    # aggregation results were consumed and released by the driver
+    assert all(t.result is None for t in agg_tasks)
+
+
+def test_aggregate_stage_has_own_speculation_bucket(bag_path):
+    """Aggregate tasks carry lineage ("aggregate", scenario): their
+    durations must not pollute the replay stage's straggler medians."""
+    grabbed = {}
+    ScenarioSuite([Scenario("s", bag_path, det_logic, num_partitions=3)],
+                  num_workers=2,
+                  on_scheduler=lambda s: grabbed.update(sched=s)).run()
+    sched = grabbed["sched"]
+    keys = set(sched._done_durations)
+    assert ("scenario", "s") in keys
+    assert ("aggregate", "s") in keys
+
+
+def test_process_backend_downgrades_jax_engine_aggregator(bag_path, tmp_path):
+    """A jax-engine Aggregator must not be forked into process workers
+    (jax init in a forked child of a jax-loaded driver can deadlock);
+    the suite ships a bit-identical numpy-engine copy instead."""
+    from repro.core import Aggregator
+    golden = str(tmp_path / "g.bag")
+    clean = ScenarioSuite([Scenario("s", bag_path, det_logic)],
+                          num_workers=2).run()["s"]
+    with open(golden, "wb") as f:
+        f.write(clean.report.output_image)
+    v = ScenarioSuite([Scenario("s", bag_path, det_logic,
+                                golden_bag_path=golden)],
+                      num_workers=2, backend="process",
+                      aggregator=Aggregator(engine="jax")).run(
+                          timeout=90)["s"]
+    assert v.passed and v.status == "PASS"
+
+
+def test_process_backend_spills_large_results(bag_path):
+    """Partition bag images above the spill threshold ride a temp file,
+    not the result pipe — and the suite's outputs are unchanged."""
+    from repro.core import ProcessBackend
+    backend = ProcessBackend(spill_bytes=1024)    # every image spills
+    v = ScenarioSuite([Scenario("all", bag_path, det_logic)],
+                      num_workers=2, backend=backend).run(timeout=120)["all"]
+    assert v.passed
+    assert v.report.messages_out == 600
+    assert v.report.open_output_bag().num_messages == 600
+    assert backend.spills >= 1
 
 
 # -- empty-selection scenarios ----------------------------------------------

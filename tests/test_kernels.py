@@ -150,6 +150,65 @@ def test_sensor_decode_vs_ref(R, Nb, blk_r, blk_n):
                                rtol=1e-6, atol=1e-6)
 
 
+@pytest.mark.parametrize("R,Nb,blk_r,blk_n", [
+    (8, 512, 8, 256), (5, 300, 8, 128), (33, 1024, 16, 512), (1, 128, 8, 512),
+])
+def test_sensor_decode_metrics_fuses_decode_and_reductions(R, Nb, blk_r,
+                                                           blk_n):
+    """The fused kernel's features equal sensor_decode's; its per-record
+    reductions (digest / count / min / max) match a numpy oracle over the
+    valid prefix of each record."""
+    from repro.kernels.sensor_decode import sensor_decode_metrics
+    rng = np.random.RandomState(R + Nb)
+    payload = rng.randint(0, 256, (R, Nb)).astype(np.uint8)
+    scale = rng.rand(R).astype(np.float32) * 0.1
+    zp = rng.randint(0, 255, R).astype(np.float32)
+    lengths = rng.randint(0, Nb + 1, R).astype(np.int32)
+    lengths[0] = 0                       # empty-record sentinel path
+    ts_low = rng.randint(0, 2**32, R, dtype=np.uint64).astype(np.uint32)
+    out = sensor_decode_metrics(
+        jnp.asarray(payload), jnp.asarray(scale), jnp.asarray(zp),
+        jnp.asarray(lengths), jnp.asarray(ts_low),
+        blk_r=blk_r, blk_n=blk_n)
+    want = ref.sensor_decode_reference(payload, scale, zp, lengths)
+    np.testing.assert_allclose(np.asarray(out["features"]), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    assert np.array_equal(np.asarray(out["counts"]), lengths)
+    mn, mx = np.asarray(out["min_byte"]), np.asarray(out["max_byte"])
+    for r in range(R):
+        valid = payload[r, :lengths[r]]
+        assert mn[r] == (valid.min() if lengths[r] else 255)
+        assert mx[r] == (valid.max() if lengths[r] else 0)
+
+
+def test_sensor_decode_metrics_digest_bit_identical_to_jitted():
+    """Acceptance (ISSUE 3): the fused kernel's record digests reduce to
+    exactly the aggregation layer's jitted checksum — bit-identical, for
+    every block shape — so golden verdicts survive the fused upgrade."""
+    from repro.core.aggregation import _jitted, combine_digests
+    from repro.kernels.sensor_decode import sensor_decode_metrics
+    rng = np.random.RandomState(3)
+    R, Nb = 21, 640
+    payload = rng.randint(0, 256, (R, Nb)).astype(np.uint8)
+    lengths = rng.randint(0, Nb + 1, R).astype(np.int32)
+    ts_low = rng.randint(0, 2**32, R, dtype=np.uint64).astype(np.uint32)
+    scale = np.ones(R, np.float32)
+    zp = np.zeros(R, np.float32)
+    want_records = np.asarray(_jitted()["record_digest"](
+        jnp.asarray(payload), jnp.asarray(lengths), jnp.asarray(ts_low)))
+    want_total = int(_jitted()["digest"](
+        jnp.asarray(payload), jnp.asarray(lengths), jnp.asarray(ts_low)))
+    for blk_r, blk_n in [(8, 512), (4, 128), (21, 640), (16, 256)]:
+        out = sensor_decode_metrics(
+            jnp.asarray(payload), jnp.asarray(scale), jnp.asarray(zp),
+            jnp.asarray(lengths), jnp.asarray(ts_low),
+            blk_r=blk_r, blk_n=blk_n)
+        got = np.asarray(out["record_digests"])
+        assert got.dtype == np.uint32
+        assert np.array_equal(got, want_records)
+        assert combine_digests(got) == want_total
+
+
 def test_decode_partition_end_to_end():
     """core.binpipe partition -> on-device feature matrix (the full Fig 4
     path: encode -> serialize -> frame -> device decode)."""
