@@ -1,0 +1,232 @@
+"""Staged vs synchronous replay with a deliberately slow subscriber — the
+queue-backed MessageBus pipeline race (ISSUE 4 tentpole).
+
+The paper's platform decouples producers and consumers through the ROS
+message pool so replay never waits on a slow node.  The seed bus delivered
+synchronously: one slow subscriber (user logic, recorder, a safety
+monitor) stalled ``RosPlay`` and the whole partition.  This benchmark
+replays the same bag through the same subscriber set twice:
+
+  * **sync**   — every subscription synchronous: bag read, user logic,
+    the slow monitor and bag serialization alternate on one thread,
+  * **staged** — queued subscriptions + double-buffered prefetch: the
+    read → decode+logic → record stages overlap, the slow monitor drains
+    on its own lane, and ``drain()`` re-synchronises at end of replay.
+
+Both runs must deliver identical message counts and bit-identical
+per-topic output checksums (asserted) — staging is an overlap
+optimisation, not a semantic change.  A second phase runs a small
+``ScenarioSuite`` in both modes and asserts the *verdicts* (and their
+metric checksums) are bit-identical too.
+
+Emits CSV rows plus machine-readable ``BENCH_pipeline.json``.
+``--check`` re-reads the JSON and exits non-zero if staged replay
+regressed below the synchronous baseline — the CI gate.
+
+    PYTHONPATH=src python -m benchmarks.pipeline [--check]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import (Aggregator, Bag, Message, MessageBus, RosPlay,
+                        RosRecord, Scenario, ScenarioSuite)
+
+N_MSGS = 4000
+PAYLOAD_BYTES = 256
+TOPICS = ("/camera", "/lidar")
+BATCH = 64
+LOGIC_SLEEP_S = 0.003        # simulated perception step, per topic-batch
+MONITOR_SLEEP_S = 0.003      # the deliberately slow subscriber, per batch
+REPEATS = 3
+QUEUE_DEPTH = 8
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         os.pardir, "BENCH_pipeline.json")
+
+
+def _make_bag(path: str) -> str:
+    rng = np.random.RandomState(7)
+    bag = Bag.open_write(path, chunk_bytes=32 * 1024)
+    for i in range(N_MSGS):
+        bag.write(TOPICS[i % len(TOPICS)], i * 1000 + int(rng.randint(500)),
+                  rng.bytes(PAYLOAD_BYTES))
+    bag.close()
+    return path
+
+
+def _replay(bag_path: str, staged: bool) -> tuple[float, dict, dict]:
+    """One replay through logic + slow monitor + recorder; returns
+    (wall_s, per-topic output checksums, delivery counts)."""
+    mode = "queued" if staged else "sync"
+    bus = MessageBus()
+    out = Bag.open_write(backend="memory")
+    rec = RosRecord(bus, out, topics=None, exclude_topics=list(TOPICS),
+                    batch=True, mode=mode, queue_maxsize=QUEUE_DEPTH)
+    counts = {"logic": 0, "monitor": 0}
+
+    def logic(msgs):
+        time.sleep(LOGIC_SLEEP_S)               # one model step per batch
+        outs = [Message("/det" + m.topic, m.timestamp, m.data[:32])
+                for m in msgs]
+        bus.publish_batch(outs)
+        counts["logic"] += len(msgs)
+
+    def monitor(msgs):
+        time.sleep(MONITOR_SLEEP_S)             # the laggard consumer
+        counts["monitor"] += len(msgs)
+
+    for t in TOPICS:
+        bus.subscribe_batch(t, logic, mode=mode, maxsize=QUEUE_DEPTH,
+                            group="logic")
+    bus.subscribe_batch(None, monitor, mode=mode, maxsize=QUEUE_DEPTH)
+    rec.start()
+    src = Bag.open_read(bag_path)
+    play = RosPlay(src, bus)
+    t0 = time.perf_counter()
+    n = play.run_batched(BATCH, prefetch=2 if staged else 0)
+    bus.drain()
+    rec.stop()
+    wall = time.perf_counter() - t0
+    bus.close()
+    src.close()
+    out.close()
+    assert n == N_MSGS and rec.messages_recorded == N_MSGS
+    metrics = Aggregator().compute_metrics(
+        Bag.open_read(backend="memory", image=out.chunked_file.image()))
+    return wall, {t: m.checksum for t, m in metrics.items()}, counts
+
+
+def _best_of_pair(fa, fb, repeats: int = REPEATS):
+    """Interleaved best-of (see benchmarks/aggregation.py): alternating
+    repeats see the same clock/cache conditions, so drift never lands on
+    only one contestant.  Each fn returns ``(wall_s, ...)`` — the wall it
+    measured itself, replay-only (setup and the post-hoc checksum pass are
+    excluded, so symmetric overhead can't dilute the ratio toward 1)."""
+    best_a = best_b = None
+    for _ in range(repeats):
+        ra = fa()
+        if best_a is None or ra[0] < best_a[0]:
+            best_a = ra
+        rb = fb()
+        if best_b is None or rb[0] < best_b[0]:
+            best_b = rb
+    return best_a, best_b
+
+
+def _det_logic(msg):
+    return ("/det" + msg.topic, msg.data[:16])
+
+
+def _det_batch_logic(msgs):
+    return [("/det" + m.topic, m.timestamp, m.data[:16]) for m in msgs]
+
+
+def _suite_parity(bag_path: str) -> bool:
+    """Run a small suite in sync and staged modes; verdicts and metric
+    checksums must be bit-identical."""
+    def scenarios(staged: bool):
+        return [
+            Scenario("per-msg", bag_path, _det_logic, pipeline=staged,
+                     latency_model_s=0.0001),
+            Scenario("batched", bag_path, _det_batch_logic, batch_size=BATCH,
+                     pipeline=staged, latency_model_s=0.0005),
+        ]
+
+    def run(staged: bool):
+        v = ScenarioSuite(scenarios(staged), num_workers=2).run(timeout=300)
+        return {n: (vv.status,
+                    {t: m.checksum for t, m in vv.metrics.items()})
+                for n, vv in v.items()}
+
+    sync, staged = run(False), run(True)
+    assert sync == staged, f"verdict/checksum drift: {sync} vs {staged}"
+    return True
+
+
+def run_race() -> dict:
+    with tempfile.TemporaryDirectory(prefix="repro-bench-") as d:
+        bag_path = _make_bag(os.path.join(d, "drive.bag"))
+        # warm both paths (jit-free, but fs cache + thread pools)
+        _replay(bag_path, staged=False)
+        _replay(bag_path, staged=True)
+        (sync_s, sync_sums, sync_counts), \
+            (staged_s, staged_sums, staged_counts) = _best_of_pair(
+                lambda: _replay(bag_path, staged=False),
+                lambda: _replay(bag_path, staged=True))
+
+        # hard acceptance: overlap must not move a byte
+        assert sync_sums == staged_sums, "staged replay changed checksums"
+        assert sync_counts == staged_counts
+        verdicts_identical = _suite_parity(bag_path)
+
+    return {
+        "bench": "pipeline",
+        "messages": N_MSGS, "payload_bytes": PAYLOAD_BYTES,
+        "batch_size": BATCH, "queue_depth": QUEUE_DEPTH,
+        "logic_sleep_s": LOGIC_SLEEP_S, "monitor_sleep_s": MONITOR_SLEEP_S,
+        "sync_wall_s": sync_s, "staged_wall_s": staged_s,
+        "sync_msgs_per_s": N_MSGS / sync_s,
+        "staged_msgs_per_s": N_MSGS / staged_s,
+        "staged_vs_sync_speedup": sync_s / staged_s,
+        "checksums_identical": True,
+        "suite_verdicts_identical": verdicts_identical,
+        "checksums": {t: int(c) for t, c in staged_sums.items()},
+    }
+
+
+def main(csv: bool = True, json_path: str = JSON_PATH) -> list[tuple]:
+    payload = run_race()
+    rows = [
+        ("pipeline_sync", payload["sync_wall_s"] * 1e6 / N_MSGS,
+         f"{payload['sync_msgs_per_s']:.0f} msg/s (slow subscriber inline)"),
+        ("pipeline_staged", payload["staged_wall_s"] * 1e6 / N_MSGS,
+         f"{payload['staged_msgs_per_s']:.0f} msg/s (read/logic/record "
+         "overlap)"),
+        ("pipeline_staged_vs_sync_speedup",
+         payload["staged_vs_sync_speedup"],
+         "checksums + suite verdicts bit-identical"),
+    ]
+    if csv:
+        for name, val, derived in rows[:2]:
+            print(f"{name},{val:.2f},{derived}")
+        print(f"{rows[2][0]},{rows[2][1]:.2f}x,{rows[2][2]}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    return rows
+
+
+def check(json_path: str = JSON_PATH) -> int:
+    """CI gate: fail (exit 1) when staged replay is slower than the
+    synchronous baseline of the same run."""
+    with open(json_path) as f:
+        payload = json.load(f)
+    ratio = payload["staged_vs_sync_speedup"]
+    print(f"staged {payload['staged_msgs_per_s']:.0f} msg/s vs sync "
+          f"{payload['sync_msgs_per_s']:.0f} msg/s -> {ratio:.2f}x")
+    if not payload.get("checksums_identical") \
+            or not payload.get("suite_verdicts_identical"):
+        print("FAIL: staged replay is not bit-identical to synchronous",
+              file=sys.stderr)
+        return 1
+    if ratio < 1.0:
+        print("FAIL: staged replay regressed below the synchronous "
+              "baseline", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    if "--check" in sys.argv:
+        args = [a for a in sys.argv[1:] if a != "--check"]
+        sys.exit(check(args[0] if args else JSON_PATH))
+    main()

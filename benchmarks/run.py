@@ -14,6 +14,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
                          single-pass metrics/checksums, golden compare,
                          fused vs two-pass metrics race); writes
                          ``BENCH_aggregation.json`` at the repo root
+    pipeline_*         — staged (queued-bus) vs synchronous replay with a
+                         deliberately slow subscriber; writes
+                         ``BENCH_pipeline.json`` (checksums + suite
+                         verdicts asserted bit-identical across modes)
     binpipe_*          — paper Fig 4 (BinPipedRDD stage throughput)
     roofline_*         — dry-run roofline terms per (arch x shape x mesh)
 """
@@ -26,11 +30,11 @@ import traceback
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import (aggregation, bag_cache, binpipe, roofline_report,
-                            scalability, scenario_matrix)
+    from benchmarks import (aggregation, bag_cache, binpipe, pipeline,
+                            roofline_report, scalability, scenario_matrix)
     failures = 0
     for mod in (bag_cache, scalability, scenario_matrix, aggregation,
-                binpipe, roofline_report):
+                pipeline, binpipe, roofline_report):
         try:
             mod.main(csv=True)
         except Exception:  # noqa: BLE001

@@ -12,8 +12,8 @@ Layers:
     aggregation -- Aggregator: merge -> metrics -> golden compare -> Verdict
 """
 
-from .aggregation import (Aggregator, Diff, TopicMetrics, Verdict,
-                          combine_digests, combine_metrics)
+from .aggregation import (Aggregator, Diff, MetricsTap, TopicMetrics,
+                          Verdict, combine_digests, combine_metrics)
 from .bag import (Bag, ChunkedFile, MemoryChunkedFile, Message,
                   iter_time_ordered, merge_bags, partition_bag)
 from .binpipe import (BinaryPartition, decode, deserialize, encode, frame,
@@ -36,6 +36,6 @@ __all__ = [
     "Scheduler", "Task", "Worker", "WorkerError",
     "Scenario", "ScenarioSuite", "resolve_logic_ref",
     "DistributedSimulation", "SimulationReport", "bag_to_partitions",
-    "Aggregator", "Diff", "TopicMetrics", "Verdict",
+    "Aggregator", "Diff", "MetricsTap", "TopicMetrics", "Verdict",
     "combine_digests", "combine_metrics",
 ]

@@ -236,12 +236,104 @@ def accumulate_topic_state(state: dict[str, list], batch: Sequence[Message],
         st[2].append(arrays["timestamps"][sel])
 
 
-def finalize_topic_state(state: dict[str, list]) -> dict[str, TopicMetrics]:
+def finalize_topic_state(state: dict[str, list],
+                         sort: bool = False) -> dict[str, TopicMetrics]:
     """Turn accumulated per-topic state into finalized (mergeable)
-    :class:`TopicMetrics`, topics sorted."""
+    :class:`TopicMetrics`, topics sorted.  ``sort=True`` sorts each topic's
+    timestamp multiset first — required when the state was accumulated from
+    a stream that is not globally time-ordered (e.g. a live output tap
+    whose user logic emits arbitrary timestamps); sorting never changes
+    checksums (order-free) and makes gap percentiles exact."""
     return {topic: TopicMetrics.from_state(
-                topic, st[0], st[1], np.concatenate(st[2]))
+                topic, st[0], st[1],
+                np.sort(np.concatenate(st[2])) if sort
+                else np.concatenate(st[2]))
             for topic, st in sorted(state.items())}
+
+
+class MetricsTap:
+    """Streaming per-topic metric partials over a live output stream — the
+    metrics face of the staged replay pipeline's sink stage.
+
+    Subscribed next to the recorder (``on_message`` per-message /
+    ``on_batch`` batched), it buffers output messages into metric batches
+    and reduces them to per-record digests as they stream past, so the
+    partition's :class:`TopicMetrics` partials are ready the moment replay
+    drains — the end-of-task re-sweep of the output image (re-open,
+    re-assemble, re-digest) is gone.  ``finalize`` sorts each topic's
+    timestamp multiset, so the result is bit-identical to
+    ``Aggregator.compute_metrics`` over the recorded bag regardless of the
+    logic's output timestamp order.
+
+    ``engine`` picks the digest reduction:
+
+    * ``"numpy"`` — fork-safe vectorized host path (process workers,
+      per-message replay),
+    * ``"jax"``   — the jitted ``record_digest`` reduction,
+    * ``"fused"`` — the Pallas consume step
+      (:func:`repro.kernels.sensor_decode.batch_record_digests`): one
+      fused sweep decodes the batch *and* emits the digests — the stock
+      shape for batched in-process scenarios.  Today the tap keeps only
+      the digest plane; the decoded features become free the moment a
+      downstream consumer (dashboard, scoring model) is attached to the
+      same sweep, which is the device-context plan this shape exists for.
+
+    All three are bit-identical, so engine choice never moves a checksum
+    or a verdict.
+    """
+
+    def __init__(self, engine: str = "numpy", metric_batch: int = 256,
+                 exclude_topics: Sequence[str] = ()):
+        if engine not in ("numpy", "jax", "fused"):
+            raise ValueError(f"unknown digest engine {engine!r}")
+        self.engine = engine
+        self.metric_batch = metric_batch
+        self._exclude = set(exclude_topics)
+        self._buffer: list[Message] = []
+        self._state: dict[str, list] = {}
+        self._finalized: Optional[dict[str, TopicMetrics]] = None
+
+    def on_message(self, msg: Message) -> None:
+        if msg.topic in self._exclude:
+            return
+        self._buffer.append(msg)
+        if len(self._buffer) >= self.metric_batch:
+            self._flush()
+
+    def on_batch(self, msgs: Sequence[Message]) -> None:
+        self._buffer.extend(m for m in msgs if m.topic not in self._exclude)
+        if len(self._buffer) >= self.metric_batch:
+            self._flush()
+
+    def _digests(self, arrays: dict) -> np.ndarray:
+        if self.engine == "fused":
+            from repro.kernels.sensor_decode import batch_record_digests
+            return batch_record_digests(arrays)   # derives ts_low itself
+        ts_low = (arrays["timestamps"].astype(np.uint64)
+                  & _U32).astype(np.uint32)
+        if self.engine == "jax":
+            return np.asarray(_jitted()["record_digest"](
+                arrays["payload"], arrays["lengths"], ts_low))
+        return record_digests_np(arrays["payload"], arrays["lengths"],
+                                 ts_low)
+
+    def _flush(self) -> None:
+        from repro.data.pipeline import assemble_message_batch
+        if not self._buffer:
+            return
+        batch, self._buffer = self._buffer, []
+        arrays = assemble_message_batch(batch)
+        accumulate_topic_state(self._state, batch, arrays,
+                               self._digests(arrays))
+
+    def finalize(self) -> dict[str, TopicMetrics]:
+        """Flush the tail batch and return the mergeable per-topic
+        partials.  Idempotent — safe to call from cleanup paths."""
+        if self._finalized is None:
+            self._flush()
+            self._finalized = finalize_topic_state(self._state, sort=True)
+            self._state = {}
+        return self._finalized
 
 
 @dataclass(frozen=True)

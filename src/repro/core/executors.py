@@ -417,6 +417,7 @@ class ProcessBackend(ExecutorBackend):
             self._ctx = multiprocessing.get_context()
         self.spill_bytes = spill_bytes       # None disables spilling
         self.spills = 0                      # results that rode a temp file
+        self.arg_spills = 0                  # task args parked on disk
         self._spill_dir: Optional[str] = None
         self._workers: dict[str, _ProcWorker] = {}
         self._pending: list[TaskPayload] = []
@@ -439,6 +440,31 @@ class ProcessBackend(ExecutorBackend):
         self._pump = threading.Thread(target=self._pump_loop,
                                       name="procbackend-pump", daemon=True)
         self._pump.start()
+
+    # -- argument spill ----------------------------------------------------
+
+    def spill_arg(self, data: bytes) -> str:
+        """Park a bulk task *argument* in the backend spill dir; returns
+        the file path to ship instead of the bytes.
+
+        The driver-side twin of the worker result spill: schedulers that
+        would otherwise pickle MB-sized blobs (partition bag images bound
+        for an aggregate task) through a worker pipe write them here once
+        and pass the path — workers read them back as streaming disk
+        readers through the filesystem cache.  Files are written verbatim
+        (a memory-bag image *is* the on-disk bag format, so the spill file
+        doubles as an openable bag) and persist until :meth:`shutdown`
+        reaps the spill dir wholesale, which is what makes task retry and
+        speculation safe: a recomputed task re-reads the same path.
+        """
+        if self._spill_dir is None:
+            self._spill_dir = tempfile.mkdtemp(prefix="repro-spill-")
+        fd, path = tempfile.mkstemp(prefix="repro-arg-", suffix=".bag",
+                                    dir=self._spill_dir)
+        with os.fdopen(fd, "wb") as f:
+            f.write(data)
+        self.arg_spills += 1
+        return path
 
     # -- dispatch ----------------------------------------------------------
 

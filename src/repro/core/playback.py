@@ -10,23 +10,54 @@ an in-process bus rather than TCPROS (see DESIGN.md §8).
               ``run_batched(n)`` delivers timestamp-ordered micro-batches
               through ``MessageBus.publish_batch`` so user logic can be a
               jitted array step instead of a per-message Python call.
+              ``prefetch`` moves bag reading (chunk decode + time-order
+              merge) onto a background reader thread.
 ``RosRecord`` subscribes to topics and writes everything to a Bag.
 
 Together with :mod:`repro.core.bag`'s ``MemoryChunkedFile`` these are the two
 "missing links" of §3.2: play-from-memory and record-to-memory.
+
+Delivery modes
+--------------
+
+The bus delivers each subscription either **synchronously** (the seed
+model: ``publish`` returns after every callback ran — deterministic, but a
+slow subscriber stalls the publisher and the whole replay partition) or
+**queued** (``subscribe(..., mode="queued", maxsize=N)``): the
+subscription gets a bounded FIFO *lane* drained by a dedicated worker
+thread.  Publishers enqueue and move on; a full lane blocks the publisher
+(backpressure), so memory stays bounded and a hopelessly slow consumer
+still paces the pipeline instead of being silently left behind.
+
+Determinism is preserved per lane: one worker thread drains one FIFO, so a
+subscription sees exactly the synchronous delivery sequence, just later.
+Subscriptions that must share one ordered stream (e.g. user logic attached
+to several input topics, whose fault-injection RNG draws must happen in
+publish order) pass the same ``group=`` name and share a single lane.
+``drain()`` is the end-of-replay barrier: it blocks until every lane has
+fully flushed — including work enqueued *by* queued callbacks into other
+lanes — and re-raises the first callback error.  ``close()`` flushes and
+stops the lane workers.  Callback exceptions never kill a lane worker
+mid-replay; they are recorded and surface at the ``drain()`` barrier, like
+the synchronous mode's immediate propagation but deferred to the join.
 """
 
 from __future__ import annotations
 
+import itertools
+import queue
 import threading
 import time
 from collections import defaultdict
-from typing import Callable, Iterable, Optional, Sequence
+from typing import Callable, Iterable, NamedTuple, Optional, Sequence
 
 from .bag import Bag, Message, iter_time_ordered
 
 Callback = Callable[[Message], None]
 BatchCallback = Callable[[list[Message]], None]
+
+#: per-message prefetch depth ``RosPlay.run(prefetch=True)`` defaults to
+MESSAGE_PREFETCH = 256
 
 
 class Publisher:
@@ -43,67 +74,319 @@ class Publisher:
         self._bus._dispatch(msg)
 
 
+class _Lane:
+    """One bounded-FIFO delivery lane drained by its own worker thread.
+
+    Items are ``(callback, payload)`` pairs so several subscriptions (a
+    ``group=``) can share the lane and keep their relative delivery order.
+    ``put`` blocks while the queue is full — the bus's backpressure.
+    Callback errors are recorded (never swallowed silently, never fatal to
+    the worker; bounded — see ``MAX_ERRORS``) and re-raised at the
+    ``drain()``/unsubscribe barrier.
+
+    A publish racing lane shutdown (unsubscribe/close from another thread)
+    must never silently lose a message: after the worker is gone, ``put``
+    delivers inline, and both ``put`` and ``close`` sweep any straggler
+    that slipped into the queue during the race window — the worst case is
+    the old synchronous bus's (a late inline callback), not a drop.
+    """
+
+    #: deferred errors kept per lane; beyond this only a count is kept, so
+    #: a subscriber failing on every message of a huge replay can't pin
+    #: one traceback (and its message payload) per delivery until drain
+    MAX_ERRORS = 8
+
+    __slots__ = ("key", "queue", "errors", "errors_dropped", "refs",
+                 "closed", "_thread")
+
+    def __init__(self, key: str, maxsize: int):
+        self.key = key
+        self.queue: "queue.Queue" = queue.Queue(maxsize=maxsize)
+        self.errors: list[BaseException] = []
+        self.errors_dropped = 0
+        self.refs = 0                  # subscriptions sharing this lane
+        self.closed = False
+        self._thread = threading.Thread(target=self._run,
+                                        name=f"bus-lane-{key}", daemon=True)
+        self._thread.start()
+
+    def _record_error(self, e: BaseException) -> None:
+        if len(self.errors) < self.MAX_ERRORS:
+            self.errors.append(e)
+        else:
+            self.errors_dropped += 1
+
+    def put(self, callback: Callable, item) -> None:
+        if self.closed:
+            # worker stopping/stopped: deliver inline with synchronous
+            # semantics — errors propagate to the publisher, since this
+            # lane may already be detached from the bus and its deferred
+            # error list unread
+            callback(item)
+            return
+        self.queue.put((callback, item))        # blocks when full
+        if self.closed and not self._thread.is_alive():
+            # shutdown raced the enqueue and the worker is already gone —
+            # sweep so the item is never stranded.  (While the worker is
+            # still alive it either drains the item itself or close()'s
+            # post-join sweep does; sweeping only after worker exit means
+            # the stop sentinel can never be stolen from the worker.)
+            self._sweep(record=False)
+
+    def _run(self) -> None:
+        while True:
+            callback, item = self.queue.get()
+            try:
+                if callback is None:            # stop sentinel
+                    return
+                callback(item)
+            except BaseException as e:          # noqa: BLE001 - defer to drain
+                self._record_error(e)
+            finally:
+                self.queue.task_done()
+
+    def _sweep(self, record: bool) -> None:
+        """Deliver (inline) anything still queued after the worker exited.
+        ``record=True`` defers callback errors to the lane's error list
+        (shutdown paths that must not raise); ``record=False`` re-raises
+        the first error to the sweeping publisher after finishing."""
+        first: Optional[BaseException] = None
+        while True:
+            try:
+                callback, item = self.queue.get_nowait()
+            except queue.Empty:
+                break
+            try:
+                if callback is not None:
+                    callback(item)
+            except BaseException as e:   # noqa: BLE001 - collect, finish
+                if record:
+                    self._record_error(e)
+                elif first is None:
+                    first = e
+            finally:
+                self.queue.task_done()   # keep flush()/idle bookkeeping sane
+        if first is not None:
+            raise first
+
+    @property
+    def idle(self) -> bool:
+        return self.queue.unfinished_tasks == 0
+
+    def flush(self) -> None:
+        """Block until every item enqueued so far has been processed."""
+        self.queue.join()
+
+    def close(self) -> None:
+        """Flush the backlog, then stop and join the worker; stragglers
+        from a racing publish are delivered inline, never dropped."""
+        if self.closed:
+            return
+        self.closed = True
+        self.queue.put((None, None))
+        self._thread.join()
+        self._sweep(record=True)
+
+
+class _Sub(NamedTuple):
+    """One subscription entry: a callback, its delivery lane (``None`` lane
+    = synchronous delivery), and an optional bus-side topic exclusion set
+    (messages of excluded topics are skipped *before* any enqueue, so
+    uninterested sinks cost the hot path nothing)."""
+    callback: Callable
+    lane: Optional[_Lane]
+    exclude: Optional[frozenset] = None
+
+    def wants(self, topic: str) -> bool:
+        """The single exclusion predicate — every dispatch path (per-message
+        and batched) must filter through this so the semantics can't
+        diverge between publish shapes."""
+        return self.exclude is None or topic not in self.exclude
+
+    def deliver(self, item) -> None:
+        if self.lane is None:
+            self.callback(item)
+        else:
+            self.lane.put(self.callback, item)
+
+
 class MessageBus:
-    """Topic pub/sub message pool. Thread-safe; delivery is synchronous and
-    in publish order (deterministic for tests and replay)."""
+    """Topic pub/sub message pool.  Thread-safe.  Synchronous subscriptions
+    are delivered in publish order before ``publish`` returns (the seed
+    contract); queued subscriptions decouple the subscriber onto its own
+    bounded FIFO + worker thread — see the module docstring."""
+
+    #: default bounded-FIFO depth for queued subscriptions
+    DEFAULT_MAXSIZE = 8
 
     def __init__(self):
-        self._subs: dict[str, list[Callback]] = defaultdict(list)
-        self._all: list[Callback] = []
-        self._batch_subs: dict[str, list[BatchCallback]] = defaultdict(list)
-        self._batch_all: list[BatchCallback] = []
+        self._subs: dict[str, list[_Sub]] = defaultdict(list)
+        self._all: list[_Sub] = []
+        self._batch_subs: dict[str, list[_Sub]] = defaultdict(list)
+        self._batch_all: list[_Sub] = []
+        self._lanes: dict[str, _Lane] = {}
+        self._anon = itertools.count()
         self._lock = threading.Lock()
         self.published = 0
 
     def advertise(self, topic: str) -> Publisher:
         return Publisher(self, topic)
 
-    def subscribe(self, topic: Optional[str], callback: Callback) -> None:
-        """``topic=None`` subscribes to every topic (rosbag record -a)."""
+    # -- subscription management -------------------------------------------
+
+    def _make_sub(self, callback: Callable, mode: str, maxsize: int,
+                  group: Optional[str],
+                  exclude_topics: Optional[Sequence[str]]) -> _Sub:
+        """Build a subscription entry; caller holds ``self._lock``."""
+        exclude = frozenset(exclude_topics) if exclude_topics else None
+        if mode == "sync":
+            return _Sub(callback, None, exclude)
+        if mode != "queued":
+            raise ValueError(f"unknown delivery mode {mode!r}")
+        key = group if group is not None else f"anon-{next(self._anon)}"
+        lane = self._lanes.get(key)
+        if lane is None:
+            lane = self._lanes[key] = _Lane(key, maxsize)
+        lane.refs += 1
+        return _Sub(callback, lane, exclude)
+
+    @staticmethod
+    def _check_duplicate(entries: list[_Sub], callback: Callable,
+                         where: str) -> None:
+        """Double-subscribing the same callback to the same topic is an
+        error: ``unsubscribe`` removes exactly one registration, so a silent
+        duplicate would leave a phantom subscription behind (the seed-era
+        footgun) — fail at subscribe time instead."""
+        if any(s.callback == callback for s in entries):
+            raise ValueError(
+                f"callback {callback!r} is already subscribed to {where}; "
+                "double subscription would make unsubscribe ambiguous")
+
+    def subscribe(self, topic: Optional[str], callback: Callback, *,
+                  mode: str = "sync", maxsize: int = DEFAULT_MAXSIZE,
+                  group: Optional[str] = None,
+                  exclude_topics: Optional[Sequence[str]] = None) -> None:
+        """``topic=None`` subscribes to every topic (rosbag record -a).
+
+        ``mode="queued"`` hands the subscription a bounded FIFO
+        (``maxsize``; 0 = unbounded) drained by a worker thread;
+        subscriptions sharing a ``group`` name share one FIFO + worker, so
+        their combined delivery order is the publish order.
+        ``exclude_topics`` filters *at dispatch*: excluded messages are
+        never delivered — and in queued mode never enqueued, keeping
+        uninterested sinks (a recorder excluding replay inputs) entirely
+        off the hot path and out of the backpressure budget."""
         with self._lock:
-            if topic is None:
-                self._all.append(callback)
-            else:
-                self._subs[topic].append(callback)
+            entries = self._all if topic is None else self._subs[topic]
+            self._check_duplicate(entries, callback,
+                                  "all topics" if topic is None else topic)
+            entries.append(self._make_sub(callback, mode, maxsize, group,
+                                          exclude_topics))
 
     def unsubscribe(self, topic: Optional[str], callback: Callback) -> None:
-        with self._lock:
-            if topic is None:
-                self._all.remove(callback)
-            else:
-                self._subs[topic].remove(callback)
+        """Remove a subscription.  A queued subscription's lane is flushed
+        first (pending deliveries complete — end-of-replay determinism) and
+        its worker stopped once no other subscription shares it; deferred
+        callback errors re-raise here."""
+        self._remove(self._all if topic is None else self._subs[topic],
+                     callback)
 
-    def subscribe_batch(self, topic: Optional[str],
-                        callback: BatchCallback) -> None:
+    def subscribe_batch(self, topic: Optional[str], callback: BatchCallback,
+                        *, mode: str = "sync",
+                        maxsize: int = DEFAULT_MAXSIZE,
+                        group: Optional[str] = None,
+                        exclude_topics: Optional[Sequence[str]] = None,
+                        ) -> None:
         """Batch subscription: receives ``list[Message]`` micro-batches from
         :meth:`publish_batch`.  Per-topic subscribers get the batch split by
         topic (uniform payload shape for array assembly); ``topic=None``
-        receives the whole mixed-topic batch."""
+        receives the whole mixed-topic batch, minus any ``exclude_topics``
+        (filtered at dispatch — an all-excluded batch is not delivered or
+        enqueued at all).  ``mode="queued"`` enqueues whole micro-batches
+        into the subscription's lane."""
         with self._lock:
-            if topic is None:
-                self._batch_all.append(callback)
-            else:
-                self._batch_subs[topic].append(callback)
+            entries = (self._batch_all if topic is None
+                       else self._batch_subs[topic])
+            self._check_duplicate(
+                entries, callback,
+                "all topics (batch)" if topic is None else f"{topic} (batch)")
+            entries.append(self._make_sub(callback, mode, maxsize, group,
+                                          exclude_topics))
 
     def unsubscribe_batch(self, topic: Optional[str],
                           callback: BatchCallback) -> None:
+        self._remove(self._batch_all if topic is None
+                     else self._batch_subs[topic], callback)
+
+    def _remove(self, entries: list[_Sub], callback: Callable) -> None:
         with self._lock:
-            if topic is None:
-                self._batch_all.remove(callback)
+            for i, s in enumerate(entries):
+                if s.callback == callback:
+                    del entries[i]
+                    lane = s.lane
+                    break
             else:
-                self._batch_subs[topic].remove(callback)
+                raise ValueError(f"callback {callback!r} is not subscribed")
+            if lane is not None:
+                lane.refs -= 1
+                if lane.refs > 0:
+                    lane = None          # shared lane lives on
+                else:
+                    self._lanes.pop(lane.key, None)
+        if lane is not None:
+            lane.close()
+            if lane.errors:
+                raise lane.errors[0]
+
+    # -- barriers -----------------------------------------------------------
+
+    def drain(self) -> None:
+        """End-of-replay barrier: block until every queued lane is empty and
+        idle — including deliveries enqueued *by* queued callbacks into
+        other lanes while draining (a flush pass repeats until a pass finds
+        everything already idle).  Re-raises the first deferred callback
+        error.  A no-op on a bus with only synchronous subscriptions."""
+        while True:
+            with self._lock:
+                lanes = list(self._lanes.values())
+            if all(lane.idle for lane in lanes):
+                break
+            for lane in lanes:
+                lane.flush()
+        errors = [e for lane in lanes for e in lane.errors]
+        if errors:
+            raise errors[0]
+
+    def close(self) -> None:
+        """Flush and stop every queued lane worker and drop their
+        subscriptions.  Never raises for deferred callback errors (shutdown
+        path) — call :meth:`drain` first when errors must surface.  The bus
+        stays usable for synchronous subscriptions afterwards."""
+        with self._lock:
+            lanes = list(self._lanes.values())
+            self._lanes.clear()
+            self._all = [s for s in self._all if s.lane is None]
+            self._batch_all = [s for s in self._batch_all if s.lane is None]
+            for reg in (self._subs, self._batch_subs):
+                for topic in list(reg):
+                    reg[topic] = [s for s in reg[topic] if s.lane is None]
+        for lane in lanes:
+            lane.close()
+
+    # -- dispatch -----------------------------------------------------------
 
     def _dispatch(self, msg: Message) -> None:
         with self._lock:
-            cbs = list(self._subs.get(msg.topic, ())) + list(self._all)
+            subs = list(self._subs.get(msg.topic, ())) + list(self._all)
             self.published += 1
-        for cb in cbs:
-            cb(msg)
+        for s in subs:
+            if s.wants(msg.topic):
+                s.deliver(msg)
 
     def publish_batch(self, messages: Sequence[Message]) -> int:
         """Deliver a micro-batch with one lock acquisition and one callback
-        invocation per batch subscriber (vs one per message) — the bus half
-        of the batched replay hot path.  Per-message subscribers still see
+        invocation (or lane enqueue) per batch subscriber — the bus half of
+        the batched replay hot path.  Per-message subscribers still see
         every message individually, so recorders need no changes."""
         msgs = list(messages)
         if not msgs:
@@ -112,25 +395,33 @@ class MessageBus:
             self.published += len(msgs)
             per_msg = {t: list(self._subs.get(t, ()))
                        for t in {m.topic for m in msgs}}
-            all_cbs = list(self._all)
+            all_subs = list(self._all)
             per_batch = {t: list(self._batch_subs.get(t, ()))
                          for t in {m.topic for m in msgs}}
             batch_all = list(self._batch_all)
-        if all_cbs or any(per_msg.values()):
+        if all_subs or any(per_msg.values()):
             for m in msgs:
-                for cb in per_msg[m.topic]:
-                    cb(m)
-                for cb in all_cbs:
-                    cb(m)
+                for s in per_msg[m.topic]:
+                    if s.wants(m.topic):
+                        s.deliver(m)
+                for s in all_subs:
+                    if s.wants(m.topic):
+                        s.deliver(m)
         if any(per_batch.values()):
             groups: dict[str, list[Message]] = defaultdict(list)
             for m in msgs:
                 groups[m.topic].append(m)
             for t, group in groups.items():
-                for cb in per_batch[t]:
-                    cb(group)
-        for cb in batch_all:
-            cb(msgs)
+                for s in per_batch[t]:
+                    if s.wants(t):
+                        s.deliver(group)
+        for s in batch_all:
+            if s.exclude is not None:
+                kept = [m for m in msgs if s.wants(m.topic)]
+                if kept:
+                    s.deliver(kept)
+            else:
+                s.deliver(msgs)
         return len(msgs)
 
 
@@ -166,58 +457,70 @@ class RosPlay:
                                  chunk_range=self._chunk_range,
                                  start=self._start, end=self._end)
 
-    def run(self) -> int:
+    def run(self, prefetch: int = 0) -> int:
+        """Per-message replay.  ``prefetch > 0`` moves bag reading (chunk
+        decode + heap-window ordering) onto a background reader thread
+        buffering up to ``prefetch`` messages ahead of the publish loop —
+        the read stage of the staged pipeline."""
+        it: Iterable[Message] = self._time_ordered()
+        if prefetch:
+            from repro.data.pipeline import PrefetchIterator
+            it = PrefetchIterator(iter(it), depth=prefetch)
         pubs: dict[str, Publisher] = {}
         t0_msg: Optional[int] = None
         t0_wall = time.monotonic()
-        for msg in self._time_ordered():
-            if self._rate is not None:
-                if t0_msg is None:
-                    t0_msg = msg.timestamp
-                target = (msg.timestamp - t0_msg) / 1e9 / self._rate
-                delay = target - (time.monotonic() - t0_wall)
-                if delay > 0:
-                    time.sleep(delay)
-            pub = pubs.get(msg.topic)
-            if pub is None:
-                pub = pubs[msg.topic] = self._bus.advertise(msg.topic)
-            pub.publish_message(msg)
-            self.messages_played += 1
+        try:
+            for msg in it:
+                if self._rate is not None:
+                    if t0_msg is None:
+                        t0_msg = msg.timestamp
+                    target = (msg.timestamp - t0_msg) / 1e9 / self._rate
+                    delay = target - (time.monotonic() - t0_wall)
+                    if delay > 0:
+                        time.sleep(delay)
+                pub = pubs.get(msg.topic)
+                if pub is None:
+                    pub = pubs[msg.topic] = self._bus.advertise(msg.topic)
+                pub.publish_message(msg)
+                self.messages_played += 1
+        finally:
+            close = getattr(it, "close", None)
+            if close is not None:       # stop an abandoned reader thread
+                close()
         return self.messages_played
 
-    def run_batched(self, batch_size: int) -> int:
+    def run_batched(self, batch_size: int, prefetch: int = 0) -> int:
         """Vectorized replay: publish timestamp-ordered micro-batches of up
         to ``batch_size`` messages via :meth:`MessageBus.publish_batch`.
 
         Wall-clock pacing (``rate``) applies at batch boundaries, keyed on
         the first timestamp of each batch — the array-step analogue of
-        per-message pacing.
+        per-message pacing.  ``prefetch > 0`` double-buffers the framing:
+        a background reader thread keeps up to ``prefetch`` micro-batches
+        assembled ahead of the publish loop, so bag I/O overlaps the
+        consumers (``prefetch=2`` is classic double buffering).
         """
         if batch_size < 1:
             raise ValueError("batch_size must be >= 1")
+        from repro.data.pipeline import iter_message_batches
         t0_msg: Optional[int] = None
         t0_wall = time.monotonic()
-        batch: list[Message] = []
-
-        def flush() -> None:
-            nonlocal t0_msg
-            if not batch:
-                return
-            if self._rate is not None:
-                if t0_msg is None:
-                    t0_msg = batch[0].timestamp
-                target = (batch[0].timestamp - t0_msg) / 1e9 / self._rate
-                delay = target - (time.monotonic() - t0_wall)
-                if delay > 0:
-                    time.sleep(delay)
-            self.messages_played += self._bus.publish_batch(batch)
-            batch.clear()
-
-        for msg in self._time_ordered():
-            batch.append(msg)
-            if len(batch) >= batch_size:
-                flush()
-        flush()
+        it = iter_message_batches(self._time_ordered(), batch_size,
+                                  prefetch=prefetch)
+        try:
+            for batch in it:
+                if self._rate is not None:
+                    if t0_msg is None:
+                        t0_msg = batch[0].timestamp
+                    target = (batch[0].timestamp - t0_msg) / 1e9 / self._rate
+                    delay = target - (time.monotonic() - t0_wall)
+                    if delay > 0:
+                        time.sleep(delay)
+                self.messages_played += self._bus.publish_batch(batch)
+        finally:
+            close = getattr(it, "close", None)
+            if close is not None:       # stop an abandoned reader thread
+                close()
         return self.messages_played
 
 
@@ -229,23 +532,43 @@ class RosRecord:
     message, keeping the recorder off the per-message hot path of batched
     replay.  (Don't combine with per-message mode on the same bus — batched
     publishes would be recorded twice.)
+
+    ``mode="queued"`` makes the recorder the sink stage of the staged
+    pipeline: bag serialization runs on the recorder's own lane worker and
+    overlaps replay/user logic instead of stalling them.  All of one
+    recorder's subscriptions share a single lane (one writer thread), so
+    the write order — and hence the recorded image — is exactly the
+    synchronous one.  :meth:`stop` flushes the lane before unsubscribing,
+    so every message published before ``stop()`` is in the bag when it
+    returns.
     """
 
     def __init__(self, bus: MessageBus, bag: Bag,
                  topics: Optional[Sequence[str]] = None,
                  exclude_topics: Optional[Sequence[str]] = None,
-                 batch: bool = False):
+                 batch: bool = False, mode: str = "sync",
+                 queue_maxsize: int = MessageBus.DEFAULT_MAXSIZE):
         self._bus = bus
         self._bag = bag
         self._topics = list(topics) if topics is not None else None
         self._exclude = set(exclude_topics or ())
         self._batch = batch
+        self._mode = mode
+        self._maxsize = queue_maxsize
+        self._group = f"record-{id(self)}"
         self._cbs: list[tuple[Optional[str], Callback]] = []
         self._batch_cbs: list[tuple[Optional[str], BatchCallback]] = []
         self.messages_recorded = 0
         self._lock = threading.Lock()
 
     def start(self) -> None:
+        # exclusion is enforced bus-side for the record-everything
+        # subscription: excluded (replay input) traffic is never delivered
+        # or enqueued, so it costs the hot path and the lane budget nothing;
+        # the callback filter stays as backstop for per-topic subscriptions
+        sub_kw = dict(mode=self._mode, maxsize=self._maxsize,
+                      group=self._group)
+        none_kw = dict(sub_kw, exclude_topics=self._exclude or None)
         if self._batch:
             def bcb(msgs: list[Message]) -> None:
                 kept = [m for m in msgs if m.topic not in self._exclude]
@@ -255,9 +578,13 @@ class RosRecord:
                     for m in kept:
                         self._bag.write_message(m)
                     self.messages_recorded += len(kept)
-            for t in (self._topics if self._topics is not None else [None]):
-                self._bus.subscribe_batch(t, bcb)
-                self._batch_cbs.append((t, bcb))
+            if self._topics is None:
+                self._bus.subscribe_batch(None, bcb, **none_kw)
+                self._batch_cbs.append((None, bcb))
+            else:
+                for t in self._topics:
+                    self._bus.subscribe_batch(t, bcb, **sub_kw)
+                    self._batch_cbs.append((t, bcb))
             return
 
         def cb(msg: Message) -> None:
@@ -267,20 +594,32 @@ class RosRecord:
                 self._bag.write_message(msg)
                 self.messages_recorded += 1
         if self._topics is None:
-            self._bus.subscribe(None, cb)
+            self._bus.subscribe(None, cb, **none_kw)
             self._cbs.append((None, cb))
         else:
             for t in self._topics:
-                self._bus.subscribe(t, cb)
+                self._bus.subscribe(t, cb, **sub_kw)
                 self._cbs.append((t, cb))
 
     def stop(self) -> None:
-        for t, cb in self._cbs:
-            self._bus.unsubscribe(t, cb)
-        self._cbs.clear()
-        for t, bcb in self._batch_cbs:
-            self._bus.unsubscribe_batch(t, bcb)
-        self._batch_cbs.clear()
+        # bookkeeping first: a deferred lane error re-raised by unsubscribe
+        # must not leave stale entries behind (a retried stop() would then
+        # mask the real error with "not subscribed")
+        cbs, self._cbs = self._cbs, []
+        batch_cbs, self._batch_cbs = self._batch_cbs, []
+        errors: list[BaseException] = []
+        for t, cb in cbs:
+            try:
+                self._bus.unsubscribe(t, cb)
+            except BaseException as e:      # noqa: BLE001 - collect, finish
+                errors.append(e)
+        for t, bcb in batch_cbs:
+            try:
+                self._bus.unsubscribe_batch(t, bcb)
+            except BaseException as e:      # noqa: BLE001 - collect, finish
+                errors.append(e)
+        if errors:
+            raise errors[0]
 
     def __enter__(self) -> "RosRecord":
         self.start()

@@ -31,9 +31,14 @@ and then launches a ROS node to process the incoming data."  Here each task:
    (:func:`repro.data.pipeline.assemble_message_batch` +
    :func:`repro.kernels.sensor_decode.sensor_decode`),
 4. records outputs into a memory bag and ships its image plus KB-sized
-   partial per-topic metrics (fork-safe numpy digests) as the task result;
+   partial per-topic metrics (a streaming :class:`MetricsTap` on the sink
+   side — fork-safe numpy digests on process workers, the fused Pallas
+   consume step for batched in-process scenarios) as the task result;
    per-scenario aggregation then runs as its own scheduled task
    (lineage stage ``"aggregate"``), overlapping remaining replay work.
+   Latency-modeling scenarios replay as a staged read → logic → record
+   pipeline over queued bus lanes (``Scenario.pipeline``), overlapping
+   disk I/O, compute and bag serialization inside each task.
 
 ``user_logic`` contracts:
   per-message : ``Message -> Optional[(topic, bytes)]`` (output inherits the
@@ -47,6 +52,7 @@ pickle boundary.
 from __future__ import annotations
 
 import importlib
+import json
 import os
 import random
 import time
@@ -54,11 +60,11 @@ import zlib
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence, Union
 
-from .aggregation import Aggregator, TopicMetrics, Verdict
+from .aggregation import Aggregator, MetricsTap, TopicMetrics, Verdict
 from .bag import Bag, Message, partition_bag
 from .binpipe import BinaryPartition, encode
 from .executors import ExecutorBackend
-from .playback import MessageBus, RosPlay, RosRecord
+from .playback import MESSAGE_PREFETCH, MessageBus, RosPlay, RosRecord
 from .scheduler import Scheduler
 
 UserLogic = Callable[[Message], Optional[tuple[str, bytes]]]
@@ -105,6 +111,22 @@ class Scenario:
     aggregator diffs the merged output against it (exact or
     tolerance-based, see :class:`repro.core.aggregation.Aggregator`) and
     the scenario's verdict fails on any mismatch.
+
+    ``pipeline`` selects the partition replay shape: ``True`` is the
+    staged read → logic → record pipeline over queue-backed bus
+    subscriptions (disk I/O, user logic and bag serialization overlap),
+    ``False`` the synchronous seed shape, and ``None`` (default) resolves
+    automatically — staged when the scenario models per-invocation
+    compute latency (``latency_model_s > 0``, the regime where the logic
+    stage yields and overlap wins), synchronous for free-running logic
+    where queue handoffs would only tax the hot loop.  Outputs, metrics
+    and verdicts are bit-identical either way, so the switch is purely a
+    performance choice.  ``queue_depth`` bounds each pipeline stage's
+    FIFO (the backpressure window).  ``metrics_engine`` picks the
+    sink-stage digest reduction
+    (:class:`repro.core.aggregation.MetricsTap`): ``"auto"`` resolves to
+    the fused Pallas consume step for batched in-process scenarios and the
+    fork-safe numpy engine otherwise (process workers never init jax).
     """
     name: str
     bag_path: Optional[str] = None
@@ -120,10 +142,18 @@ class Scenario:
     use_memory_cache: bool = True
     bag_paths: Optional[tuple[str, ...]] = None   # fleet shards
     golden_bag_path: Optional[str] = None
+    pipeline: Optional[bool] = None      # None = auto (see docstring)
+    queue_depth: int = 8
+    metrics_engine: str = "auto"
 
     def __post_init__(self):
         if self.user_logic is None:
             raise ValueError(f"scenario {self.name!r} has no user_logic")
+        if self.metrics_engine not in ("auto", "numpy", "jax", "fused"):
+            raise ValueError(f"scenario {self.name!r}: unknown "
+                             f"metrics_engine {self.metrics_engine!r}")
+        if self.queue_depth < 1:
+            raise ValueError(f"scenario {self.name!r}: queue_depth >= 1")
         if (self.bag_path is None) == (self.bag_paths is None):
             raise ValueError(f"scenario {self.name!r}: give exactly one of "
                              "bag_path / bag_paths")
@@ -136,6 +166,16 @@ class Scenario:
         """The fleet as a tuple of bag paths (length 1 for ``bag_path``)."""
         return ((self.bag_path,) if self.bag_path is not None
                 else self.bag_paths)
+
+    @property
+    def staged(self) -> bool:
+        """The resolved replay shape: explicit ``pipeline`` wins; auto
+        (``None``) stages exactly the latency-modeling scenarios, where
+        the logic stage sleeps/offloads and overlap pays — free-running
+        logic keeps the zero-handoff synchronous hot loop."""
+        if self.pipeline is not None:
+            return self.pipeline
+        return self.latency_model_s > 0
 
 
 @dataclass
@@ -175,15 +215,36 @@ class SimulationReport:
 
 def _run_scenario_partition(scenario: Scenario, shard_path: str,
                             chunk_range: tuple[int, int],
+                            metrics_engine: str = "numpy",
                             ) -> tuple[int, int, int, bytes, dict]:
     """One worker task: play one shard partition through the user logic.
+
+    With ``scenario.staged`` (explicit ``pipeline=True``, or auto for
+    latency-modeling scenarios) the partition runs as a three-stage
+    pipeline over queue-backed bus subscriptions:
+
+        read stage    — a prefetch reader thread decodes bag chunks and
+                        keeps messages/micro-batches buffered ahead,
+        logic stage   — fault profile + user logic on its own lane worker
+                        (one lane shared across input topics, so the
+                        drop-RNG draw order is exactly the publish order),
+        sink stage    — ``RosRecord`` (bag serialization) and a
+                        :class:`MetricsTap` (per-record digests) each on
+                        their own lane.
+
+    Disk I/O, XLA compute and bag serialization overlap instead of
+    alternating; bounded lanes give backpressure; ``bus.drain()`` is the
+    end-of-replay barrier that makes the overlap invisible to results.
+    ``pipeline=False`` delivers every stage synchronously (the seed
+    shape).  Both shapes produce bit-identical outputs and partials.
 
     Returns (messages_in, messages_out, messages_dropped, output bag image,
     partial metrics).  The partial metrics — per-topic mergeable
     :class:`TopicMetrics` over this partition's *output* — are computed
-    here, on the worker, next to replay: the driver combines KB-sized
-    partials instead of re-reading MB-sized payload matrices
-    (zero-extra-driver-pass metric extraction).
+    here, on the worker, *as outputs stream through the sink stage*: the
+    driver combines KB-sized partials instead of re-reading MB-sized
+    payload matrices, and the worker no longer re-sweeps its own output
+    image at end of task.
     """
     logic = resolve_logic_ref(scenario.user_logic)
     topics = list(scenario.topics) if scenario.topics is not None else None
@@ -207,13 +268,21 @@ def _run_scenario_partition(scenario: Scenario, shard_path: str,
         input_topics = ([t for t in src.topics if t in topics]
                         if topics is not None else src.topics)
 
+    staged = scenario.staged
+    mode = "queued" if staged else "sync"
+    depth = scenario.queue_depth
     bus = MessageBus()
     out_bag = Bag.open_write(backend="memory")
     # record everything the user logic publishes, but not the replayed
     # inputs; in batched mode the recorder rides the batch subscription so
     # no per-message callback remains on the replay hot path
     rec = RosRecord(bus, out_bag, topics=None, exclude_topics=src.topics,
-                    batch=scenario.batch_size is not None)
+                    batch=scenario.batch_size is not None,
+                    mode=mode, queue_maxsize=depth)
+    # metrics ride the sink stage: per-record digests accumulate as outputs
+    # stream past, so partials are ready at drain (no output-image re-sweep);
+    # input-topic exclusion is enforced bus-side (sink_kw below)
+    tap = MetricsTap(engine=metrics_engine)
 
     n_out = 0
     n_drop = 0
@@ -224,6 +293,13 @@ def _run_scenario_partition(scenario: Scenario, shard_path: str,
                         + chunk_range[0] * 8191 + chunk_range[1])
     drop = scenario.drop_rate
 
+    # one shared "logic" lane across all input topics: the drop-RNG draw
+    # order (and hence the output stream) is exactly the synchronous one.
+    # The tap excludes input topics bus-side, so replay traffic is never
+    # even enqueued toward the metrics sink.
+    logic_kw = dict(mode=mode, maxsize=depth, group="logic")
+    sink_kw = dict(mode=mode, maxsize=depth, group="metrics",
+                   exclude_topics=src.topics)
     if scenario.batch_size is None:
         def on_msg(msg: Message) -> None:
             nonlocal n_out, n_drop
@@ -239,7 +315,8 @@ def _run_scenario_partition(scenario: Scenario, shard_path: str,
                 n_out += 1
 
         for t in input_topics:
-            bus.subscribe(t, on_msg)
+            bus.subscribe(t, on_msg, **logic_kw)
+        bus.subscribe(None, tap.on_message, **sink_kw)
     else:
         def on_batch(msgs: list[Message]) -> None:
             nonlocal n_out, n_drop
@@ -258,47 +335,60 @@ def _run_scenario_partition(scenario: Scenario, shard_path: str,
                 n_out += len(out_msgs)
 
         for t in input_topics:
-            bus.subscribe_batch(t, on_batch)
+            bus.subscribe_batch(t, on_batch, **logic_kw)
+        bus.subscribe_batch(None, tap.on_batch, **sink_kw)
 
     rec.start()
     player = RosPlay(play_bag, bus, **play)
-    if scenario.batch_size is None:
-        n_in = player.run()
-    else:
-        n_in = player.run_batched(scenario.batch_size)
-    rec.stop()
+    try:
+        if scenario.batch_size is None:
+            n_in = player.run(prefetch=MESSAGE_PREFETCH if staged else 0)
+        else:
+            # double-buffered framing: the bag-chunk reader thread keeps
+            # the next micro-batch decoded while this one is in flight
+            n_in = player.run_batched(scenario.batch_size,
+                                      prefetch=2 if staged else 0)
+        bus.drain()         # barrier: every stage flushed, errors surface
+        rec.stop()          # surfaces deferred recorder write errors
+    finally:
+        try:
+            rec.stop()      # no-op when already stopped (exception-safe)
+        except BaseException:   # noqa: BLE001 - the drain/stop error above
+            pass                # is the one that must propagate
+        bus.close()         # always stop lane workers — no thread leak
+        src.close()         # and never leak bag handles on a failed task
+        if scenario.use_memory_cache:
+            play_bag.close()
     out_bag.close()
     # image() is close-safe by contract (captured at close time) — the
     # use-after-close here was a latent bug before MemoryChunkedFile.close
     # consolidated the image
     image = out_bag.chunked_file.image()
-    src.close()
-    if scenario.use_memory_cache:
-        play_bag.close()
-    partials = {}
-    if n_out:
-        partials = Aggregator().compute_metrics(
-            Bag.open_read(backend="memory", image=image))
-    return n_in, n_out, n_drop, image, partials
+    return n_in, n_out, n_drop, image, tap.finalize()
 
 
 def _run_scenario_aggregate(aggregator: Aggregator, scenario_name: str,
-                            images: Sequence[bytes],
+                            sources: Sequence,
                             partials: Sequence[dict],
                             golden_path: Optional[str],
                             messages_in: int) -> tuple[bytes, Verdict]:
     """One worker task: the aggregation stage of one scenario.
 
-    Merges the (shard, partition)-ordered output images into one
+    Merges the (shard, partition)-ordered output sources into one
     timestamp-ordered bag, folds the worker-computed partial metrics
     (no payload re-sweep), compares against the golden bag, and returns
-    ``(merged image, verdict)``.  Scheduled on the shared pool with
-    lineage stage ``"aggregate"`` so it overlaps remaining replay work
-    and gets the scheduler's full retry/speculation semantics — it is a
-    pure function of its arguments, so recompute is safe.
+    ``(merged image, verdict)``.  ``sources`` are memory-bag images *or
+    spill paths* (see ``ProcessBackend.spill_arg``): on the process
+    backend the driver parks each partition image in the backend's spill
+    dir and ships only the path, so the worker merges through streaming
+    index-only disk readers and MB-sized images never ride the task pipe
+    in either direction.  Scheduled on the shared pool with lineage stage
+    ``"aggregate"`` so it overlaps remaining replay work and gets the
+    scheduler's full retry/speculation semantics — spill files outlive
+    the task (the backend reaps them at shutdown), so recompute is safe.
     """
     merged, verdict = aggregator.aggregate(
-        scenario_name, images, golden=golden_path,
+        scenario_name, sources, golden=golden_path,
         messages_in=messages_in, partials=list(partials))
     image = merged.chunked_file.image()
     merged.close()
@@ -372,6 +462,11 @@ class ScenarioSuite:
     after submission — the hook fault-injection harnesses use to kill
     workers / add elastic capacity mid-suite.  ``aggregator`` overrides
     the default exact-matching :class:`Aggregator`.
+
+    ``run(verdict_log=path)`` additionally appends one JSONL record per
+    scenario (name, verdict, metric checksums, timings) to ``path`` and
+    rewrites a suite manifest (scenario → golden path → verdict) next to
+    it — the CI-native face of the regression harness.
     """
 
     def __init__(self, scenarios: Sequence[Scenario], num_workers: int = 4,
@@ -402,7 +497,23 @@ class ScenarioSuite:
             tasks.extend((si, shard, pr) for pr in parts)
         return tasks
 
-    def run(self, timeout: float = 300.0) -> dict[str, Verdict]:
+    @staticmethod
+    def _resolve_metrics_engine(sc: Scenario, backend_name: str) -> str:
+        """Pick the partition sink's digest engine.  Process workers are
+        pinned to the fork-safe numpy engine (never init jax in a forked
+        child of a jax-loaded driver); in-process, ``"auto"`` makes the
+        fused Pallas consume step the stock batched shape and numpy the
+        per-message one.  All engines are bit-identical, so this choice
+        can never move a checksum or a verdict."""
+        if backend_name == "process":
+            return "numpy"
+        if sc.metrics_engine == "auto":
+            return "fused" if sc.batch_size is not None else "numpy"
+        return sc.metrics_engine
+
+    def run(self, timeout: float = 300.0,
+            verdict_log: Optional[str] = None,
+            manifest_path: Optional[str] = None) -> dict[str, Verdict]:
         for sc in self.scenarios:
             # fail before burning replay time, not at aggregation
             if (sc.golden_bag_path is not None
@@ -436,12 +547,23 @@ class ScenarioSuite:
                                       metric_batch=pool_agg.metric_batch,
                                       engine="numpy")
 
+            # spill-aware aggregate dispatch: on backends with an argument
+            # spill (process), large partition images are parked in the
+            # backend spill dir and the aggregate task gets paths — the
+            # worker merges via streaming disk readers and the driver
+            # never pickles bulk bytes through the pipe
+            spill_arg = getattr(sched.backend, "spill_arg", None)
+            spill_bytes = getattr(sched.backend, "spill_bytes", None)
+
             def submit_aggregate(i: int) -> None:
                 sc = plans[i][0]
                 rows = parts[i]
                 ordered = sorted(rows)       # (shard, partition): merge
                 images = [rows[k][0] for k in ordered]       # deterministic
                 partials = [rows[k][1] for k in ordered]
+                if spill_arg is not None and spill_bytes is not None:
+                    images = [spill_arg(img) if len(img) > spill_bytes
+                              else img for img in images]
                 tid = sched.submit(
                     _run_scenario_aggregate, pool_agg, sc.name,
                     images, partials, sc.golden_bag_path, counts[i][0],
@@ -472,12 +594,14 @@ class ScenarioSuite:
                     sched.discard(tid)
 
             for i, (sc, tasks) in enumerate(plans):
+                engine = self._resolve_metrics_engine(sc, backend_name)
                 part_of_shard: dict[int, int] = {}
                 for si, shard, (lo, hi) in tasks:
                     k = part_of_shard.get(si, 0)
                     part_of_shard[si] = k + 1
                     tid = sched.submit(
                         _run_scenario_partition, sc, shard, (lo, hi),
+                        engine,
                         lineage=("scenario", sc.name, si, shard, lo, hi))
                     owner[tid] = (i, (si, k))
             if self.on_scheduler is not None:
@@ -513,7 +637,65 @@ class ScenarioSuite:
             )
             verdict.report = report
             verdicts[sc.name] = verdict
+        if verdict_log is not None:
+            self._persist_verdicts(verdict_log, manifest_path, verdicts,
+                                   backend_name)
         return verdicts
+
+    @staticmethod
+    def _persist_verdicts(verdict_log: str, manifest_path: Optional[str],
+                          verdicts: dict[str, Verdict],
+                          backend_name: str) -> None:
+        """Append one JSONL record per scenario to ``verdict_log`` and
+        rewrite the suite manifest (scenario → golden path → verdict).
+
+        The log is append-only — consecutive suite runs accumulate a
+        verdict history a CI job can diff or trend; the manifest
+        (``manifest_path``, default ``<verdict_log>.manifest.json``) is
+        the current snapshot a gate inspects without parsing history.
+        Metric checksums ride along so a PASS can additionally be pinned
+        bit-exactly across runs.
+        """
+        now = time.time()
+        records = []
+        for name, v in verdicts.items():
+            r = v.report
+            records.append({
+                "scenario": name,
+                "status": v.status,
+                "passed": v.passed,
+                "vacuous": v.vacuous,
+                "golden": v.golden_path,
+                "diffs": [str(d) for d in v.diffs],
+                "checksums": {t: m.checksum for t, m in v.metrics.items()},
+                "messages_in": r.messages_in,
+                "messages_out": r.messages_out,
+                "messages_dropped": r.messages_dropped,
+                "wall_time_s": r.wall_time_s,
+                "partitions": r.partitions,
+                "shards": r.shards,
+                "backend": backend_name,
+                "unix_time": now,
+            })
+        with open(verdict_log, "a") as f:
+            for rec in records:
+                f.write(json.dumps(rec, sort_keys=True) + "\n")
+        manifest = {
+            "verdict_log": os.path.abspath(verdict_log),
+            "backend": backend_name,
+            "unix_time": now,
+            "passed": all(r["passed"] for r in records),
+            "scenarios": {
+                r["scenario"]: {"golden": r["golden"],
+                                "status": r["status"],
+                                "passed": r["passed"]}
+                for r in records
+            },
+        }
+        mpath = manifest_path or verdict_log + ".manifest.json"
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=2, sort_keys=True)
+            f.write("\n")
 
 
 class DistributedSimulation:

@@ -55,21 +55,36 @@ def assemble_message_batch(messages: Sequence[Message], align: int = 128,
 
 
 def iter_message_batches(messages: "Iterator[Message] | Sequence[Message]",
-                         batch_size: int) -> Iterator[list[Message]]:
+                         batch_size: int,
+                         prefetch: int = 0) -> Iterator[list[Message]]:
     """Slice a message stream into non-empty lists of up to ``batch_size``
     messages — the framing step between a replayed/merged bag and
     :func:`assemble_message_batch` (used by both batched user logic and the
-    aggregation layer's jitted metric reductions)."""
+    aggregation layer's jitted metric reductions).
+
+    ``prefetch > 0`` runs the framing loop — and therefore the upstream
+    bag read (chunk decode + time-order merge) — on a background reader
+    thread that keeps up to ``prefetch`` batches buffered ahead of the
+    consumer (``prefetch=2`` is classic double buffering).  This is the
+    read stage of the staged replay pipeline: disk I/O overlaps whatever
+    consumes the batches downstream.
+    """
     if batch_size < 1:
         raise ValueError("batch_size must be >= 1")
-    batch: list[Message] = []
-    for msg in messages:
-        batch.append(msg)
-        if len(batch) >= batch_size:
+
+    def frames() -> Iterator[list[Message]]:
+        batch: list[Message] = []
+        for msg in messages:
+            batch.append(msg)
+            if len(batch) >= batch_size:
+                yield batch
+                batch = []
+        if batch:
             yield batch
-            batch = []
-    if batch:
-        yield batch
+
+    if prefetch > 0:
+        return iter(PrefetchIterator(frames(), depth=prefetch))
+    return frames()
 
 
 def write_token_bag(path: str, sequences: np.ndarray,
@@ -152,21 +167,44 @@ class BagTokenDataset:
 
 class PrefetchIterator:
     """Background-thread prefetch (overlaps host data prep with device
-    compute — the single-host analogue of the platform's worker pipelining)."""
+    compute — the single-host analogue of the platform's worker pipelining).
+
+    ``close()`` stops the reader thread even mid-stream: a consumer that
+    abandons the iterator early (subscriber error, timeout) must not leave
+    the reader blocked forever on the bounded queue, pinning whatever the
+    source iterator holds open (a bag, its memory image).  Consumers that
+    may bail early should ``close()`` in a ``finally``.
+    """
 
     def __init__(self, it: Iterator, depth: int = 2):
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._done = object()
         self._err: Optional[BaseException] = None
+        self._stop = threading.Event()
 
         def worker():
             try:
                 for item in it:
-                    self._q.put(item)
+                    while not self._stop.is_set():
+                        try:
+                            self._q.put(item, timeout=0.05)
+                            break
+                        except queue.Full:
+                            continue
+                    if self._stop.is_set():
+                        return
             except BaseException as e:   # noqa: BLE001
                 self._err = e
             finally:
-                self._q.put(self._done)
+                # blocking stop-aware put: the done sentinel must reach a
+                # live consumer even through a full queue, but must not
+                # wedge the thread when the consumer closed us instead
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(self._done, timeout=0.05)
+                        break
+                    except queue.Full:
+                        continue
 
         self._thread = threading.Thread(target=worker, daemon=True)
         self._thread.start()
@@ -181,3 +219,13 @@ class PrefetchIterator:
                 raise self._err
             raise StopIteration
         return item
+
+    def close(self) -> None:
+        """Stop the reader thread and release its buffered items."""
+        self._stop.set()
+        while True:                      # unblock a full-queue put promptly
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=5.0)

@@ -229,6 +229,34 @@ def decode_message_batch(batch: dict, *, interpret: bool = True) -> jax.Array:
                          interpret=interpret)
 
 
+def batch_record_digests(batch: dict,
+                         interpret: "bool | None" = None) -> np.ndarray:
+    """Per-record digests of one assembled micro-batch via the fused
+    consume step — the digest face of :func:`decode_message_batch_metrics`.
+
+    This is what makes the fused kernel the stock batched consume path of
+    the staged replay pipeline: the sink stage runs one fused sweep per
+    output micro-batch and keeps the ``record_digests`` plane as its
+    metric partial, so every batched scenario ships its per-topic
+    checksums without any end-of-task re-sweep of the output image.  The
+    decoded feature plane is currently discarded by the tap — it becomes
+    free the moment a downstream consumer of the output stream is
+    attached to the same sweep (the device-context plan).  Bit-identical
+    to :func:`repro.core.aggregation.record_digests_np` and the jitted
+    ``record_digest`` reduction, so engine choice never moves a verdict.
+
+    ``interpret=None`` resolves platform-aware like :mod:`repro.kernels.ops`
+    (compiled on TPU, interpret mode elsewhere) — the stock sink-stage path
+    must never run the Pallas kernel in Python emulation on real hardware.
+    """
+    if interpret is None:
+        from .ops import _interpret_default
+        interpret = _interpret_default()
+    return np.asarray(
+        decode_message_batch_metrics(batch, interpret=interpret)
+        ["record_digests"])
+
+
 def decode_message_batch_metrics(batch: dict, *,
                                  interpret: bool = True) -> dict:
     """Fused decode + metrics over one assembled replay micro-batch: the
