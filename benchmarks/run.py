@@ -18,6 +18,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                          deliberately slow subscriber; writes
                          ``BENCH_pipeline.json`` (checksums + suite
                          verdicts asserted bit-identical across modes)
+    transport_*        — bridged (loopback TCP LaneTransport -> RemoteBus)
+                         vs in-process bus throughput with the stock sink
+                         set; writes ``BENCH_transport.json`` (checksums
+                         + export/import routing verdicts asserted
+                         bit-identical across carriers)
     binpipe_*          — paper Fig 4 (BinPipedRDD stage throughput)
     roofline_*         — dry-run roofline terms per (arch x shape x mesh)
 """
@@ -31,10 +36,11 @@ import traceback
 def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (aggregation, bag_cache, binpipe, pipeline,
-                            roofline_report, scalability, scenario_matrix)
+                            roofline_report, scalability, scenario_matrix,
+                            transport)
     failures = 0
     for mod in (bag_cache, scalability, scenario_matrix, aggregation,
-                pipeline, binpipe, roofline_report):
+                pipeline, transport, binpipe, roofline_report):
         try:
             mod.main(csv=True)
         except Exception:  # noqa: BLE001

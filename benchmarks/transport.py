@@ -1,0 +1,283 @@
+"""Bridged vs in-process message-pool throughput — the distributed
+transport race (ISSUE 5 tentpole).
+
+The paper's platform is multi-node: topic traffic crosses Spark workers
+through the message pool.  This benchmark publishes the same stream twice
+through the same subscriber set (a counting monitor + a queued recorder):
+
+  * **inproc**  — straight onto one local ``MessageBus``,
+  * **bridged** — onto a sender bus whose topics are bridged over a
+    loopback TCP ``LaneTransport`` (credit-window flow control, batched
+    DATA frames) into a ``RemoteBus`` endpoint that republishes into the
+    receiver bus where the same subscribers live.
+
+Both runs must record bit-identical per-topic output checksums
+(asserted): the wire is a carrier, never a semantic change.  A second
+phase runs a two-scenario export/import suite with the in-process and
+cross-process carriers (``export_transport="inline"`` / ``"wire"``) and
+asserts the verdicts, checksums *and merged output images* are
+bit-identical — the acceptance gate of the distributed message pool.
+
+Emits CSV rows plus machine-readable ``BENCH_transport.json``.
+``--check`` re-reads the JSON and exits non-zero if the bridged path
+fell below ``MIN_RATIO``x the in-process baseline on loopback, or if any
+bit-parity assertion was not recorded — the CI gate.
+
+    PYTHONPATH=src python -m benchmarks.transport [--check]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core import (Aggregator, Bag, Message, MessageBus, MetricsTap,
+                        RosRecord, Scenario, ScenarioSuite)
+from repro.net import LaneTransport, RemoteBus
+
+N_MSGS = 20000
+PAYLOAD_BYTES = 256
+TOPICS = ("/camera", "/lidar")
+PUBLISH_BATCH = 64
+FLUSH_BATCH = 512          # wire DATA frame size (messages)
+WINDOW = 4096              # receiver credit window (messages)
+REPEATS = 3
+#: CI gate: bridged throughput must hold at least this fraction of the
+#: in-process bus on loopback TCP
+MIN_RATIO = 0.5
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         os.pardir, "BENCH_transport.json")
+
+
+def _make_messages() -> list[Message]:
+    rng = np.random.RandomState(11)
+    return [Message(TOPICS[i % len(TOPICS)],
+                    i * 1000 + int(rng.randint(500)),
+                    rng.bytes(PAYLOAD_BYTES))
+            for i in range(N_MSGS)]
+
+
+def _attach_sinks(bus: MessageBus) -> tuple[RosRecord, dict]:
+    """The stock partition sink set (see ``_run_scenario_partition``):
+    a queued batch recorder plus a streaming :class:`MetricsTap` — what a
+    replay consumer actually costs, on either side of a bridge."""
+    out = Bag.open_write(backend="memory")
+    rec = RosRecord(bus, out, topics=None, batch=True, mode="queued")
+    rec.start()
+    tap = MetricsTap(engine="numpy")
+    bus.subscribe_batch(None, tap.on_batch, mode="queued")
+    return rec, {"bag": out, "tap": tap}
+
+
+def _checksums(sinks: dict) -> dict[str, int]:
+    """Per-topic checksums from the streaming tap, cross-checked against a
+    full re-sweep of the recorded bag image (outside any timed window)."""
+    tapped = {t: m.checksum for t, m in sinks["tap"].finalize().items()}
+    swept = Aggregator().compute_metrics(Bag.open_read(
+        backend="memory", image=sinks["bag"].chunked_file.image()))
+    assert tapped == {t: m.checksum for t, m in swept.items()}
+    return tapped
+
+
+def _publish(bus: MessageBus, msgs: list[Message]) -> None:
+    for lo in range(0, len(msgs), PUBLISH_BATCH):
+        bus.publish_batch(msgs[lo:lo + PUBLISH_BATCH])
+
+
+def _run_inproc(msgs: list[Message],
+                verify: bool = False) -> tuple[float, Optional[dict]]:
+    bus = MessageBus()
+    rec, sinks = _attach_sinks(bus)
+    t0 = time.perf_counter()
+    _publish(bus, msgs)
+    bus.drain()
+    wall = time.perf_counter() - t0
+    rec.stop()
+    bus.close()
+    sinks["bag"].close()
+    assert rec.messages_recorded == len(msgs)
+    return wall, _checksums(sinks) if verify else None
+
+
+def _run_bridged(msgs: list[Message],
+                 verify: bool = False) -> tuple[float, Optional[dict], dict]:
+    rx = MessageBus()
+    rec, sinks = _attach_sinks(rx)
+    ep = RemoteBus(bus=rx, window=WINDOW)
+    addr = ep.start()
+    tx = MessageBus()
+    transport = LaneTransport.connect(addr, stream_id="bench",
+                                      flush_batch=FLUSH_BATCH)
+    bridge = tx.bridge(list(TOPICS), transport, batch=True)
+    t0 = time.perf_counter()
+    _publish(tx, msgs)
+    tx.drain()            # local lanes flushed (everything reached the wire)
+    bridge.drain()        # cross-wire barrier: remote bus fully drained
+    wall = time.perf_counter() - t0
+    rec.stop()
+    bridge.close()
+    ep.stop()
+    tx.close()
+    rx.close()
+    sinks["bag"].close()
+    assert rec.messages_recorded == len(msgs)
+    stats = {"frames": transport.frames_sent,
+             "wire_bytes": transport.bytes_sent,
+             "credit_stalls": transport.credit_stalls}
+    return wall, _checksums(sinks) if verify else None, stats
+
+
+def _best_of_pair(fa, fb, repeats: int = REPEATS):
+    """Interleaved best-of (see benchmarks/pipeline.py): alternating
+    repeats see the same clock/cache conditions, so drift never lands on
+    only one contestant."""
+    best_a = best_b = None
+    for _ in range(repeats):
+        ra = fa()
+        if best_a is None or ra[0] < best_a[0]:
+            best_a = ra
+        rb = fb()
+        if best_b is None or rb[0] < best_b[0]:
+            best_b = rb
+    return best_a, best_b
+
+
+def _prov_logic(msg):
+    return ("/det" + msg.topic, msg.data[:24])
+
+
+def _cons_logic(msg):
+    return ("/score", bytes(reversed(msg.data)))
+
+
+def _routing_parity(bag_a: str, bag_b: str) -> bool:
+    """Run a provider->consumer suite with the in-process and the
+    cross-process export carrier; verdicts, per-topic checksums and merged
+    output images must be bit-identical."""
+    def scenarios():
+        return [
+            Scenario("provider", bag_a, _prov_logic,
+                     exports=("/det/camera", "/det/lidar")),
+            Scenario("consumer", bag_b, _cons_logic,
+                     imports=("/det/camera", "/det/lidar")),
+        ]
+
+    def run(mode: str):
+        v = ScenarioSuite(scenarios(), num_workers=2,
+                          export_transport=mode).run(timeout=300)
+        return {n: (vv.status, vv.report.output_image,
+                    {t: m.checksum for t, m in vv.metrics.items()})
+                for n, vv in v.items()}
+
+    inline, wire = run("inline"), run("wire")
+    assert inline == wire, "export carrier changed results"
+    return True
+
+
+def _make_bag(path: str, seed: int) -> str:
+    rng = np.random.RandomState(seed)
+    bag = Bag.open_write(path, chunk_bytes=32 * 1024)
+    for i in range(2000):
+        bag.write(TOPICS[i % len(TOPICS)], i * 1000, rng.bytes(128))
+    bag.close()
+    return path
+
+
+def run_race() -> dict:
+    msgs = _make_messages()
+    # bit-parity verification first (untimed, full checksum re-sweeps):
+    # the wire must not move a byte
+    _, in_sums = _run_inproc(msgs, verify=True)
+    _, br_sums, _ = _run_bridged(msgs, verify=True)
+    assert in_sums == br_sums, "bridged replay changed checksums"
+
+    # the race proper: pure timed runs, interleaved best-of — no checksum
+    # re-sweeps between timed segments to churn the allocator
+    (in_s, _), (br_s, _, wire_stats) = _best_of_pair(
+        lambda: _run_inproc(msgs),
+        lambda: _run_bridged(msgs))
+
+    with tempfile.TemporaryDirectory(prefix="repro-bench-") as d:
+        routing_identical = _routing_parity(
+            _make_bag(os.path.join(d, "a.bag"), 5),
+            _make_bag(os.path.join(d, "b.bag"), 6))
+
+    payload_total = N_MSGS * PAYLOAD_BYTES
+    return {
+        "bench": "transport",
+        "messages": N_MSGS, "payload_bytes": PAYLOAD_BYTES,
+        "publish_batch": PUBLISH_BATCH, "flush_batch": FLUSH_BATCH,
+        "window": WINDOW, "min_ratio": MIN_RATIO,
+        "inproc_wall_s": in_s, "bridged_wall_s": br_s,
+        "inproc_msgs_per_s": N_MSGS / in_s,
+        "bridged_msgs_per_s": N_MSGS / br_s,
+        "inproc_bytes_per_s": payload_total / in_s,
+        "bridged_bytes_per_s": payload_total / br_s,
+        "bridged_vs_inproc_ratio": in_s / br_s,
+        "wire_frames": wire_stats["frames"],
+        "wire_bytes": wire_stats["wire_bytes"],
+        "wire_credit_stalls": wire_stats["credit_stalls"],
+        "checksums_identical": True,
+        "routing_verdicts_identical": routing_identical,
+        "checksums": {t: int(c) for t, c in br_sums.items()},
+    }
+
+
+def main(csv: bool = True, json_path: str = JSON_PATH) -> list[tuple]:
+    payload = run_race()
+    rows = [
+        ("transport_inproc", payload["inproc_wall_s"] * 1e6 / N_MSGS,
+         f"{payload['inproc_msgs_per_s']:.0f} msg/s "
+         f"{payload['inproc_bytes_per_s'] / 1e6:.1f} MB/s (local bus)"),
+        ("transport_bridged", payload["bridged_wall_s"] * 1e6 / N_MSGS,
+         f"{payload['bridged_msgs_per_s']:.0f} msg/s "
+         f"{payload['bridged_bytes_per_s'] / 1e6:.1f} MB/s "
+         "(loopback TCP bridge)"),
+        ("transport_bridged_vs_inproc_ratio",
+         payload["bridged_vs_inproc_ratio"],
+         "checksums + routing verdicts bit-identical"),
+    ]
+    if csv:
+        for name, val, derived in rows[:2]:
+            print(f"{name},{val:.2f},{derived}")
+        print(f"{rows[2][0]},{rows[2][1]:.2f}x,{rows[2][2]}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    return rows
+
+
+def check(json_path: str = JSON_PATH) -> int:
+    """CI gate: fail (exit 1) when the bridged path regressed below
+    ``MIN_RATIO``x the in-process bus, or bit-parity was not upheld."""
+    with open(json_path) as f:
+        payload = json.load(f)
+    ratio = payload["bridged_vs_inproc_ratio"]
+    print(f"bridged {payload['bridged_msgs_per_s']:.0f} msg/s vs inproc "
+          f"{payload['inproc_msgs_per_s']:.0f} msg/s -> {ratio:.2f}x "
+          f"(gate {payload.get('min_ratio', MIN_RATIO)}x)")
+    if not payload.get("checksums_identical") \
+            or not payload.get("routing_verdicts_identical"):
+        print("FAIL: bridged transport is not bit-identical to the "
+              "in-process bus", file=sys.stderr)
+        return 1
+    if ratio < payload.get("min_ratio", MIN_RATIO):
+        print("FAIL: bridged transport regressed below the loopback "
+              "throughput gate", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    if "--check" in sys.argv:
+        args = [a for a in sys.argv[1:] if a != "--check"]
+        sys.exit(check(args[0] if args else JSON_PATH))
+    main()

@@ -20,7 +20,7 @@ from .binpipe import (BinaryPartition, decode, deserialize, encode, frame,
                       serialize, unframe)
 from .executors import (ExecutorBackend, ProcessBackend, ThreadBackend,
                         Worker)
-from .playback import MessageBus, RosPlay, RosRecord
+from .playback import BusBridge, MessageBus, RosPlay, RosRecord
 from .scheduler import Scheduler, Task, WorkerError
 from .simulation import (DistributedSimulation, Scenario, ScenarioSuite,
                          SimulationReport, bag_to_partitions,
@@ -31,7 +31,7 @@ __all__ = [
     "iter_time_ordered", "merge_bags",
     "BinaryPartition", "encode", "decode", "serialize", "deserialize",
     "frame", "unframe",
-    "MessageBus", "RosPlay", "RosRecord",
+    "BusBridge", "MessageBus", "RosPlay", "RosRecord",
     "ExecutorBackend", "ThreadBackend", "ProcessBackend",
     "Scheduler", "Task", "Worker", "WorkerError",
     "Scenario", "ScenarioSuite", "resolve_logic_ref",

@@ -108,6 +108,44 @@ class ExecutorBackend:
         """Stop the pool; wait up to ``join_timeout`` for quiesce."""
         raise NotImplementedError
 
+    # -- driver-hosted transport endpoints ---------------------------------
+
+    @property
+    def endpoints(self) -> list:
+        """RemoteBus listeners this backend hosts (see
+        :meth:`host_endpoint`); stopped at :meth:`shutdown`."""
+        eps = getattr(self, "_endpoints", None)
+        if eps is None:
+            eps = []
+            setattr(self, "_endpoints", eps)
+        return eps
+
+    def host_endpoint(self, bus=None, sink=None,
+                      window: Optional[int] = None) -> tuple[str, int]:
+        """Start a :class:`repro.net.transport.RemoteBus` listener owned
+        by this backend and return its ``(host, port)``.
+
+        The backend is the natural host: it already brokers everything
+        between driver and workers (task payloads, spilled args), so the
+        endpoints workers stream topic traffic back through share its
+        lifecycle — :meth:`shutdown` stops them with the pool.  The suite
+        hands workers the returned address alongside their (possibly
+        spilled) task args; the workers connect with
+        :meth:`repro.net.transport.LaneTransport.connect`.
+        """
+        from repro.net.transport import RemoteBus   # lazy: core never
+        kw = {} if window is None else {"window": window}   # imports net
+        ep = RemoteBus(bus=bus, sink=sink, **kw)            # at load time
+        ep.start()
+        self.endpoints.append(ep)
+        return ep.address
+
+    def stop_endpoints(self) -> None:
+        eps = list(self.endpoints)
+        self.endpoints.clear()
+        for ep in eps:
+            ep.stop()
+
 
 # ---------------------------------------------------------------------------
 # Thread backend (the seed Worker pool, now behind the interface)
@@ -268,6 +306,7 @@ class ThreadBackend(ExecutorBackend):
 
     def shutdown(self, join_timeout: float = 5.0) -> None:
         self._stop.set()
+        self.stop_endpoints()
         with self._lock:
             workers = list(self._workers.values())
             self._workers.clear()
@@ -466,6 +505,23 @@ class ProcessBackend(ExecutorBackend):
         self.arg_spills += 1
         return path
 
+    def reclaim_spill(self, path: str) -> None:
+        """Delete one spilled file once every consumer of it is done.
+
+        The shutdown-time directory reap is the backstop; this is the
+        eager path the scenario suite calls per scenario (after its
+        aggregate/import task reports, and on the error path), so a long
+        suite's spill dir stays O(in-flight scenario) instead of growing
+        one file per spilled image until teardown.  Unlinking a path a
+        straggling speculative attempt still has open is safe (POSIX);
+        an attempt that opens *after* the unlink fails, and the scheduler
+        ignores failures of already-completed tasks.
+        """
+        try:
+            os.unlink(path)
+        except OSError:
+            pass
+
     # -- dispatch ----------------------------------------------------------
 
     def submit(self, payload: TaskPayload) -> None:
@@ -615,6 +671,7 @@ class ProcessBackend(ExecutorBackend):
 
     def shutdown(self, join_timeout: float = 5.0) -> None:
         self._stop.set()
+        self.stop_endpoints()
         if self._pump is not None:
             self._pump.join(timeout=1.0)
         with self._lock:

@@ -29,6 +29,13 @@ thread.  Publishers enqueue and move on; a full lane blocks the publisher
 (backpressure), so memory stays bounded and a hopelessly slow consumer
 still paces the pipeline instead of being silently left behind.
 
+Lane depth is fixed (``maxsize=N``), unbounded (``0``) or **adaptive**
+(``None``): adaptive lanes observe the producer/consumer rate — every time
+a producer finds the FIFO full the depth doubles, up to a memory cap —
+so bursty sinks converge to a deeper lane while tight-memory workers keep
+shallow ones.  Depth only moves *when* a publisher blocks, never delivery
+order.
+
 Determinism is preserved per lane: one worker thread drains one FIFO, so a
 subscription sees exactly the synchronous delivery sequence, just later.
 Subscriptions that must share one ordered stream (e.g. user logic attached
@@ -84,6 +91,15 @@ class _Lane:
     the worker; bounded — see ``MAX_ERRORS``) and re-raised at the
     ``drain()``/unsubscribe barrier.
 
+    ``maxsize=None`` makes the lane **adaptive**: it starts at
+    ``ADAPTIVE_START`` and doubles its depth every time a producer
+    observes it full — a sink that keeps falling behind (bursty consumer,
+    slow serializer) converges to a deeper lane instead of rate-limiting
+    the publisher — bounded by ``ADAPTIVE_MAX`` items (the memory cap), at
+    which point backpressure applies exactly as with a fixed depth.
+    Adapting only ever changes *when* a publisher blocks, never FIFO
+    delivery order, so results stay bit-identical.
+
     A publish racing lane shutdown (unsubscribe/close from another thread)
     must never silently lose a message: after the worker is gone, ``put``
     delivers inline, and both ``put`` and ``close`` sweep any straggler
@@ -96,19 +112,66 @@ class _Lane:
     #: one traceback (and its message payload) per delivery until drain
     MAX_ERRORS = 8
 
-    __slots__ = ("key", "queue", "errors", "errors_dropped", "refs",
-                 "closed", "_thread")
+    #: adaptive lanes start here (= the old fixed default) ...
+    ADAPTIVE_START = 8
+    #: ... and never grow beyond this many queued items ...
+    ADAPTIVE_MAX = 1024
+    #: ... nor past roughly this many queued payload *bytes* — the item
+    #: cap alone would let MB-scale sensor messages balloon a lane, so
+    #: deepening also respects the observed item size (largest payload
+    #: seen; items whose size we can't read count as 0)
+    ADAPTIVE_MAX_BYTES = 64 << 20
 
-    def __init__(self, key: str, maxsize: int):
+    __slots__ = ("key", "queue", "errors", "errors_dropped", "refs",
+                 "closed", "adaptive", "grown", "_item_bytes", "_thread")
+
+    def __init__(self, key: str, maxsize: Optional[int]):
         self.key = key
-        self.queue: "queue.Queue" = queue.Queue(maxsize=maxsize)
+        self.adaptive = maxsize is None
+        self.queue: "queue.Queue" = queue.Queue(
+            maxsize=self.ADAPTIVE_START if self.adaptive else maxsize)
         self.errors: list[BaseException] = []
         self.errors_dropped = 0
         self.refs = 0                  # subscriptions sharing this lane
         self.closed = False
+        self.grown = 0                 # adaptive depth doublings so far
+        self._item_bytes = 0           # largest queued payload observed
         self._thread = threading.Thread(target=self._run,
                                         name=f"bus-lane-{key}", daemon=True)
         self._thread.start()
+
+    @property
+    def depth(self) -> int:
+        """Current FIFO bound (0 = unbounded)."""
+        return self.queue.maxsize
+
+    @staticmethod
+    def _payload_bytes(item) -> int:
+        """Approximate payload size of one queued item (a Message or a
+        micro-batch of them); 0 when unreadable."""
+        data = getattr(item, "data", None)
+        if data is not None:
+            return len(data)
+        if isinstance(item, (list, tuple)):
+            return sum(len(getattr(m, "data", b"")) for m in item)
+        return 0
+
+    def _deepen(self, item) -> None:
+        """Double an adaptive lane's depth (producer observed it full),
+        capped at ``ADAPTIVE_MAX`` items *and* ``ADAPTIVE_MAX_BYTES`` of
+        observed payload (largest item seen sizes the byte bound).
+        Waiting producers are woken so they re-check the new bound."""
+        self._item_bytes = max(self._item_bytes, self._payload_bytes(item))
+        cap = self.ADAPTIVE_MAX
+        if self._item_bytes:
+            cap = min(cap, max(self.ADAPTIVE_START,
+                               self.ADAPTIVE_MAX_BYTES // self._item_bytes))
+        q = self.queue
+        with q.mutex:
+            if 0 < q.maxsize < cap:
+                q.maxsize = min(q.maxsize * 2, cap)
+                self.grown += 1
+                q.not_full.notify_all()
 
     def _record_error(self, e: BaseException) -> None:
         if len(self.errors) < self.MAX_ERRORS:
@@ -124,6 +187,11 @@ class _Lane:
             # error list unread
             callback(item)
             return
+        if self.adaptive and self.queue.full():
+            # the producer is outrunning the sink: grow the window before
+            # blocking (up to the caps; beyond them this is plain
+            # backpressure)
+            self._deepen(item)
         self.queue.put((callback, item))        # blocks when full
         if self.closed and not self._thread.is_alive():
             # shutdown raced the enqueue and the worker is already gone —
@@ -234,8 +302,8 @@ class MessageBus:
 
     # -- subscription management -------------------------------------------
 
-    def _make_sub(self, callback: Callable, mode: str, maxsize: int,
-                  group: Optional[str],
+    def _make_sub(self, callback: Callable, mode: str,
+                  maxsize: Optional[int], group: Optional[str],
                   exclude_topics: Optional[Sequence[str]]) -> _Sub:
         """Build a subscription entry; caller holds ``self._lock``."""
         exclude = frozenset(exclude_topics) if exclude_topics else None
@@ -263,13 +331,17 @@ class MessageBus:
                 "double subscription would make unsubscribe ambiguous")
 
     def subscribe(self, topic: Optional[str], callback: Callback, *,
-                  mode: str = "sync", maxsize: int = DEFAULT_MAXSIZE,
+                  mode: str = "sync",
+                  maxsize: Optional[int] = DEFAULT_MAXSIZE,
                   group: Optional[str] = None,
                   exclude_topics: Optional[Sequence[str]] = None) -> None:
         """``topic=None`` subscribes to every topic (rosbag record -a).
 
         ``mode="queued"`` hands the subscription a bounded FIFO
-        (``maxsize``; 0 = unbounded) drained by a worker thread;
+        (``maxsize``; 0 = unbounded; ``None`` = adaptive — the lane starts
+        at ``_Lane.ADAPTIVE_START`` and deepens itself toward
+        ``_Lane.ADAPTIVE_MAX`` while the producer outruns the sink)
+        drained by a worker thread;
         subscriptions sharing a ``group`` name share one FIFO + worker, so
         their combined delivery order is the publish order.
         ``exclude_topics`` filters *at dispatch*: excluded messages are
@@ -293,7 +365,7 @@ class MessageBus:
 
     def subscribe_batch(self, topic: Optional[str], callback: BatchCallback,
                         *, mode: str = "sync",
-                        maxsize: int = DEFAULT_MAXSIZE,
+                        maxsize: Optional[int] = DEFAULT_MAXSIZE,
                         group: Optional[str] = None,
                         exclude_topics: Optional[Sequence[str]] = None,
                         ) -> None:
@@ -337,6 +409,60 @@ class MessageBus:
             lane.close()
             if lane.errors:
                 raise lane.errors[0]
+
+    # -- bridging (cross-process topic transport) ---------------------------
+
+    def bridge(self, topics: "str | Sequence[str] | None", transport, *,
+               batch: bool = False, maxsize: Optional[int] = None,
+               group: Optional[str] = None) -> "BusBridge":
+        """Forward ``topics`` (one topic, a sequence, or ``None`` for every
+        topic) into a transport — the sending half of the distributed
+        message pool (:mod:`repro.net`).
+
+        The bridge is one queued subscription per topic sharing a single
+        lane, whose callback is ``transport.send_message`` — so the remote
+        end observes exactly this bus's publish order across all bridged
+        topics, the transport's socket write runs on the lane worker (off
+        the publish hot path), and a full lane or an exhausted credit
+        window blocks the publisher: remote backpressure propagates to the
+        local publisher through the standard lane mechanics.  ``maxsize``
+        defaults to adaptive (``None``).
+
+        ``transport`` is duck-typed (``send_message`` / ``send_batch`` /
+        ``drain`` / ``close``) so the core layer never imports
+        :mod:`repro.net`; pass a
+        :class:`repro.net.transport.LaneTransport`.
+
+        ``batch=True`` rides the batch subscription instead — one lane
+        handoff and one ``send_batch`` per published micro-batch, the
+        right shape for ``publish_batch`` buses (like ``RosRecord``'s
+        ``batch`` flag, don't mix with per-message publishes of the same
+        topics).  Note batch delivery is grouped per topic, so the remote
+        end preserves per-topic order and batch order, not the exact
+        cross-topic interleaving within one micro-batch — use the
+        per-message bridge where that interleaving is contractual.
+
+        Returns a :class:`BusBridge`: ``drain()`` is the cross-wire
+        barrier, ``close()`` unsubscribes and releases the transport.
+        Transport failures raise from the lane's deferred-error machinery
+        — at :meth:`drain`/:meth:`BusBridge.close`/unsubscribe — never
+        silently drop frames.
+        """
+        if isinstance(topics, str):
+            topic_list: list[Optional[str]] = [topics]
+        elif topics is None:
+            topic_list = [None]
+        else:
+            topic_list = list(topics)
+            if not topic_list:
+                raise ValueError("bridge needs at least one topic")
+        if group is None:
+            group = f"bridge-{next(self._anon)}"
+        callback = transport.send_batch if batch else transport.send_message
+        sub = self.subscribe_batch if batch else self.subscribe
+        for t in topic_list:
+            sub(t, callback, mode="queued", maxsize=maxsize, group=group)
+        return BusBridge(self, topic_list, transport, group, batch=batch)
 
     # -- barriers -----------------------------------------------------------
 
@@ -423,6 +549,74 @@ class MessageBus:
             else:
                 s.deliver(msgs)
         return len(msgs)
+
+
+class BusBridge:
+    """Handle for one :meth:`MessageBus.bridge` — the local face of a
+    cross-process topic link.
+
+    ``drain()`` is the end-to-end barrier: it flushes the bridge's lane
+    (everything published so far has reached the transport) and then the
+    transport itself (everything sent has been republished/committed on
+    the remote end) — the cross-wire extension of ``MessageBus.drain``.
+    ``close()`` unsubscribes, surfaces any deferred lane errors (transport
+    send failures recorded mid-replay), and releases the transport.
+    """
+
+    def __init__(self, bus: "MessageBus", topics: Sequence[Optional[str]],
+                 transport, group: str, batch: bool = False):
+        self._bus = bus
+        self._topics = list(topics)
+        self._transport = transport
+        self._group = group
+        self._batch = batch
+        self._open = True
+
+    @property
+    def transport(self):
+        return self._transport
+
+    def drain(self) -> None:
+        with self._bus._lock:
+            lane = self._bus._lanes.get(self._group)
+        if lane is not None:
+            lane.flush()
+            if lane.errors:
+                raise lane.errors[0]
+        self._transport.drain()
+
+    def close(self) -> None:
+        """Unsubscribe and release the transport.  Deferred lane errors
+        (a transport that died mid-replay) re-raise here — after every
+        subscription is removed and the transport is closed, so a failed
+        bridge never leaks a lane worker or a socket."""
+        if not self._open:
+            return
+        self._open = False
+        unsub = (self._bus.unsubscribe_batch if self._batch
+                 else self._bus.unsubscribe)
+        callback = (self._transport.send_batch if self._batch
+                    else self._transport.send_message)
+        errors: list[BaseException] = []
+        for t in self._topics:
+            try:
+                unsub(t, callback)
+            except ValueError:
+                pass        # bus.close() already dropped the subscription
+            except BaseException as e:  # noqa: BLE001 - collect, finish
+                errors.append(e)
+        try:
+            self._transport.close()
+        except BaseException as e:      # noqa: BLE001 - collect, finish
+            errors.append(e)
+        if errors:
+            raise errors[0]
+
+    def __enter__(self) -> "BusBridge":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 class RosPlay:
@@ -547,7 +741,7 @@ class RosRecord:
                  topics: Optional[Sequence[str]] = None,
                  exclude_topics: Optional[Sequence[str]] = None,
                  batch: bool = False, mode: str = "sync",
-                 queue_maxsize: int = MessageBus.DEFAULT_MAXSIZE):
+                 queue_maxsize: Optional[int] = MessageBus.DEFAULT_MAXSIZE):
         self._bus = bus
         self._bag = bag
         self._topics = list(topics) if topics is not None else None

@@ -55,6 +55,7 @@ import importlib
 import json
 import os
 import random
+import threading
 import time
 import zlib
 from dataclasses import dataclass, field
@@ -122,11 +123,26 @@ class Scenario:
     where queue handoffs would only tax the hot loop.  Outputs, metrics
     and verdicts are bit-identical either way, so the switch is purely a
     performance choice.  ``queue_depth`` bounds each pipeline stage's
-    FIFO (the backpressure window).  ``metrics_engine`` picks the
+    FIFO (the backpressure window); ``None`` (default) is **adaptive** —
+    lanes start shallow and deepen themselves while the producer outruns
+    the sink, bounded by a memory cap (see
+    :class:`repro.core.playback.MessageBus`).  ``metrics_engine`` picks the
     sink-stage digest reduction
     (:class:`repro.core.aggregation.MetricsTap`): ``"auto"`` resolves to
     the fused Pallas consume step for batched in-process scenarios and the
     fork-safe numpy engine otherwise (process workers never init jax).
+
+    ``exports``/``imports`` wire scenarios together through the
+    distributed message pool (:mod:`repro.net`): a scenario's user-logic
+    outputs on its ``exports`` topics are routed — in-process or over
+    cross-process transports, the suite decides — to every scenario that
+    lists those topics in ``imports``.  An importing scenario replays the
+    merged, timestamp-ordered import stream through its user logic as one
+    extra partition (inputs, like bag traffic: excluded from its own
+    recording), scheduled once all its providers finish.  The routing
+    graph must be a DAG and each topic may have exactly one exporter; a
+    topic cannot appear in both tuples of one scenario.  Outputs are
+    bit-identical whichever transport shape carries the stream.
     """
     name: str
     bag_path: Optional[str] = None
@@ -143,8 +159,10 @@ class Scenario:
     bag_paths: Optional[tuple[str, ...]] = None   # fleet shards
     golden_bag_path: Optional[str] = None
     pipeline: Optional[bool] = None      # None = auto (see docstring)
-    queue_depth: int = 8
+    queue_depth: Optional[int] = None    # None = adaptive lanes
     metrics_engine: str = "auto"
+    exports: Optional[tuple[str, ...]] = None     # topics fed to importers
+    imports: Optional[tuple[str, ...]] = None     # topics fed by exporters
 
     def __post_init__(self):
         if self.user_logic is None:
@@ -152,14 +170,26 @@ class Scenario:
         if self.metrics_engine not in ("auto", "numpy", "jax", "fused"):
             raise ValueError(f"scenario {self.name!r}: unknown "
                              f"metrics_engine {self.metrics_engine!r}")
-        if self.queue_depth < 1:
-            raise ValueError(f"scenario {self.name!r}: queue_depth >= 1")
+        if self.queue_depth is not None and self.queue_depth < 1:
+            raise ValueError(f"scenario {self.name!r}: queue_depth >= 1 "
+                             "(or None for adaptive)")
         if (self.bag_path is None) == (self.bag_paths is None):
             raise ValueError(f"scenario {self.name!r}: give exactly one of "
                              "bag_path / bag_paths")
         if self.bag_paths is not None and not isinstance(self.bag_paths,
                                                          tuple):
             object.__setattr__(self, "bag_paths", tuple(self.bag_paths))
+        for fld in ("exports", "imports"):
+            v = getattr(self, fld)
+            if v is not None and not isinstance(v, tuple):
+                object.__setattr__(self, fld, tuple(v))
+        if self.exports and self.imports:
+            both = set(self.exports) & set(self.imports)
+            if both:
+                raise ValueError(
+                    f"scenario {self.name!r}: topics {sorted(both)} are "
+                    "both imported and exported — relaying a topic through "
+                    "a scenario is ambiguous; transform it onto a new topic")
 
     @property
     def shard_paths(self) -> tuple[str, ...]:
@@ -213,11 +243,34 @@ class SimulationReport:
         return Bag.open_read(backend="memory", image=self.output_image)
 
 
-def _run_scenario_partition(scenario: Scenario, shard_path: str,
-                            chunk_range: tuple[int, int],
+def _run_scenario_partition(scenario: Scenario, source: "str | bytes",
+                            chunk_range: Optional[tuple[int, int]],
                             metrics_engine: str = "numpy",
-                            ) -> tuple[int, int, int, bytes, dict]:
+                            export_to: Optional[tuple[str, int, str]] = None,
+                            rng_tag: Optional[str] = None,
+                            collect_exports: bool = False,
+                            ) -> tuple[int, int, int, bytes, dict,
+                                       Optional[list]]:
     """One worker task: play one shard partition through the user logic.
+
+    ``source`` is a disk bag path or a memory-bag image (bytes — either
+    shape may arrive for an *import partition*: the driver ships the
+    merged import stream inline or as a spill path, see
+    :class:`ScenarioSuite`).  ``chunk_range=None`` marks an import
+    partition: the whole source replays and the scenario's topic/time
+    selection does **not** re-filter it (the driver already filtered by
+    ``Scenario.imports``; the provider's selection shaped the stream).
+    ``rng_tag`` overrides the shard-path term of the drop-RNG seed so an
+    import partition draws identically whether its stream arrived as
+    bytes or as a spill path.
+
+    Export routing: when ``scenario.exports`` is consumed by the suite,
+    either ``export_to=(host, port, stream_id)`` streams the exported
+    topics over a :class:`repro.net.transport.LaneTransport` bridge to the
+    driver-hosted endpoint as they are published (the cross-process
+    shape), or ``collect_exports=True`` captures them into the task
+    result (the in-process shape).  Both capture exactly the partition's
+    publish order; the suite's merge makes the shapes bit-identical.
 
     With ``scenario.staged`` (explicit ``pipeline=True``, or auto for
     latency-modeling scenarios) the partition runs as a three-stage
@@ -239,7 +292,8 @@ def _run_scenario_partition(scenario: Scenario, shard_path: str,
     shape).  Both shapes produce bit-identical outputs and partials.
 
     Returns (messages_in, messages_out, messages_dropped, output bag image,
-    partial metrics).  The partial metrics — per-topic mergeable
+    partial metrics, exported messages or None).  The partial metrics —
+    per-topic mergeable
     :class:`TopicMetrics` over this partition's *output* — are computed
     here, on the worker, *as outputs stream through the sink stage*: the
     driver combines KB-sized partials instead of re-reading MB-sized
@@ -247,14 +301,23 @@ def _run_scenario_partition(scenario: Scenario, shard_path: str,
     image at end of task.
     """
     logic = resolve_logic_ref(scenario.user_logic)
-    topics = list(scenario.topics) if scenario.topics is not None else None
-    src = Bag.open_read(shard_path, backend="disk")
+    is_import = chunk_range is None
+    # import partitions bypass the scenario's own selection: the stream
+    # was already filtered to Scenario.imports by the driver, and the
+    # provider's topic/time window shaped it
+    topics = (None if is_import or scenario.topics is None
+              else list(scenario.topics))
+    t_start = None if is_import else scenario.start
+    t_end = None if is_import else scenario.end
+    if isinstance(source, (bytes, bytearray)):
+        src = Bag.open_read(backend="memory", image=bytes(source))
+    else:
+        src = Bag.open_read(source, backend="disk")
     if scenario.use_memory_cache:
         # materialise the (filtered) partition into the ROSBag cache (§3.2):
         cache = Bag.open_write(backend="memory")
-        for msg in src.read_messages(topics=topics, start=scenario.start,
-                                     end=scenario.end,
-                                     chunk_range=chunk_range):
+        for msg in src.read_messages(topics=topics, start=t_start,
+                                     end=t_end, chunk_range=chunk_range):
             cache.write_message(msg)
         cache.close()
         play_bag = Bag.open_read(backend="memory",
@@ -264,7 +327,7 @@ def _run_scenario_partition(scenario: Scenario, shard_path: str,
     else:
         play_bag = src
         play = dict(chunk_range=chunk_range, topics=topics,
-                    start=scenario.start, end=scenario.end)
+                    start=t_start, end=t_end)
         input_topics = ([t for t in src.topics if t in topics]
                         if topics is not None else src.topics)
 
@@ -287,10 +350,15 @@ def _run_scenario_partition(scenario: Scenario, shard_path: str,
     n_out = 0
     n_drop = 0
     # deterministic fault profile, decorrelated across shards + partitions
-    # (crc32, not hash(): str hashing is per-process randomized)
+    # (crc32, not hash(): str hashing is per-process randomized); import
+    # partitions seed from their rng_tag so the draw sequence is invariant
+    # to how the stream was shipped (inline bytes vs spill path)
+    tag = rng_tag if rng_tag is not None else (
+        source if isinstance(source, str) else "<memory>")
+    lo, hi = chunk_range if chunk_range is not None else (0, 0)
     rng = random.Random(scenario.seed * 1_000_003
-                        + zlib.crc32(shard_path.encode()) * 131
-                        + chunk_range[0] * 8191 + chunk_range[1])
+                        + zlib.crc32(tag.encode()) * 131
+                        + lo * 8191 + hi)
     drop = scenario.drop_rate
 
     # one shared "logic" lane across all input topics: the drop-RNG draw
@@ -338,6 +406,25 @@ def _run_scenario_partition(scenario: Scenario, shard_path: str,
             bus.subscribe_batch(t, on_batch, **logic_kw)
         bus.subscribe_batch(None, tap.on_batch, **sink_kw)
 
+    # export routing: the exported topics leave this partition either over
+    # a transport bridge (cross-process shape: streamed to the driver's
+    # endpoint as they are published) or through a synchronous capture
+    # returned with the result (in-process shape).  Both observe exactly
+    # the publish order.
+    exported: Optional[list[Message]] = None
+    bridge = None
+    export_topics = sorted(scenario.exports or ())
+    if export_topics and export_to is not None:
+        from repro.net.transport import LaneTransport
+        host, port, stream_id = export_to
+        transport = LaneTransport.connect((host, port), stream_id=stream_id)
+        bridge = bus.bridge(export_topics, transport,
+                            maxsize=scenario.queue_depth)
+    elif export_topics and collect_exports:
+        exported = []
+        for t in export_topics:
+            bus.subscribe(t, exported.append)
+
     rec.start()
     player = RosPlay(play_bag, bus, **play)
     try:
@@ -349,8 +436,16 @@ def _run_scenario_partition(scenario: Scenario, shard_path: str,
             n_in = player.run_batched(scenario.batch_size,
                                       prefetch=2 if staged else 0)
         bus.drain()         # barrier: every stage flushed, errors surface
+        if bridge is not None:
+            bridge.drain()  # cross-wire barrier: the collector has the
+            #                 full stream before this task can report
         rec.stop()          # surfaces deferred recorder write errors
     finally:
+        if bridge is not None:
+            try:
+                bridge.close()
+            except BaseException:  # noqa: BLE001 - drain above is the
+                pass               # barrier; close is best-effort release
         try:
             rec.stop()      # no-op when already stopped (exception-safe)
         except BaseException:   # noqa: BLE001 - the drain/stop error above
@@ -364,7 +459,7 @@ def _run_scenario_partition(scenario: Scenario, shard_path: str,
     # use-after-close here was a latent bug before MemoryChunkedFile.close
     # consolidated the image
     image = out_bag.chunked_file.image()
-    return n_in, n_out, n_drop, image, tap.finalize()
+    return n_in, n_out, n_drop, image, tap.finalize(), exported
 
 
 def _run_scenario_aggregate(aggregator: Aggregator, scenario_name: str,
@@ -405,8 +500,8 @@ def _run_partition(bag_path: str, chunk_range: tuple[int, int],
     sc = Scenario(name="partition", bag_path=bag_path, user_logic=user_logic,
                   latency_model_s=latency_model_s,
                   use_memory_cache=use_memory_cache)
-    n_in, n_out, _, image, _ = _run_scenario_partition(sc, bag_path,
-                                                       chunk_range)
+    n_in, n_out, _, image, _, _ = _run_scenario_partition(sc, bag_path,
+                                                          chunk_range)
     return n_in, n_out, image
 
 
@@ -458,6 +553,23 @@ class ScenarioSuite:
     suite start to the scenario's last finished partition, and whose
     ``scheduler_stats`` are the shared pool's counters.
 
+    Scenarios may be wired together through the **distributed message
+    pool**: a scenario's ``exports`` topics feed every scenario that
+    ``imports`` them.  The suite plans the routing graph (validated as a
+    single-exporter DAG), and when a provider's last partition reports,
+    its per-partition export streams — concatenated in deterministic
+    (shard, partition) order and stably time-sorted — become the
+    importer's *import partition*: one extra task replaying the merged
+    stream through the importer's user logic, submitted the moment all
+    of its providers are final.  ``export_transport`` picks the carrier:
+    ``"inline"`` rides exports on task results, ``"wire"`` streams them
+    over :mod:`repro.net` LaneTransports to a backend-hosted
+    :class:`~repro.net.transport.RemoteBus` collector (with credit-based
+    backpressure and drain barriers), and ``"auto"`` (default) picks wire
+    exactly where results would otherwise ride the process-backend pipe.
+    Outputs, checksums and verdicts are bit-identical across carriers and
+    backends — ``benchmarks/transport.py`` asserts it every run.
+
     ``on_scheduler`` (if given) is called with the live Scheduler right
     after submission — the hook fault-injection harnesses use to kill
     workers / add elastic capacity mid-suite.  ``aggregator`` overrides
@@ -473,16 +585,79 @@ class ScenarioSuite:
                  backend: Union[str, ExecutorBackend] = "thread",
                  scheduler_kwargs: Optional[dict] = None,
                  on_scheduler: Optional[Callable[[Scheduler], None]] = None,
-                 aggregator: Optional[Aggregator] = None):
+                 aggregator: Optional[Aggregator] = None,
+                 export_transport: str = "auto"):
         names = [s.name for s in scenarios]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate scenario names in {names}")
+        if export_transport not in ("auto", "wire", "inline"):
+            raise ValueError(f"unknown export_transport {export_transport!r}")
         self.scenarios = list(scenarios)
         self.num_workers = num_workers
         self.backend = backend
         self.scheduler_kwargs = scheduler_kwargs or {}
         self.on_scheduler = on_scheduler
         self.aggregator = aggregator or Aggregator()
+        self.export_transport = export_transport
+
+    def _plan_routing(self) -> tuple[list[set], list[set]]:
+        """Resolve ``Scenario.exports``/``imports`` into the routing graph.
+
+        Returns ``(needs, consumers)``: ``needs[i]`` is the set of
+        scenario indices ``i`` imports from, ``consumers[j]`` the set fed
+        by ``j``.  Validates that every imported topic has exactly one
+        exporter, nothing self-imports, and the graph is a DAG — a cycle
+        would deadlock the suite (each side waiting for the other's
+        exports), so it fails at planning time instead.
+        """
+        providers: dict[str, int] = {}
+        for i, sc in enumerate(self.scenarios):
+            for t in sc.exports or ():
+                if t in providers:
+                    raise ValueError(
+                        f"topic {t!r} exported by both "
+                        f"{self.scenarios[providers[t]].name!r} and "
+                        f"{sc.name!r}; each topic has one exporter")
+                providers[t] = i
+        needs: list[set] = [set() for _ in self.scenarios]
+        consumers: list[set] = [set() for _ in self.scenarios]
+        for i, sc in enumerate(self.scenarios):
+            for t in sc.imports or ():
+                j = providers.get(t)
+                if j is None:
+                    raise ValueError(f"scenario {sc.name!r} imports {t!r} "
+                                     "which no scenario exports")
+                if j == i:
+                    raise ValueError(
+                        f"scenario {sc.name!r} imports its own export {t!r}")
+                needs[i].add(j)
+                consumers[j].add(i)
+        state = [0] * len(self.scenarios)     # 0 unseen / 1 visiting / 2 done
+
+        def visit(i: int) -> None:
+            if state[i] == 1:
+                raise ValueError(
+                    f"routing cycle through scenario "
+                    f"{self.scenarios[i].name!r}: imports must form a DAG")
+            if state[i]:
+                return
+            state[i] = 1
+            for j in needs[i]:
+                visit(j)
+            state[i] = 2
+
+        for i in range(len(self.scenarios)):
+            visit(i)
+        return needs, consumers
+
+    def _resolve_export_transport(self, backend_name: str) -> str:
+        """``"auto"`` routes exports over the wire exactly where they
+        would otherwise ride the task-result pipe (the process backend);
+        in-process thread workers hand the driver a reference instead.
+        Both shapes are bit-identical, so the choice is pure mechanics."""
+        if self.export_transport != "auto":
+            return self.export_transport
+        return "wire" if backend_name == "process" else "inline"
 
     def _plan(self, sc: Scenario) -> list[tuple[int, str, tuple[int, int]]]:
         """One (shard index, shard path, chunk range) triple per task."""
@@ -522,11 +697,16 @@ class ScenarioSuite:
                     f"scenario {sc.name!r}: golden bag "
                     f"{sc.golden_bag_path!r} does not exist")
         plans = [(sc, self._plan(sc)) for sc in self.scenarios]
+        needs, consumers = self._plan_routing()
 
         t0 = time.monotonic()
-        # tid -> (scenario i, (shard j, partition k)) for result assembly
+        # tid -> (scenario i, (shard j, partition k)) for result assembly;
+        # an importing scenario's import partition carries key (-1, 0) so
+        # the import-stream output merges first, deterministically
         owner: dict[int, tuple[int, tuple[int, int]]] = {}
-        pending = [len(tasks) for _, tasks in plans]
+        pending = [len(tasks) + (1 if needs[i] else 0)
+                   for i, (_, tasks) in enumerate(plans)]
+        total_tasks = list(pending)
         # scenario i -> (shard, partition) -> (image, partial metrics);
         # released to the aggregation task as soon as the scenario drains
         parts: list[Optional[dict]] = [{} for _ in plans]
@@ -534,84 +714,236 @@ class ScenarioSuite:
         replay_end = [0.0 for _ in plans]        # last replay-task finish
         agg_owner: dict[int, int] = {}           # aggregation tid -> i
         agg_out: dict[int, tuple[bytes, Verdict]] = {}
+        # every driver-side spill path still on disk; the finally sweep is
+        # the error-path cleanup, per-completion reclaims the eager one
+        tracked_spills: set[str] = set()
+        reclaim_holder: list[Callable[[str], None]] = []
 
-        with Scheduler(num_workers=self.num_workers, backend=self.backend,
-                       **self.scheduler_kwargs) as sched:
-            backend_name = sched.backend.name
-            pool_agg = self.aggregator
-            if backend_name == "process" and pool_agg.engine != "numpy":
-                # never initialize jax inside a forked worker of a
-                # jax-loaded driver (deadlock risk) — the numpy engine is
-                # bit-identical, so the downgrade can't move a verdict
-                pool_agg = Aggregator(tolerance=pool_agg.tolerance,
-                                      metric_batch=pool_agg.metric_batch,
-                                      engine="numpy")
+        try:
+            with Scheduler(num_workers=self.num_workers,
+                           backend=self.backend,
+                           **self.scheduler_kwargs) as sched:
+                backend_name = sched.backend.name
+                pool_agg = self.aggregator
+                if backend_name == "process" and pool_agg.engine != "numpy":
+                    # never initialize jax inside a forked worker of a
+                    # jax-loaded driver (deadlock risk) — the numpy engine
+                    # is bit-identical, so the downgrade can't move a
+                    # verdict
+                    pool_agg = Aggregator(tolerance=pool_agg.tolerance,
+                                          metric_batch=pool_agg.metric_batch,
+                                          engine="numpy")
 
-            # spill-aware aggregate dispatch: on backends with an argument
-            # spill (process), large partition images are parked in the
-            # backend spill dir and the aggregate task gets paths — the
-            # worker merges via streaming disk readers and the driver
-            # never pickles bulk bytes through the pipe
-            spill_arg = getattr(sched.backend, "spill_arg", None)
-            spill_bytes = getattr(sched.backend, "spill_bytes", None)
+                # spill-aware dispatch: on backends with an argument spill
+                # (process), large partition images / import streams are
+                # parked in the backend spill dir and tasks get paths —
+                # workers merge via streaming disk readers and the driver
+                # never pickles bulk bytes through the pipe
+                spill_arg = getattr(sched.backend, "spill_arg", None)
+                spill_bytes = getattr(sched.backend, "spill_bytes", None)
+                reclaim = getattr(sched.backend, "reclaim_spill", None)
+                if reclaim is not None:
+                    reclaim_holder.append(reclaim)
 
-            def submit_aggregate(i: int) -> None:
-                sc = plans[i][0]
-                rows = parts[i]
-                ordered = sorted(rows)       # (shard, partition): merge
-                images = [rows[k][0] for k in ordered]       # deterministic
-                partials = [rows[k][1] for k in ordered]
-                if spill_arg is not None and spill_bytes is not None:
-                    images = [spill_arg(img) if len(img) > spill_bytes
-                              else img for img in images]
-                tid = sched.submit(
-                    _run_scenario_aggregate, pool_agg, sc.name,
-                    images, partials, sc.golden_bag_path, counts[i][0],
-                    lineage=("aggregate", sc.name))
-                agg_owner[tid] = i
-                parts[i] = None              # driver drops its references
+                def spill_source(data: bytes) -> "bytes | str":
+                    if (spill_arg is None or spill_bytes is None
+                            or len(data) <= spill_bytes):
+                        return data
+                    path = spill_arg(data)
+                    tracked_spills.add(path)
+                    return path
 
-            def on_task_done(tid: int, result) -> None:
-                if tid in owner:
-                    i, key = owner[tid]
-                    n_in, n_out, n_drop, image, partial = result
-                    counts[i][0] += n_in
-                    counts[i][1] += n_out
-                    counts[i][2] += n_drop
-                    parts[i][key] = (image, partial)
-                    end = sched.task_finished_at(tid)
-                    if end is not None:
-                        replay_end[i] = max(replay_end[i], end)
-                    sched.discard(tid)
-                    pending[i] -= 1
-                    if pending[i] == 0:
-                        # the scenario's last partition just reported:
-                        # its aggregation overlaps the other scenarios'
-                        # remaining replay work on the same pool
-                        submit_aggregate(i)
-                else:
-                    agg_out[agg_owner[tid]] = result
-                    sched.discard(tid)
+                def reclaim_paths(paths) -> None:
+                    for p in paths:
+                        tracked_spills.discard(p)
+                        if reclaim is not None:
+                            reclaim(p)
 
-            for i, (sc, tasks) in enumerate(plans):
-                engine = self._resolve_metrics_engine(sc, backend_name)
-                part_of_shard: dict[int, int] = {}
-                for si, shard, (lo, hi) in tasks:
-                    k = part_of_shard.get(si, 0)
-                    part_of_shard[si] = k + 1
+                # -- export routing state -------------------------------
+                wire = (self._resolve_export_transport(backend_name)
+                        == "wire" and any(consumers))
+                collect_lock = threading.Lock()
+                # (scenario i, partition key) -> committed export stream
+                collected: dict[tuple[int, tuple[int, int]],
+                                list[Message]] = {}
+                stream_key: dict[str, tuple[int, tuple[int, int]]] = {}
+                ep_addr: Optional[tuple[str, int]] = None
+                if wire:
+                    # the backend hosts the listener; partitions bridge
+                    # their exported topics here over LaneTransports.
+                    # Streams commit at each DRAIN barrier, which the
+                    # partition passes before reporting — so a committed
+                    # stream is always complete, and a crashed attempt's
+                    # partial stream is never committed (its retry's is)
+                    def export_sink(stream_id: str, msgs) -> None:
+                        with collect_lock:
+                            collected[stream_key[stream_id]] = list(msgs)
+                    ep_addr = sched.backend.host_endpoint(sink=export_sink)
+                # scenario i -> partition keys expected to export
+                export_keys: dict[int, list[tuple[int, int]]] = {}
+                exports_inline: dict[tuple[int, tuple[int, int]],
+                                     list[Message]] = {}
+                exports_of: dict[int, list[Message]] = {}
+                submitted_imports: set = set()
+                agg_spills: dict[int, list[str]] = {}
+                spill_by_tid: dict[int, list[str]] = {}
+
+                def register_export_stream(i: int, key: tuple[int, int],
+                                           ) -> tuple[Optional[tuple],
+                                                      bool]:
+                    """(export_to, collect_exports) for one partition of
+                    an exporting scenario, registering its stream id."""
+                    export_keys.setdefault(i, []).append(key)
+                    if not wire:
+                        return None, True
+                    sid = f"{plans[i][0].name}#{key[0]}#{key[1]}"
+                    stream_key[sid] = (i, key)
+                    return (ep_addr[0], ep_addr[1], sid), False
+
+                def submit_aggregate(i: int) -> None:
+                    sc = plans[i][0]
+                    rows = parts[i]
+                    ordered = sorted(rows)   # (shard, partition): merge
+                    sources = [spill_source(rows[k][0])  # deterministic
+                               for k in ordered]
+                    partials = [rows[k][1] for k in ordered]
+                    agg_spills[i] = [s for s in sources
+                                     if isinstance(s, str)]
                     tid = sched.submit(
-                        _run_scenario_partition, sc, shard, (lo, hi),
-                        engine,
-                        lineage=("scenario", sc.name, si, shard, lo, hi))
-                    owner[tid] = (i, (si, k))
-            if self.on_scheduler is not None:
-                self.on_scheduler(sched)
-            sched.run(timeout=timeout, on_task_done=on_task_done)
-            stats = dict(sched.stats)
+                        _run_scenario_aggregate, pool_agg, sc.name,
+                        sources, partials, sc.golden_bag_path,
+                        counts[i][0], lineage=("aggregate", sc.name))
+                    agg_owner[tid] = i
+                    parts[i] = None          # driver drops its references
+
+                def collect_export_stream(j: int) -> list[Message]:
+                    """The scenario's full export stream: per-partition
+                    streams concatenated in deterministic (shard,
+                    partition) order, then stably time-sorted — identical
+                    whichever transport shape carried them."""
+                    msgs: list[Message] = []
+                    for key in sorted(export_keys.get(j, [])):
+                        if wire:
+                            with collect_lock:
+                                msgs.extend(collected.pop((j, key), ()))
+                        else:
+                            msgs.extend(exports_inline.pop((j, key), ()))
+                    msgs.sort(key=lambda m: m.timestamp)
+                    return msgs
+
+                def finish_exports(j: int) -> None:
+                    exports_of[j] = collect_export_stream(j)
+                    for i in sorted(consumers[j]):
+                        maybe_submit_import(i)
+
+                def maybe_submit_import(i: int) -> None:
+                    """Submit scenario i's import partition once every
+                    provider's export stream is final."""
+                    if i in submitted_imports:
+                        return
+                    if any(j not in exports_of for j in needs[i]):
+                        return
+                    submitted_imports.add(i)
+                    sc = plans[i][0]
+                    want = set(sc.imports or ())
+                    msgs = [m for j in sorted(needs[i])
+                            for m in exports_of[j] if m.topic in want]
+                    msgs.sort(key=lambda m: m.timestamp)    # stable merge
+                    cache = Bag.open_write(backend="memory")
+                    for m in msgs:
+                        cache.write_message(m)
+                    cache.close()
+                    source = spill_source(cache.chunked_file.image())
+                    engine = self._resolve_metrics_engine(sc, backend_name)
+                    key = (-1, 0)
+                    export_to, collect = ((None, False) if not consumers[i]
+                                          else register_export_stream(i,
+                                                                      key))
+                    tid = sched.submit(
+                        _run_scenario_partition, sc, source, None, engine,
+                        export_to, f"<imports:{sc.name}>", collect,
+                        lineage=("scenario", sc.name, -1, "<imports>",
+                                 0, 0))
+                    owner[tid] = (i, key)
+                    if isinstance(source, str):
+                        spill_by_tid[tid] = [source]
+                    # release provider streams every importer has now
+                    # consumed — driver residency stays O(in-flight
+                    # routing), matching the parts[i]=None discipline
+                    for j in sorted(needs[i]):
+                        if consumers[j] <= submitted_imports:
+                            exports_of[j] = []
+
+                def on_task_done(tid: int, result) -> None:
+                    if tid in owner:
+                        i, key = owner[tid]
+                        n_in, n_out, n_drop, image, partial, exported = \
+                            result
+                        counts[i][0] += n_in
+                        counts[i][1] += n_out
+                        counts[i][2] += n_drop
+                        parts[i][key] = (image, partial)
+                        if consumers[i] and not wire:
+                            exports_inline[(i, key)] = exported or []
+                        end = sched.task_finished_at(tid)
+                        if end is not None:
+                            replay_end[i] = max(replay_end[i], end)
+                        sched.discard(tid)
+                        reclaim_paths(spill_by_tid.pop(tid, ()))
+                        pending[i] -= 1
+                        if pending[i] == 0:
+                            # the scenario's last partition just reported:
+                            # its aggregation overlaps the other
+                            # scenarios' remaining replay work on the
+                            # same pool, and its export stream is final —
+                            # importers waiting on it can now be planned
+                            submit_aggregate(i)
+                            if consumers[i]:
+                                finish_exports(i)
+                    else:
+                        i = agg_owner[tid]
+                        agg_out[i] = result
+                        sched.discard(tid)
+                        reclaim_paths(agg_spills.pop(i, ()))
+
+                for i, (sc, tasks) in enumerate(plans):
+                    engine = self._resolve_metrics_engine(sc, backend_name)
+                    exporting = bool(consumers[i])
+                    part_of_shard: dict[int, int] = {}
+                    for si, shard, (lo, hi) in tasks:
+                        k = part_of_shard.get(si, 0)
+                        part_of_shard[si] = k + 1
+                        export_to, collect = ((None, False) if not exporting
+                                              else register_export_stream(
+                                                  i, (si, k)))
+                        tid = sched.submit(
+                            _run_scenario_partition, sc, shard, (lo, hi),
+                            engine, export_to, None, collect,
+                            lineage=("scenario", sc.name, si, shard,
+                                     lo, hi))
+                        owner[tid] = (i, (si, k))
+                # a pruned-empty exporter produces no tasks, so its
+                # (empty) export stream is final now — unblock importers
+                # before the run, not never
+                for j in range(len(plans)):
+                    if consumers[j] and not plans[j][1] and not needs[j]:
+                        finish_exports(j)
+                if self.on_scheduler is not None:
+                    self.on_scheduler(sched)
+                sched.run(timeout=timeout, on_task_done=on_task_done)
+                stats = dict(sched.stats)
+        finally:
+            # error-path spill cleanup: a failed suite must not leave
+            # parked images/import streams behind (the backend's
+            # shutdown-time directory reap is the backstop when the
+            # scheduler owned the spill dir)
+            if tracked_spills and reclaim_holder:
+                for p in list(tracked_spills):
+                    reclaim_holder[0](p)
 
         verdicts: dict[str, Verdict] = {}
         for i, (sc, tasks) in enumerate(plans):
-            if tasks:
+            if tasks or needs[i]:
                 image, verdict = agg_out[i]
             else:
                 # pruned-empty scenario: a clean zero-message vacuous
@@ -625,7 +957,7 @@ class ScenarioSuite:
                 messages_in=counts[i][0],
                 messages_out=counts[i][1],
                 wall_time_s=wall,
-                partitions=len(tasks),
+                partitions=total_tasks[i],
                 scheduler_stats=stats,
                 scenario=sc.name,
                 backend=backend_name,

@@ -1,0 +1,32 @@
+"""Distributed message pool: cross-process topic transport (net layer).
+
+The in-process :class:`~repro.core.playback.MessageBus` reproduces ROS
+topic semantics inside one replay partition; this package extends them
+across processes and hosts — the multi-node message pool of the paper's
+platform.  A queued bus lane's FIFO + worker is exactly the shape of a
+socket writer, so the bridge is thin:
+
+    local MessageBus --bridge (queued lane)--> LaneTransport
+        ==[length-prefixed frames, credit-window flow control]==>
+    RemoteBus endpoint --publish_batch--> remote MessageBus subscribers
+
+Layers:
+    wire        -- frame grammar + DATA codec (BinPipedRDD uniform format)
+    transport   -- LaneTransport (sender), RemoteBus (listener endpoint)
+
+Determinism contract: per connection, frames are processed in order, so a
+remote subscriber observes exactly the sender's publish order; credit
+grants follow republish, so backpressure propagates across the wire; and
+``drain()`` acks only after the remote bus has fully drained — the
+end-of-replay barrier spans process boundaries.
+"""
+
+from .transport import LaneTransport, RemoteBus, TransportError
+from .wire import (FrameSocket, WireError, decode_data, encode_data,
+                   MAX_FRAME_BYTES)
+
+__all__ = [
+    "LaneTransport", "RemoteBus", "TransportError",
+    "FrameSocket", "WireError", "decode_data", "encode_data",
+    "MAX_FRAME_BYTES",
+]

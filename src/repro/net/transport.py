@@ -1,0 +1,459 @@
+"""Cross-process topic transport: the distributed half of the message pool.
+
+Two endpoints make a bridge:
+
+``LaneTransport`` (sender)
+    Drains a queued bus lane into a socket.  ``send_message`` — the
+    callback :meth:`repro.core.playback.MessageBus.bridge` subscribes —
+    buffers messages and flushes them as DATA frames sized by the credit
+    window, so wire framing adapts to backpressure instead of deadlocking
+    against it.  A reader thread consumes CREDIT grants and DRAIN acks.
+    Any transport failure (peer gone, credit starvation past ``timeout``)
+    raises from ``send_message``/``drain`` — through the lane's deferred
+    error machinery that means *the replay task fails*; nothing ever
+    blocks forever or drops a frame silently.
+
+``RemoteBus`` (receiver)
+    A listener endpoint that accepts any number of sender connections.
+    Each connection gets its own handler thread, so one stream's frames
+    are processed strictly in order — the remote subscribers observe
+    exactly the sender's publish order.  Received batches are republished
+    into a local :class:`~repro.core.playback.MessageBus`
+    (``bus=``-mode) and/or buffered per stream and committed to a
+    ``sink(stream_id, messages)`` callback at each DRAIN barrier
+    (``sink=``-mode, what the scenario suite's export collector uses —
+    committing at the barrier is what makes "the sender's ``drain()``
+    returned" imply "the collector has the full stream").
+
+Credit-based flow control (see :mod:`repro.net.wire`) propagates
+backpressure across the wire: the receiver replenishes credit only after
+its local republish returns, and a republish into a full queued lane
+blocks — so a slow subscriber three hops away still paces the original
+publisher, the same contract the in-process bus gives.
+"""
+
+from __future__ import annotations
+
+import itertools
+import socket
+import threading
+import time
+from typing import Callable, Optional, Sequence
+
+from repro.core.bag import Message
+
+from .wire import (T_CLOSE, T_CREDIT, T_DATA, T_DRAIN, T_DRAIN_ACK, T_HELLO,
+                   FrameSocket, WireError, decode_data, decode_u32,
+                   encode_data, encode_u32)
+
+
+class TransportError(ConnectionError):
+    """The bridge to the peer is gone (or starved past its timeout)."""
+
+
+class _CreditGate:
+    """Blocking message-credit counter shared by sender threads.
+
+    ``acquire_up_to(n)`` blocks until at least one credit is available and
+    takes up to ``n`` — partial grants shrink the DATA batch rather than
+    stall it, so a window narrower than the sender's flush batch can never
+    deadlock.  ``abort`` wakes every waiter with the transport's death.
+    """
+
+    def __init__(self) -> None:
+        self._avail = 0
+        self._err: Optional[BaseException] = None
+        self._cond = threading.Condition()
+        self.stalls = 0                # acquires that had to wait
+
+    def grant(self, n: int) -> None:
+        with self._cond:
+            self._avail += n
+            self._cond.notify_all()
+
+    def abort(self, err: BaseException) -> None:
+        with self._cond:
+            if self._err is None:
+                self._err = err
+            self._cond.notify_all()
+
+    def acquire_up_to(self, n: int, timeout: float) -> int:
+        deadline = time.monotonic() + timeout
+        with self._cond:
+            waited = False
+            while self._avail == 0:
+                if self._err is not None:
+                    raise TransportError(
+                        f"transport closed while awaiting credit: "
+                        f"{self._err!r}") from self._err
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TransportError(
+                        f"no credit from peer within {timeout}s "
+                        "(remote bus stalled or unreachable)")
+                waited = True
+                self._cond.wait(remaining)
+            if waited:
+                self.stalls += 1
+            take = min(n, self._avail)
+            self._avail -= take
+            return take
+
+
+class LaneTransport:
+    """Socket writer end of a bridged lane (see module docstring).
+
+    ``flush_batch`` bounds how many buffered messages one DATA frame
+    carries; the credit window may shrink a frame further, and so does
+    ``FRAME_BYTES_TARGET`` — frames are also cut by payload size, so
+    MB-scale sensor messages can never assemble a frame the receiver's
+    ``MAX_FRAME_BYTES`` sanity cap would (deterministically, on every
+    retry) reject.  ``timeout`` bounds every wait against the peer
+    (credit, drain ack) — a dead or wedged peer fails the bridge instead
+    of hanging it.
+    """
+
+    #: cut a DATA frame once its payload reaches this many bytes (always
+    #: at least one message per frame) — far under wire.MAX_FRAME_BYTES
+    FRAME_BYTES_TARGET = 8 << 20
+
+    def __init__(self, sock: socket.socket, stream_id: str = "",
+                 flush_batch: int = 128, timeout: float = 30.0):
+        if flush_batch < 1:
+            raise ValueError("flush_batch must be >= 1")
+        try:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:
+            pass                        # not TCP (e.g. a unix socketpair)
+        self.stream_id = stream_id
+        self._fs = FrameSocket(sock)
+        self._flush_batch = flush_batch
+        self._timeout = timeout
+        self._credits = _CreditGate()
+        self._buffer: list[Message] = []
+        self._send_lock = threading.Lock()   # buffer + frame-write order
+        self._acks: set[int] = set()
+        self._ack_cond = threading.Condition()
+        self._drain_token = itertools.count(1)
+        self._error: Optional[BaseException] = None
+        self._closed = False
+        self.messages_sent = 0
+        self.frames_sent = 0
+        self._fs.send_frame(T_HELLO, stream_id.encode("utf-8"))
+        self._reader = threading.Thread(
+            target=self._read_loop, name=f"transport-rx-{stream_id or id(self)}",
+            daemon=True)
+        self._reader.start()
+
+    @classmethod
+    def connect(cls, address: tuple[str, int], stream_id: str = "",
+                flush_batch: int = 128, timeout: float = 30.0,
+                ) -> "LaneTransport":
+        sock = socket.create_connection(address, timeout=timeout)
+        sock.settimeout(None)
+        return cls(sock, stream_id=stream_id, flush_batch=flush_batch,
+                   timeout=timeout)
+
+    @property
+    def bytes_sent(self) -> int:
+        return self._fs.bytes_sent
+
+    @property
+    def credit_stalls(self) -> int:
+        return self._credits.stalls
+
+    # -- receive side (reader thread) --------------------------------------
+
+    def _read_loop(self) -> None:
+        err: BaseException = TransportError("peer closed the connection")
+        try:
+            while True:
+                ftype, body = self._fs.recv_frame()
+                if ftype is None:
+                    break
+                if ftype == T_CREDIT:
+                    self._credits.grant(decode_u32(body))
+                elif ftype == T_DRAIN_ACK:
+                    with self._ack_cond:
+                        self._acks.add(decode_u32(body))
+                        self._ack_cond.notify_all()
+        except (WireError, OSError) as e:
+            err = e
+        finally:
+            if not self._closed:
+                self._error = err
+            # wake anything blocked on the dead peer — credit waiters raise
+            # from acquire, drain waiters re-check _error
+            self._credits.abort(err)
+            with self._ack_cond:
+                self._ack_cond.notify_all()
+
+    # -- send side ----------------------------------------------------------
+
+    def _check_alive(self) -> None:
+        if self._closed:
+            raise TransportError("transport is closed")
+        if self._error is not None:
+            raise TransportError(
+                f"transport failed: {self._error!r}") from self._error
+
+    def send_message(self, msg: Message) -> None:
+        """Buffer one message; flush when the batch threshold is reached.
+        This is the callback a bus bridge's lane delivers into."""
+        with self._send_lock:
+            self._check_alive()
+            self._buffer.append(msg)
+            if len(self._buffer) >= self._flush_batch:
+                self._flush_locked()
+
+    def send_batch(self, msgs: Sequence[Message]) -> None:
+        with self._send_lock:
+            self._check_alive()
+            self._buffer.extend(msgs)
+            if len(self._buffer) >= self._flush_batch:
+                self._flush_locked()
+
+    def _flush_locked(self) -> None:
+        while self._buffer:
+            self._check_alive()
+            n = self._credits.acquire_up_to(
+                min(len(self._buffer), self._flush_batch), self._timeout)
+            size = 0
+            for i in range(n):          # byte-bound the frame as well
+                size += len(self._buffer[i].data)
+                if size >= self.FRAME_BYTES_TARGET:
+                    unused = n - (i + 1)
+                    if unused:          # return the credits we won't use
+                        self._credits.grant(unused)
+                    n = i + 1
+                    break
+            batch, self._buffer = self._buffer[:n], self._buffer[n:]
+            try:
+                self._fs.send_frame(T_DATA, encode_data(batch))
+            except OSError as e:
+                raise TransportError(f"send failed: {e!r}") from e
+            self.messages_sent += len(batch)
+            self.frames_sent += 1
+
+    def flush(self) -> None:
+        """Push every buffered message onto the wire (credit-gated)."""
+        with self._send_lock:
+            self._flush_locked()
+
+    def drain(self) -> None:
+        """Barrier: returns once everything sent so far has been
+        republished on (and committed by) the remote end."""
+        token = next(self._drain_token)
+        with self._send_lock:
+            self._flush_locked()
+            try:
+                self._fs.send_frame(T_DRAIN, encode_u32(token))
+            except OSError as e:
+                raise TransportError(f"drain send failed: {e!r}") from e
+        deadline = time.monotonic() + self._timeout
+        with self._ack_cond:
+            while token not in self._acks:
+                if self._error is not None:
+                    raise TransportError(
+                        f"peer lost before drain ack: {self._error!r}"
+                    ) from self._error
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TransportError(
+                        f"no drain ack within {self._timeout}s")
+                self._ack_cond.wait(remaining)
+            self._acks.discard(token)
+
+    def close(self) -> None:
+        """Best-effort orderly shutdown: flush, CLOSE, close the socket.
+        Never raises for a peer that is already gone — ``drain()`` is the
+        call that *verifies* delivery; ``close()`` only releases."""
+        if self._closed:
+            return
+        try:
+            # flush before marking closed: _check_alive() inside the
+            # flush loop treats a closed transport as dead, so the other
+            # order would silently drop the buffered tail
+            with self._send_lock:
+                if self._buffer and self._error is None:
+                    self._flush_locked()
+                self._closed = True
+                self._fs.send_frame(T_CLOSE)
+        except (TransportError, OSError):
+            pass
+        finally:
+            self._closed = True
+        self._fs.close()
+        self._reader.join(timeout=5.0)
+
+
+class RemoteBus:
+    """Listener endpoint: receives bridged streams and republishes them.
+
+    ``bus``  — every DATA batch is republished into this local
+    :class:`MessageBus` via ``publish_batch`` (per-message subscribers see
+    the sender's publish order; batch subscribers see wire framing).
+    ``sink`` — per-stream collection: messages buffer per connection and
+    ``sink(stream_id, messages)`` is called with a full snapshot at every
+    DRAIN barrier, *before* the ack is sent.  A stream that dies without
+    reaching a barrier is never committed — a crashed sender's partial
+    stream can't contaminate a collector (its retry commits the complete
+    one).  At least one of the two must be given; both may be.
+
+    ``window`` is the per-connection credit window in messages — the
+    remote analogue of a lane's ``maxsize``.
+    """
+
+    def __init__(self, bus=None, sink: Optional[Callable[[str, list[Message]],
+                                                         None]] = None,
+                 host: str = "127.0.0.1", port: int = 0, window: int = 256):
+        if bus is None and sink is None:
+            raise ValueError("RemoteBus needs a bus and/or a sink")
+        if window < 1:
+            raise ValueError("window must be >= 1")
+        self._bus = bus
+        self._sink = sink
+        self._host = host
+        self._port = port
+        self._window = window
+        self._listener: Optional[socket.socket] = None
+        self._accept_thread: Optional[threading.Thread] = None
+        self._conns: list[FrameSocket] = []
+        self._threads: list[threading.Thread] = []
+        self._lock = threading.Lock()
+        self._stopped = False
+        self.messages_received = 0
+        self.frames_received = 0
+        self.errors: list[BaseException] = []
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> tuple[str, int]:
+        listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        listener.bind((self._host, self._port))
+        listener.listen(64)
+        self._listener = listener
+        self._port = listener.getsockname()[1]
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name=f"remotebus-{self._port}",
+            daemon=True)
+        self._accept_thread.start()
+        return self.address
+
+    @property
+    def address(self) -> tuple[str, int]:
+        if self._listener is None:
+            raise RuntimeError("RemoteBus is not started")
+        return (self._host, self._port)
+
+    def stop(self) -> None:
+        """Close the listener and every live connection; join handlers."""
+        self._stopped = True
+        if self._listener is not None:
+            # shutdown() first: close() alone does not wake the accept()
+            # blocked in the accept thread
+            try:
+                self._listener.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                self._listener.close()
+            except OSError:
+                pass
+        with self._lock:
+            conns, self._conns = self._conns, []
+            threads, self._threads = self._threads, []
+        for fs in conns:
+            fs.close()
+        for t in threads:
+            t.join(timeout=5.0)
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=5.0)
+
+    def __enter__(self) -> "RemoteBus":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- serving -------------------------------------------------------------
+
+    def _accept_loop(self) -> None:
+        while not self._stopped:
+            try:
+                sock, _ = self._listener.accept()
+            except OSError:
+                return                   # listener closed
+            try:
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            except OSError:
+                pass
+            fs = FrameSocket(sock)
+            t = threading.Thread(target=self._handle, args=(fs,),
+                                 name=f"remotebus-conn-{self._port}",
+                                 daemon=True)
+            with self._lock:
+                if self._stopped:
+                    # stop() already swapped the registries: a connection
+                    # accepted in this race window must not leak past it
+                    fs.close()
+                    return
+                self._conns.append(fs)
+                self._threads.append(t)
+            t.start()
+
+    def _handle(self, fs: FrameSocket) -> None:
+        stream_id = ""
+        stream: list[Message] = []
+        try:
+            ftype, body = fs.recv_frame()
+            if ftype is None:
+                return
+            if ftype != T_HELLO:
+                raise WireError(f"expected HELLO, got frame type {ftype}")
+            stream_id = body.decode("utf-8")
+            fs.send_frame(T_CREDIT, encode_u32(self._window))
+            while True:
+                ftype, body = fs.recv_frame()
+                if ftype is None or ftype == T_CLOSE:
+                    return
+                if ftype == T_DATA:
+                    msgs = decode_data(body)
+                    self.frames_received += 1
+                    self.messages_received += len(msgs)
+                    if self._bus is not None:
+                        # blocks while downstream lanes are full — credit
+                        # is withheld and the sender stalls: backpressure
+                        # has crossed the wire
+                        self._bus.publish_batch(msgs)
+                    if self._sink is not None:
+                        stream.extend(msgs)
+                    fs.send_frame(T_CREDIT, encode_u32(len(msgs)))
+                elif ftype == T_DRAIN:
+                    if self._bus is not None:
+                        try:
+                            self._bus.drain()
+                        except BaseException as e:  # noqa: BLE001
+                            # a *remote subscriber's* deferred error is the
+                            # remote side's bookkeeping; the barrier (all
+                            # deliveries done) still holds
+                            self.errors.append(e)
+                    if self._sink is not None:
+                        # commit-before-ack: when the sender's drain()
+                        # returns, the collector verifiably has the stream
+                        self._sink(stream_id, list(stream))
+                    fs.send_frame(T_DRAIN_ACK, body)
+                else:
+                    raise WireError(f"unexpected frame type {ftype}")
+        except (WireError, OSError) as e:
+            if not self._stopped:
+                self.errors.append(e)
+        except BaseException as e:      # noqa: BLE001 - a local subscriber
+            # raised during republish: record it and drop the connection —
+            # the sender sees TransportError (credit stops), never a
+            # silent stall
+            self.errors.append(e)
+        finally:
+            fs.close()

@@ -1,0 +1,208 @@
+"""Wire codec of the distributed message pool (net layer, frame grammar).
+
+The paper's message pool spans nodes: ROS playback partitions on different
+Spark workers exchange topic traffic over the network.  This module is the
+byte-level contract of that fabric — deliberately *not* a third
+serialization format:
+
+* a **frame** is ``[u32 body_len][u8 type][body]`` — the same
+  length-prefixed discipline every chunk/record of the bag format uses,
+* a **DATA body** is one message batch in the *batch-array layout* — the
+  compact wire twin of
+  :func:`repro.data.pipeline.assemble_message_batch`: a topic table
+  (``binpipe.serialize`` of UTF-8 names), then per-record ``topic_idx``
+  u32 / ``timestamp`` i64 / ``length`` u32 arrays, then one concatenated
+  payload blob.  Encoding is a vectorized column build plus one join —
+  not a per-message codec — which is what keeps the bridge within
+  striking distance of the in-process bus; and because columns land as
+  contiguous arrays, a receiver can hand them straight to the framed
+  array pipeline (``assemble_message_batch`` / the Pallas decode sweep)
+  without a per-message pass.
+
+Frame types (the whole protocol):
+
+``HELLO``      sender -> receiver, once, first frame: identifies the
+               stream (``stream_id``, UTF-8) so a receiver that *collects*
+               streams (the suite's export collector) can key them.
+``DATA``       sender -> receiver: one message batch.
+``CREDIT``     receiver -> sender: grants ``u32`` more messages.  The
+               receiver issues the initial window right after ``HELLO`` and
+               replenishes only after republishing a batch into its local
+               bus — so downstream backpressure (full lanes on the remote
+               bus) withholds credit and stalls the sending publisher
+               across the wire.
+``DRAIN``      sender -> receiver: barrier request carrying a ``u32``
+               token.  The receiver finishes republishing everything
+               received before it (per-connection frames are processed in
+               order), drains its local bus, then acks.
+``DRAIN_ACK``  receiver -> sender: echo of the token — everything sent
+               before the matching ``DRAIN`` is now visible to remote
+               subscribers.
+``CLOSE``      sender -> receiver: orderly end of stream.
+
+Credits are counted in *messages*, not frames, so a sender low on credit
+can still make progress with a smaller DATA batch (adaptive framing under
+backpressure) instead of deadlocking against a window narrower than its
+batch size.
+"""
+
+from __future__ import annotations
+
+import socket
+import struct
+import threading
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.bag import Message
+from repro.core.binpipe import deserialize, serialize
+
+_FRAME_HDR = struct.Struct("<IB")    # body_len, frame_type
+_U32 = struct.Struct("<I")
+
+T_HELLO = 0
+T_DATA = 1
+T_CREDIT = 2
+T_DRAIN = 3
+T_DRAIN_ACK = 4
+T_CLOSE = 5
+
+#: refuse to allocate for frames beyond this — a corrupt length prefix must
+#: fail loudly, not OOM the process
+MAX_FRAME_BYTES = 256 << 20
+
+
+class WireError(ConnectionError):
+    """Malformed frame or a connection that died mid-frame."""
+
+
+def encode_data(messages: Sequence[Message]) -> bytes:
+    """One DATA body: a message batch in the batch-array layout.
+
+    ``[u32 n][u32 table_len][topic table][topic_idx u32 x n]
+    [timestamp i64 x n][length u32 x n][payload bytes]`` — columns, not
+    per-message records, so the encode is one pass of appends plus array
+    ``tobytes`` and a single payload join.
+    """
+    n = len(messages)
+    table: list[bytes] = []
+    index: dict[str, int] = {}
+    idx = np.empty(n, dtype=np.uint32)
+    ts = np.empty(n, dtype=np.int64)
+    lengths = np.empty(n, dtype=np.uint32)
+    for i, m in enumerate(messages):
+        j = index.get(m.topic)
+        if j is None:
+            j = index[m.topic] = len(table)
+            table.append(m.topic.encode("utf-8"))
+        idx[i] = j
+        ts[i] = m.timestamp
+        lengths[i] = len(m.data)
+    head = serialize(table)
+    return b"".join((_U32.pack(n), _U32.pack(len(head)), head,
+                     idx.tobytes(), ts.tobytes(), lengths.tobytes(),
+                     *(m.data for m in messages)))
+
+
+def decode_data(body: bytes) -> list[Message]:
+    """Invert :func:`encode_data`."""
+    (n,) = _U32.unpack_from(body, 0)
+    (head_len,) = _U32.unpack_from(body, 4)
+    pos = 8
+    topics = [t.decode("utf-8")
+              for t in deserialize(body[pos:pos + head_len])]
+    pos += head_len
+    idx = np.frombuffer(body, np.uint32, n, pos).tolist()
+    pos += 4 * n
+    ts = np.frombuffer(body, np.int64, n, pos).tolist()
+    pos += 8 * n
+    lengths = np.frombuffer(body, np.uint32, n, pos)
+    pos += 4 * n
+    ends = (np.cumsum(lengths, dtype=np.int64) + pos).tolist()
+    # corrupt frames must fail loudly at the boundary, not as silently
+    # truncated payloads that only surface later as a checksum mismatch
+    if n and (ends[-1] != len(body) or max(idx) >= len(topics)):
+        raise WireError(
+            f"corrupt DATA frame: payload columns claim {ends[-1]} bytes "
+            f"of a {len(body)}-byte body / topic table of {len(topics)}")
+    if not n and len(body) != pos:
+        raise WireError("corrupt DATA frame: trailing bytes after an "
+                        "empty batch")
+    mv = memoryview(body)
+    return [Message(topics[j], t, bytes(mv[s:e]))
+            for j, t, s, e in zip(idx, ts, [pos] + ends[:-1], ends)]
+
+
+def encode_u32(value: int) -> bytes:
+    return _U32.pack(value)
+
+
+def decode_u32(body: bytes) -> int:
+    (value,) = _U32.unpack(body)
+    return value
+
+
+class FrameSocket:
+    """Frame-at-a-time view of a connected stream socket.
+
+    ``send_frame`` is serialized by an internal lock (the sender's lane
+    worker and its drain/close caller may both write); ``recv_frame`` is
+    single-consumer by construction (one reader thread per connection).
+    A clean EOF *between* frames returns ``(None, b"")``; EOF *inside* a
+    frame — the peer died mid-message — raises :class:`WireError`.
+    """
+
+    def __init__(self, sock: socket.socket):
+        self._sock = sock
+        self._send_lock = threading.Lock()
+        self.bytes_sent = 0
+        self.bytes_received = 0
+
+    def send_frame(self, ftype: int, body: bytes = b"") -> None:
+        frame = _FRAME_HDR.pack(len(body), ftype) + body
+        with self._send_lock:
+            self._sock.sendall(frame)
+            self.bytes_sent += len(frame)
+
+    def _recv_exact(self, n: int, mid_frame: bool) -> Optional[bytearray]:
+        buf = bytearray(n)
+        view = memoryview(buf)
+        got = 0
+        while got < n:
+            try:
+                r = self._sock.recv_into(view[got:], n - got)
+            except OSError as e:
+                raise WireError(f"connection lost mid-frame: {e!r}") from e
+            if not r:
+                if got or mid_frame:
+                    raise WireError("peer closed the connection mid-frame")
+                return None
+            got += r
+        view.release()
+        return buf          # bytearray: callers only read; skip the copy
+
+    def recv_frame(self) -> tuple[Optional[int], "bytes | bytearray"]:
+        """Next ``(frame_type, body)``; ``(None, b"")`` on clean EOF."""
+        hdr = self._recv_exact(_FRAME_HDR.size, mid_frame=False)
+        if hdr is None:
+            return None, b""
+        body_len, ftype = _FRAME_HDR.unpack(hdr)
+        if body_len > MAX_FRAME_BYTES:
+            raise WireError(f"frame of {body_len} bytes exceeds "
+                            f"MAX_FRAME_BYTES ({MAX_FRAME_BYTES})")
+        body = self._recv_exact(body_len, mid_frame=True) if body_len else b""
+        self.bytes_received += _FRAME_HDR.size + body_len
+        return ftype, body
+
+    def close(self) -> None:
+        # shutdown() first: close() alone does not wake a thread blocked
+        # in recv() on the same socket — the reader must see EOF now
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass

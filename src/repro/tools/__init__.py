@@ -1,0 +1,5 @@
+"""Operational tooling around the platform's persisted artifacts.
+
+    verdict_report -- trend a ScenarioSuite verdict-history JSONL
+                      (``python -m repro.tools.verdict_report log.jsonl``)
+"""

@@ -1,0 +1,170 @@
+"""Verdict history trending: catch drift before it becomes a FAIL.
+
+``ScenarioSuite.run(verdict_log=path)`` appends one JSONL record per
+scenario per run — an accumulating regression history.  A hard FAIL is
+loud on its own; what the history is *for* is the quiet failures: a
+checksum that moved while the status stayed PASS (the golden bag was
+regenerated, a kernel changed rounding, a seed leaked), an output count
+that shifted, a wall time creeping up run over run.  This tool diffs each
+scenario's latest record against its own history and flags exactly those:
+
+    PYTHONPATH=src python -m repro.tools.verdict_report log.jsonl
+    PYTHONPATH=src python -m repro.tools.verdict_report log.jsonl --strict
+
+Flags raised (per scenario, comparing the latest run to the one before,
+and wall time to the median of all earlier runs):
+
+``CHECKSUM-DRIFT``  a per-topic payload checksum changed between two
+                    *passing* runs (a FAIL already screams; drift between
+                    passes is the silent kind)
+``COUNT-DRIFT``     per-topic message count changed between passing runs
+``STATUS-FLIP``     status changed (PASS -> FAIL, FAIL -> PASS,
+                    PASS -> PASS(vacuous) — all worth eyes)
+``WALLTIME``        latest wall time exceeds ``--wall-factor`` (default
+                    1.5) x the median of earlier runs (floored at 50 ms —
+                    sub-noise runs never flag)
+
+``--strict`` exits 1 when any flag fires — the CI trip-wire shape.
+``--json out.json`` additionally writes the full analysis.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import OrderedDict
+from typing import Optional, Sequence
+
+#: wall times below this are scheduling noise, never a regression signal
+WALL_FLOOR_S = 0.05
+
+
+def load_records(path: str) -> list[dict]:
+    records = []
+    with open(path) as f:
+        for line_no, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                records.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{line_no}: bad JSONL record: {e}")
+    return records
+
+
+def _median(values: Sequence[float]) -> float:
+    ordered = sorted(values)
+    mid = len(ordered) // 2
+    if len(ordered) % 2:
+        return ordered[mid]
+    return (ordered[mid - 1] + ordered[mid]) / 2.0
+
+
+def analyze(records: Sequence[dict],
+            wall_factor: float = 1.5) -> dict:
+    """Per-scenario trend analysis over a verdict history.
+
+    Returns ``{"scenarios": {name: {...}}, "flags": [...], "runs": N}``;
+    each flag is ``{"scenario", "flag", "detail"}``.  Records must be in
+    append order (what the JSONL log guarantees).
+    """
+    history: "OrderedDict[str, list[dict]]" = OrderedDict()
+    for rec in records:
+        history.setdefault(rec["scenario"], []).append(rec)
+    flags: list[dict] = []
+    scenarios: dict[str, dict] = {}
+
+    def flag(name: str, kind: str, detail: str) -> None:
+        flags.append({"scenario": name, "flag": kind, "detail": detail})
+
+    for name, runs in history.items():
+        last = runs[-1]
+        entry = {
+            "runs": len(runs),
+            "status": last.get("status"),
+            "wall_time_s": last.get("wall_time_s"),
+            "checksums": last.get("checksums", {}),
+        }
+        scenarios[name] = entry
+        if len(runs) < 2:
+            continue
+        prev = runs[-2]
+        if last.get("status") != prev.get("status"):
+            flag(name, "STATUS-FLIP",
+                 f"{prev.get('status')} -> {last.get('status')}")
+        if last.get("passed") and prev.get("passed"):
+            a, b = prev.get("checksums", {}), last.get("checksums", {})
+            for topic in sorted(set(a) | set(b)):
+                if topic not in a:
+                    flag(name, "CHECKSUM-DRIFT",
+                         f"{topic}: topic appeared (checksum {b[topic]})")
+                elif topic not in b:
+                    flag(name, "CHECKSUM-DRIFT",
+                         f"{topic}: topic disappeared")
+                elif a[topic] != b[topic]:
+                    flag(name, "CHECKSUM-DRIFT",
+                         f"{topic}: {a[topic]} -> {b[topic]} "
+                         "(both runs PASS)")
+            for fld in ("messages_out", "messages_in"):
+                if (fld in prev and fld in last
+                        and prev[fld] != last[fld]):
+                    flag(name, "COUNT-DRIFT",
+                         f"{fld}: {prev[fld]} -> {last[fld]}")
+        earlier = [r.get("wall_time_s") for r in runs[:-1]
+                   if r.get("wall_time_s") is not None]
+        wall = last.get("wall_time_s")
+        if earlier and wall is not None:
+            baseline = max(_median(earlier), WALL_FLOOR_S)
+            entry["wall_baseline_s"] = baseline
+            if wall > wall_factor * baseline:
+                flag(name, "WALLTIME",
+                     f"{wall:.3f}s vs median {baseline:.3f}s "
+                     f"(> {wall_factor:.2f}x)")
+    return {"scenarios": scenarios, "flags": flags, "runs": len(records)}
+
+
+def render(report: dict) -> str:
+    lines = [f"verdict history: {report['runs']} records, "
+             f"{len(report['scenarios'])} scenarios"]
+    for name, entry in report["scenarios"].items():
+        wall = entry.get("wall_time_s")
+        wall_s = f"{wall:.3f}s" if wall is not None else "n/a"
+        lines.append(f"  {name}: {entry['status']} x{entry['runs']} runs, "
+                     f"last wall {wall_s}")
+    if report["flags"]:
+        lines.append(f"{len(report['flags'])} flag(s):")
+        for f in report["flags"]:
+            lines.append(f"  [{f['flag']}] {f['scenario']}: {f['detail']}")
+    else:
+        lines.append("no drift flagged")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.tools.verdict_report",
+        description="Trend a ScenarioSuite verdict-history JSONL and flag "
+                    "drift before it becomes a FAIL.")
+    parser.add_argument("log", help="verdict JSONL written by "
+                                    "ScenarioSuite.run(verdict_log=...)")
+    parser.add_argument("--wall-factor", type=float, default=1.5,
+                        help="flag when latest wall time exceeds this "
+                             "multiple of the median of earlier runs")
+    parser.add_argument("--json", dest="json_out", default=None,
+                        help="also write the analysis as JSON")
+    parser.add_argument("--strict", action="store_true",
+                        help="exit 1 when any flag fires (CI trip-wire)")
+    args = parser.parse_args(argv)
+    report = analyze(load_records(args.log), wall_factor=args.wall_factor)
+    print(render(report))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return 1 if (args.strict and report["flags"]) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -126,6 +126,68 @@ def test_drain_flushes_before_record_stop():
     bus.close()
 
 
+def test_adaptive_lane_deepens_for_slow_sink():
+    """With ``maxsize=None`` a lane observes its producer outrunning a
+    slow sink and converges to a deeper FIFO — bounded by the memory cap —
+    while still delivering every message in order (ROADMAP follow-up)."""
+    from repro.core.playback import _Lane
+    bus = MessageBus()
+    seen = []
+
+    def slow(msg):
+        time.sleep(0.002)
+        seen.append(msg.timestamp)
+
+    bus.subscribe("/t", slow, mode="queued", maxsize=None)
+    lane = next(iter(bus._lanes.values()))
+    assert lane.depth == _Lane.ADAPTIVE_START
+    pub = bus.advertise("/t")
+    for i in range(100):
+        pub.publish(i, b"x")
+    grown_depth = lane.depth
+    assert _Lane.ADAPTIVE_START < grown_depth <= _Lane.ADAPTIVE_MAX
+    assert lane.grown > 0
+    bus.drain()
+    assert seen == list(range(100))             # order never moved
+    bus.close()
+
+
+def test_fixed_lane_depth_never_adapts():
+    """An explicit ``maxsize`` stays put under the same pressure — the
+    adaptive behaviour is opt-in via None."""
+    bus = MessageBus()
+
+    def slow(msg):
+        time.sleep(0.001)
+
+    bus.subscribe("/t", slow, mode="queued", maxsize=4)
+    pub = bus.advertise("/t")
+    for i in range(60):
+        pub.publish(i, b"x")
+    lane = next(iter(bus._lanes.values()))
+    assert lane.depth == 4 and lane.grown == 0
+    bus.drain()
+    bus.close()
+
+
+def test_scenario_default_queue_depth_is_adaptive(bag_path):
+    """Scenario.queue_depth=None (the default) runs staged partitions on
+    adaptive lanes and still produces bit-identical results to a fixed
+    depth."""
+    def scenarios(depth):
+        return [Scenario("s", bag_path, det_logic, pipeline=True,
+                         queue_depth=depth)]
+
+    fixed = ScenarioSuite(scenarios(8), num_workers=2).run(timeout=60)
+    adaptive = ScenarioSuite(scenarios(None), num_workers=2).run(timeout=60)
+    assert (fixed["s"].report.output_image
+            == adaptive["s"].report.output_image)
+    assert ({t: m.checksum for t, m in fixed["s"].metrics.items()}
+            == {t: m.checksum for t, m in adaptive["s"].metrics.items()})
+    with pytest.raises(ValueError):
+        Scenario("bad", bag_path, det_logic, queue_depth=0)
+
+
 def test_queued_batch_subscription_gets_whole_batches():
     bus = MessageBus()
     batches = []

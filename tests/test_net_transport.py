@@ -1,0 +1,344 @@
+"""Distributed message pool: wire codec + LaneTransport/RemoteBus (ISSUE 5).
+
+Covers: DATA codec roundtrips, bridged end-to-end delivery with preserved
+publish order, credit-window backpressure (publisher stalls, nothing
+drops), peer disconnect failing the sender promptly (not hanging), the
+cross-wire ``drain()`` being a true barrier, sink-mode commit-at-drain
+semantics (partial streams of crashed senders are never committed), and
+transport errors surfacing through the bus bridge as task failures.
+"""
+
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Message, MessageBus
+from repro.net import (LaneTransport, RemoteBus, TransportError, decode_data,
+                       encode_data)
+from repro.net.wire import (T_DATA, FrameSocket, WireError, decode_u32,
+                            encode_u32)
+
+
+def _messages(n=100, topics=("/a", "/b", "/c"), payload=32, seed=0):
+    rng = np.random.RandomState(seed)
+    return [Message(topics[i % len(topics)], i * 1000 + int(rng.randint(9)),
+                    rng.bytes(payload)) for i in range(n)]
+
+
+# -- wire codec -------------------------------------------------------------
+
+
+def test_data_codec_roundtrip():
+    msgs = _messages(257, payload=5)
+    assert decode_data(encode_data(msgs)) == msgs
+
+
+def test_data_codec_edge_shapes():
+    # empty payloads, repeated topics, single message, negative-ish ts
+    msgs = [Message("/x", 0, b""), Message("/x", 1, b"\x00" * 300),
+            Message("/y", 2, b"z")]
+    assert decode_data(encode_data(msgs)) == msgs
+    assert decode_data(encode_data([])) == []
+    one = [Message("/solo", 7, b"abc")]
+    assert decode_data(encode_data(one)) == one
+
+
+def test_frame_socket_roundtrip_and_clean_eof():
+    a, b = socket.socketpair()
+    fa, fb = FrameSocket(a), FrameSocket(b)
+    body = encode_data(_messages(10))
+    fa.send_frame(T_DATA, body)
+    ftype, got = fb.recv_frame()
+    assert ftype == T_DATA and bytes(got) == bytes(body)
+    fa.close()
+    assert fb.recv_frame() == (None, b"")       # clean EOF between frames
+    fb.close()
+
+
+def test_frame_socket_mid_frame_eof_raises():
+    a, b = socket.socketpair()
+    fb = FrameSocket(b)
+    # a length prefix promising more bytes than ever arrive
+    a.sendall(b"\xff\x00\x00\x00\x01")
+    a.close()
+    with pytest.raises(WireError):
+        fb.recv_frame()
+    fb.close()
+
+
+def test_u32_helpers():
+    assert decode_u32(encode_u32(0)) == 0
+    assert decode_u32(encode_u32(2**32 - 1)) == 2**32 - 1
+
+
+# -- bridged delivery -------------------------------------------------------
+
+
+def _endpoint(bus=None, sink=None, window=256):
+    ep = RemoteBus(bus=bus, sink=sink, window=window)
+    ep.start()
+    return ep
+
+
+def test_bridge_end_to_end_preserves_publish_order():
+    rx = MessageBus()
+    seen = []
+    rx.subscribe(None, seen.append)
+    ep = _endpoint(bus=rx)
+    tx = MessageBus()
+    transport = LaneTransport.connect(ep.address, stream_id="s1",
+                                      flush_batch=8)
+    bridge = tx.bridge(["/a", "/b"], transport)
+    msgs = _messages(200, topics=("/a", "/b"))
+    for m in msgs:
+        tx.advertise(m.topic).publish_message(m)
+    tx.drain()
+    bridge.drain()
+    assert seen == msgs                     # exact cross-topic order
+    bridge.close()
+    ep.stop()
+    tx.close()
+
+
+def test_bridge_filters_unbridged_topics():
+    rx = MessageBus()
+    seen = []
+    rx.subscribe(None, seen.append)
+    ep = _endpoint(bus=rx)
+    tx = MessageBus()
+    transport = LaneTransport.connect(ep.address)
+    bridge = tx.bridge("/wanted", transport)
+    tx.advertise("/wanted").publish(1, b"x")
+    tx.advertise("/other").publish(2, b"y")
+    tx.advertise("/wanted").publish(3, b"z")
+    tx.drain()
+    bridge.drain()
+    assert [(m.topic, m.timestamp) for m in seen] == [("/wanted", 1),
+                                                      ("/wanted", 3)]
+    bridge.close()
+    ep.stop()
+    tx.close()
+
+
+def test_batch_bridge_delivers_batches():
+    rx = MessageBus()
+    got = []
+    rx.subscribe_batch(None, got.append)
+    ep = _endpoint(bus=rx)
+    tx = MessageBus()
+    transport = LaneTransport.connect(ep.address, flush_batch=16)
+    bridge = tx.bridge(["/a", "/b"], transport, batch=True)
+    msgs = _messages(64, topics=("/a", "/b"))
+    tx.publish_batch(msgs)
+    tx.drain()
+    bridge.drain()
+    flat = [m for b in got for m in b]
+    # per-topic order is preserved (batch delivery groups by topic)
+    for t in ("/a", "/b"):
+        assert [m for m in flat if m.topic == t] == \
+            [m for m in msgs if m.topic == t]
+    bridge.close()
+    ep.stop()
+    tx.close()
+
+
+# -- backpressure across the wire -------------------------------------------
+
+
+def test_credit_window_stalls_publisher_but_drops_nothing():
+    """A tiny credit window against a slow remote subscriber must pace the
+    sending publisher (credit stalls observed) while every message still
+    arrives exactly once, in order."""
+    rx = MessageBus()
+    seen = []
+
+    def slow(msg):
+        time.sleep(0.002)
+        seen.append(msg)
+
+    rx.subscribe(None, slow, mode="queued", maxsize=2)
+    ep = _endpoint(bus=rx, window=4)
+    tx = MessageBus()
+    transport = LaneTransport.connect(ep.address, flush_batch=4)
+    bridge = tx.bridge("/t", transport, maxsize=2)
+    msgs = [Message("/t", i, bytes([i % 256])) for i in range(60)]
+    pub = tx.advertise("/t")
+    for m in msgs:
+        pub.publish_message(m)
+    tx.drain()
+    bridge.drain()
+    rx.drain()
+    assert seen == msgs
+    assert transport.credit_stalls > 0          # the wire actually paced
+    bridge.close()
+    ep.stop()
+    tx.close()
+    rx.close()
+
+
+def test_drain_is_a_true_barrier_across_the_wire():
+    """When ``bridge.drain()`` returns, a slow *queued* subscriber on the
+    remote bus has fully processed every message sent before it — the
+    end-of-replay barrier spans the process boundary."""
+    rx = MessageBus()
+    done = []
+
+    def slow(msg):
+        time.sleep(0.001)
+        done.append(msg.timestamp)
+
+    rx.subscribe("/t", slow, mode="queued", maxsize=4)
+    ep = _endpoint(bus=rx)
+    tx = MessageBus()
+    transport = LaneTransport.connect(ep.address, flush_batch=16)
+    bridge = tx.bridge("/t", transport)
+    pub = tx.advertise("/t")
+    for i in range(80):
+        pub.publish(i, b"x")
+    tx.drain()
+    bridge.drain()
+    # no grace sleep: the barrier alone must guarantee completion
+    assert done == list(range(80))
+    bridge.close()
+    ep.stop()
+    tx.close()
+    rx.close()
+
+
+# -- failure modes ----------------------------------------------------------
+
+
+def test_peer_disconnect_fails_sender_promptly():
+    """A peer that dies mid-stream must surface as a TransportError from
+    send/drain within the transport timeout — never a hang."""
+    rx = MessageBus()
+    ep = _endpoint(bus=rx, window=8)
+    transport = LaneTransport.connect(ep.address, flush_batch=1, timeout=2.0)
+    transport.send_message(Message("/t", 0, b"x"))
+    transport.drain()
+    ep.stop()                                   # peer goes away
+    t0 = time.monotonic()
+    with pytest.raises(TransportError):
+        for i in range(10_000):
+            transport.send_message(Message("/t", i + 1, b"x"))
+            time.sleep(0.001)
+    assert time.monotonic() - t0 < 10.0
+    transport.close()
+
+
+def test_peer_disconnect_surfaces_through_bridge_drain():
+    """The bridge's deferred-error machinery turns a dead peer into an
+    exception at the drain barrier — the shape a replay task fails with."""
+    rx = MessageBus()
+    ep = _endpoint(bus=rx, window=4)
+    tx = MessageBus()
+    transport = LaneTransport.connect(ep.address, flush_batch=1, timeout=2.0)
+    bridge = tx.bridge("/t", transport)
+    pub = tx.advertise("/t")
+    pub.publish(0, b"x")
+    bridge.drain()                              # healthy so far
+    ep.stop()
+    with pytest.raises((TransportError, ConnectionError)):
+        for i in range(10_000):
+            pub.publish(i + 1, b"x")
+            time.sleep(0.001)
+            bridge.drain()
+    try:
+        bridge.close()
+    except (TransportError, ConnectionError):
+        pass                                    # deferred errors re-raise
+    tx.close()
+
+
+def test_credit_starvation_times_out_instead_of_hanging():
+    """A peer that accepts the connection but never grants credit fails
+    the sender with a timeout, not a deadlock."""
+    listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    listener.bind(("127.0.0.1", 0))
+    listener.listen(1)
+    addr = listener.getsockname()
+    accepted = []
+    threading.Thread(
+        target=lambda: accepted.append(listener.accept()[0]),
+        daemon=True).start()
+    transport = LaneTransport.connect(addr, flush_batch=1, timeout=0.3)
+    t0 = time.monotonic()
+    with pytest.raises(TransportError):
+        transport.send_message(Message("/t", 0, b"x"))
+        transport.flush()
+    assert 0.2 < time.monotonic() - t0 < 5.0
+    transport.close()
+    listener.close()
+    for s in accepted:
+        s.close()
+
+
+# -- sink mode (the suite's export collector) --------------------------------
+
+
+def test_sink_commits_full_snapshot_at_drain():
+    committed = {}
+    ep = _endpoint(sink=lambda sid, msgs: committed.__setitem__(sid, msgs))
+    transport = LaneTransport.connect(ep.address, stream_id="sc#0#1",
+                                      flush_batch=4)
+    msgs = _messages(10)
+    for m in msgs[:6]:
+        transport.send_message(m)
+    transport.drain()
+    assert committed["sc#0#1"] == msgs[:6]      # first barrier: 6 so far
+    for m in msgs[6:]:
+        transport.send_message(m)
+    transport.drain()
+    assert committed["sc#0#1"] == msgs          # re-commit supersedes
+    transport.close()
+    ep.stop()
+
+
+def test_sink_never_commits_a_partial_stream():
+    """A sender that dies without reaching a drain barrier leaves nothing
+    behind — a crashed attempt's half stream can't contaminate the
+    collector (its retry commits the complete one)."""
+    committed = {}
+    ep = _endpoint(sink=lambda sid, msgs: committed.__setitem__(sid, msgs))
+    transport = LaneTransport.connect(ep.address, stream_id="crash",
+                                      flush_batch=1)
+    transport.send_message(Message("/t", 0, b"x"))
+    transport.flush()
+    deadline = time.monotonic() + 5.0
+    while ep.messages_received < 1 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    transport._fs.close()                       # die without drain/close
+    time.sleep(0.1)
+    assert committed == {}
+    ep.stop()
+
+
+def test_close_without_drain_flushes_buffered_tail():
+    """``close()`` on a healthy transport pushes the sub-flush_batch tail
+    onto the wire before releasing — a context-manager bridge exit with no
+    explicit drain must not silently drop messages."""
+    rx = MessageBus()
+    seen = []
+    rx.subscribe(None, seen.append)
+    ep = _endpoint(bus=rx)
+    tx = MessageBus()
+    transport = LaneTransport.connect(ep.address, flush_batch=128)
+    msgs = _messages(10)
+    with tx.bridge(["/a", "/b", "/c"], transport):
+        for m in msgs:
+            tx.advertise(m.topic).publish_message(m)
+        tx.drain()                      # lane flushed; wire tail buffered
+    deadline = time.monotonic() + 5.0
+    while len(seen) < len(msgs) and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert seen == msgs
+    ep.stop()
+    tx.close()
+
+
+def test_remote_bus_requires_bus_or_sink():
+    with pytest.raises(ValueError):
+        RemoteBus()

@@ -1,0 +1,126 @@
+"""Verdict-history trending tool (ISSUE 5 satellite): drift flags, strict
+exit codes, and end-to-end operation on a real ScenarioSuite verdict log.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.tools.verdict_report import analyze, load_records, main
+
+
+def _rec(scenario, status="PASS", passed=True, checksums=None, wall=0.1,
+         out=10, into=10):
+    return {"scenario": scenario, "status": status, "passed": passed,
+            "checksums": checksums or {}, "wall_time_s": wall,
+            "messages_out": out, "messages_in": into}
+
+
+def test_no_flags_on_stable_history():
+    recs = [_rec("a", checksums={"/x": 1}), _rec("a", checksums={"/x": 1})]
+    report = analyze(recs)
+    assert report["flags"] == []
+    assert report["scenarios"]["a"]["runs"] == 2
+
+
+def test_checksum_drift_between_passing_runs_flagged():
+    recs = [_rec("a", checksums={"/x": 1, "/y": 2}),
+            _rec("a", checksums={"/x": 1, "/y": 3})]
+    flags = analyze(recs)["flags"]
+    assert [f["flag"] for f in flags] == ["CHECKSUM-DRIFT"]
+    assert "/y" in flags[0]["detail"]
+
+
+def test_topic_appearing_or_disappearing_flagged():
+    recs = [_rec("a", checksums={"/x": 1}),
+            _rec("a", checksums={"/x": 1, "/new": 9})]
+    assert any(f["flag"] == "CHECKSUM-DRIFT" and "appeared" in f["detail"]
+               for f in analyze(recs)["flags"])
+
+
+def test_failing_run_does_not_double_flag_checksums():
+    """A FAIL is loud already: checksum comparison only applies between
+    passing runs, but the status flip itself is flagged."""
+    recs = [_rec("a", checksums={"/x": 1}),
+            _rec("a", status="FAIL", passed=False, checksums={"/x": 2})]
+    flags = analyze(recs)["flags"]
+    assert [f["flag"] for f in flags] == ["STATUS-FLIP"]
+
+
+def test_count_drift_flagged():
+    recs = [_rec("a", out=10), _rec("a", out=12)]
+    assert any(f["flag"] == "COUNT-DRIFT"
+               for f in analyze(recs)["flags"])
+
+
+def test_walltime_regression_flagged_and_floored():
+    recs = [_rec("a", wall=0.2), _rec("a", wall=0.21), _rec("a", wall=0.9)]
+    assert any(f["flag"] == "WALLTIME" for f in analyze(recs)["flags"])
+    # sub-noise runs never flag, however large the ratio
+    tiny = [_rec("b", wall=0.001), _rec("b", wall=0.01)]
+    assert analyze(tiny)["flags"] == []
+
+
+def test_single_run_never_flags():
+    assert analyze([_rec("a")])["flags"] == []
+
+
+def test_cli_strict_exit_codes(tmp_path, capsys):
+    log = tmp_path / "verdicts.jsonl"
+    stable = [_rec("a", checksums={"/x": 1})] * 2
+    with open(log, "w") as f:
+        for r in stable:
+            f.write(json.dumps(r) + "\n")
+    assert main([str(log), "--strict"]) == 0
+    drift = stable + [_rec("a", checksums={"/x": 2})]
+    with open(log, "w") as f:
+        for r in drift:
+            f.write(json.dumps(r) + "\n")
+    assert main([str(log)]) == 0                # informational by default
+    assert main([str(log), "--strict"]) == 1
+    out = capsys.readouterr().out
+    assert "CHECKSUM-DRIFT" in out
+    json_out = tmp_path / "report.json"
+    main([str(log), "--json", str(json_out)])
+    saved = json.loads(json_out.read_text())
+    assert saved["flags"]
+
+
+def test_bad_jsonl_rejected(tmp_path):
+    log = tmp_path / "broken.jsonl"
+    log.write_text('{"scenario": "a"}\nnot-json\n')
+    with pytest.raises(ValueError, match="broken.jsonl:2"):
+        load_records(str(log))
+
+
+def test_end_to_end_with_real_verdict_log(tmp_path):
+    """Two real suite runs with changed logic output: the tool flags the
+    checksum drift a plain PASS/PASS history would hide."""
+    from repro.core import Bag, Scenario, ScenarioSuite
+    bag = str(tmp_path / "drive.bag")
+    b = Bag.open_write(bag, chunk_bytes=4096)
+    rng = np.random.RandomState(0)
+    for i in range(120):
+        b.write("/camera", i * 1000, rng.bytes(32))
+    b.close()
+    log = str(tmp_path / "verdicts.jsonl")
+
+    def run(tag):
+        sc = Scenario("s", bag,
+                      "tests.test_tools_verdict_report:" + tag)
+        ScenarioSuite([sc], num_workers=2).run(timeout=60, verdict_log=log)
+
+    run("logic_v1")
+    run("logic_v1")
+    assert main([log, "--strict"]) == 0
+    run("logic_v2")                     # silently different outputs
+    assert main([log, "--strict"]) == 1
+
+
+def logic_v1(msg):
+    return ("/out", msg.data[:8])
+
+
+def logic_v2(msg):
+    return ("/out", msg.data[:9])
