@@ -23,6 +23,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                          set; writes ``BENCH_transport.json`` (checksums
                          + export/import routing verdicts asserted
                          bit-identical across carriers)
+    perception_*       — zero-copy device path: message-path vs
+                         frame_to_batch vs fused decode→forward jit with
+                         donated buffers; writes ``BENCH_perception.json``
+                         (input checksums + suite verdicts asserted
+                         bit-identical across all three consumers)
     binpipe_*          — paper Fig 4 (BinPipedRDD stage throughput)
     roofline_*         — dry-run roofline terms per (arch x shape x mesh)
 """
@@ -35,12 +40,12 @@ import traceback
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import (aggregation, bag_cache, binpipe, pipeline,
-                            roofline_report, scalability, scenario_matrix,
-                            transport)
+    from benchmarks import (aggregation, bag_cache, binpipe, perception,
+                            pipeline, roofline_report, scalability,
+                            scenario_matrix, transport)
     failures = 0
     for mod in (bag_cache, scalability, scenario_matrix, aggregation,
-                pipeline, transport, binpipe, roofline_report):
+                pipeline, transport, perception, binpipe, roofline_report):
         try:
             mod.main(csv=True)
         except Exception:  # noqa: BLE001

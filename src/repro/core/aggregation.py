@@ -143,15 +143,74 @@ def combine_digests(record_digests: "np.ndarray | Sequence[int]") -> int:
     return int(arr.sum(dtype=np.uint64) & _U32)
 
 
+# -- timestamp sketch (KMV) ---------------------------------------------------
+
+def _ts_hash64(ts: np.ndarray) -> np.ndarray:
+    """Deterministic 64-bit mix (splitmix64 finalizer) of int64 timestamps.
+
+    Deterministic is the point: the sketch keeps a timestamp iff its hash
+    clears a threshold, so which sample survives is a pure function of the
+    timestamp *multiset* — never of arrival order, batch split, or any
+    RNG state — which is what makes sketched partials merge exactly
+    associatively (see :meth:`TopicMetrics.merge`).
+    """
+    with np.errstate(over="ignore"):
+        z = ts.astype(np.int64).view(np.uint64) \
+            + np.uint64(0x9E3779B97F4A7C15)
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        return z ^ (z >> np.uint64(31))
+
+
+def _kmv_compact(ts: np.ndarray, k: int,
+                 theta: Optional[int]) -> tuple[np.ndarray, Optional[int]]:
+    """One KMV (k-minimum-values) compaction step.
+
+    Keeps timestamps whose hash is strictly below ``theta`` (``None`` =
+    keep all), then — if more than ``k`` remain — tightens ``theta`` to
+    the (k+1)-th smallest hash and refilters.  The kept sample is always
+    exactly ``{t : hash(t) < theta}`` of the full multiset, which is the
+    invariant the merge associativity proof leans on: min-ing thresholds
+    and refiltering reproduces, bit for bit, the sketch a single pass over
+    the union would have produced.  Preserves the input's relative order.
+    """
+    ts = np.asarray(ts, dtype=np.int64)
+    h = _ts_hash64(ts)
+    if theta is not None:
+        keep = h < np.uint64(theta)
+        ts, h = ts[keep], h[keep]
+    if len(ts) > k:
+        theta = int(np.partition(h, k)[k])
+        ts = ts[h < np.uint64(theta)]
+    return ts, theta
+
+
 @dataclass(frozen=True)
 class TopicMetrics:
     """Per-topic slice of a merged output bag — also the *mergeable
     partial* workers ship.
 
     ``timestamps`` (sorted int64, excluded from equality/repr) is the
-    exact state :meth:`merge` needs to recompute gap percentiles over a
-    combined multiset; it weighs 8 bytes per message — KBs where the
-    payloads it summarises weigh MBs.
+    state :meth:`merge` needs to recompute gap percentiles over a combined
+    multiset; it weighs 8 bytes per message — KBs where the payloads it
+    summarises weigh MBs.
+
+    **Sketch mode** (``sketch=k``) bounds that state for long-running
+    suites: the timestamp multiset is compacted to a deterministic KMV
+    sample of at most ``k`` values (``theta`` is the hash threshold that
+    defines it).  Counts, byte totals, checksums, and ``t_min``/``t_max``
+    stay *exact*; only the gap percentiles become estimates.  Exact mode
+    (``sketch=None``) remains the default everywhere.
+
+    Gap-percentile error budget in sketch mode: sampling timestamps makes
+    each observed gap the sum of the true gaps it spans, so sample gaps
+    are rescaled by ``(m-1)/(n-1)`` (m = sample size, n = true count) —
+    an unbiased estimate of the *mean* gap.  For near-uniform arrival the
+    quantile error is O(1/sqrt(m)) relative; for heavy-tailed gap
+    distributions the summing biases high quantiles toward the mean (a
+    sampled gap can absorb several small gaps around a large one), so
+    p99 degrades first — size ``k`` generously if tail latency is the
+    metric under test.  Exact when ``n <= k``.
     """
     topic: str
     count: int
@@ -164,20 +223,45 @@ class TopicMetrics:
     checksum: int                # order-free wrapping-u32 payload digest
     timestamps: Optional[np.ndarray] = field(default=None, repr=False,
                                              compare=False)
+    sketch: Optional[int] = field(default=None, compare=False)
+    theta: Optional[int] = field(default=None, repr=False, compare=False)
 
     @classmethod
     def from_state(cls, topic: str, bytes_total: int, checksum: int,
-                   timestamps: np.ndarray) -> "TopicMetrics":
+                   timestamps: np.ndarray, *, sketch: Optional[int] = None,
+                   count: Optional[int] = None, t_min: Optional[int] = None,
+                   t_max: Optional[int] = None,
+                   theta: Optional[int] = None) -> "TopicMetrics":
         """Build finalized metrics from reduced state: a sorted int64
-        timestamp array plus pre-combined byte and checksum totals."""
+        timestamp array plus pre-combined byte and checksum totals.
+
+        ``sketch=k`` compacts the timestamp multiset to its KMV sample
+        before computing gap percentiles.  ``count``/``t_min``/``t_max``
+        carry the exact values when ``timestamps`` is already a sample
+        (merging sketched partials) rather than the full multiset;
+        ``theta`` is the sample's existing hash threshold.
+        """
         ts = np.asarray(timestamps, dtype=np.int64)
-        gaps = np.diff(ts) if len(ts) > 1 else np.zeros(1, np.int64)
+        n = len(ts) if count is None else int(count)
+        lo = (int(ts[0]) if len(ts) else None) if t_min is None else int(t_min)
+        hi = (int(ts[-1]) if len(ts) else None) if t_max is None \
+            else int(t_max)
+        if theta is not None or (sketch is not None and len(ts) > sketch):
+            ts, theta = _kmv_compact(ts, sketch if sketch is not None
+                                     else len(ts), theta)
+            ts = np.sort(ts)
+        m = len(ts)
+        gaps = np.diff(ts) if m > 1 else np.zeros(1, np.int64)
         p50, p90, p99 = np.percentile(gaps, [50, 90, 99])
-        return cls(topic=topic, count=len(ts), bytes_total=int(bytes_total),
-                   t_min=int(ts[0]), t_max=int(ts[-1]),
+        if 1 < m < n:
+            # rescale sampled gaps to the true gap scale (see class doc)
+            f = (m - 1) / (n - 1)
+            p50, p90, p99 = p50 * f, p90 * f, p99 * f
+        return cls(topic=topic, count=n, bytes_total=int(bytes_total),
+                   t_min=lo, t_max=hi,
                    gap_p50_ns=float(p50), gap_p90_ns=float(p90),
                    gap_p99_ns=float(p99), checksum=int(checksum) & 0xFFFFFFFF,
-                   timestamps=ts)
+                   timestamps=ts, sketch=sketch, theta=theta)
 
     def merge(self, other: "TopicMetrics") -> "TopicMetrics":
         """Pure associative combine of two partials of the same topic.
@@ -186,6 +270,12 @@ class TopicMetrics:
         bounds extend, and gap percentiles are recomputed from the merged
         timestamp multiset — so merging per-partition partials is *exactly*
         ``compute_metrics`` over the merged bag, in any association order.
+
+        Sketched partials stay exactly associative: thresholds min,
+        samples refilter against the tighter threshold, and the result is
+        bit-identical to sketching the union directly — the KMV sample is
+        a deterministic function of the timestamp multiset, so association
+        order cannot move even the estimated percentiles.
         """
         if self.topic != other.topic:
             raise ValueError(f"cannot merge metrics of {self.topic!r} "
@@ -199,11 +289,17 @@ class TopicMetrics:
                 f"topic {self.topic!r}: merging requires timestamp-carrying "
                 "partials (metrics loaded without their timestamps cannot "
                 "be combined exactly)")
+        sketches = [s for s in (self.sketch, other.sketch) if s is not None]
+        thetas = [t for t in (self.theta, other.theta) if t is not None]
         ts = np.sort(np.concatenate([self.timestamps, other.timestamps]))
         return TopicMetrics.from_state(
             self.topic, self.bytes_total + other.bytes_total,
             (np.uint64(self.checksum) + np.uint64(other.checksum)) & _U32,
-            ts)
+            ts, sketch=min(sketches) if sketches else None,
+            theta=min(thetas) if thetas else None,
+            count=self.count + other.count,
+            t_min=min(self.t_min, other.t_min),
+            t_max=max(self.t_max, other.t_max))
 
 
 def combine_metrics(partials: Iterable[dict[str, TopicMetrics]],
@@ -236,18 +332,44 @@ def accumulate_topic_state(state: dict[str, list], batch: Sequence[Message],
         st[2].append(arrays["timestamps"][sel])
 
 
-def finalize_topic_state(state: dict[str, list],
-                         sort: bool = False) -> dict[str, TopicMetrics]:
+def accumulate_topic_state_arrays(state: dict[str, list], batch: dict,
+                                  digests: np.ndarray) -> None:
+    """Zero-copy twin of :func:`accumulate_topic_state`: scatter per-record
+    digests into the same per-topic reduction state straight from a
+    columnar batch — one carrying the ``topics``/``topic_idx`` routing
+    columns of :func:`repro.data.pipeline.batch_from_columns` /
+    :func:`repro.net.wire.frame_to_batch` — so the metric fold over a wire
+    stream never materialises ``Message`` objects.  Checksums are order-
+    free, so the two accumulators are bit-interchangeable over equivalent
+    streams."""
+    digests = digests.astype(np.uint64)
+    idx = np.asarray(batch["topic_idx"])
+    lengths = batch["lengths"]
+    ts = batch["timestamps"]
+    for j, topic in enumerate(batch["topics"]):
+        sel = idx == j
+        if not sel.any():
+            continue
+        st = state.setdefault(topic, [0, np.uint64(0), []])
+        st[0] += int(lengths[sel].sum())
+        st[1] = (st[1] + digests[sel].sum(dtype=np.uint64)) & _U32
+        st[2].append(np.asarray(ts)[sel])
+
+
+def finalize_topic_state(state: dict[str, list], sort: bool = False,
+                         sketch: Optional[int] = None,
+                         ) -> dict[str, TopicMetrics]:
     """Turn accumulated per-topic state into finalized (mergeable)
     :class:`TopicMetrics`, topics sorted.  ``sort=True`` sorts each topic's
     timestamp multiset first — required when the state was accumulated from
     a stream that is not globally time-ordered (e.g. a live output tap
     whose user logic emits arbitrary timestamps); sorting never changes
-    checksums (order-free) and makes gap percentiles exact."""
+    checksums (order-free) and makes gap percentiles exact.  ``sketch=k``
+    finalizes each topic in KMV sketch mode (see :class:`TopicMetrics`)."""
     return {topic: TopicMetrics.from_state(
                 topic, st[0], st[1],
                 np.sort(np.concatenate(st[2])) if sort
-                else np.concatenate(st[2]))
+                else np.concatenate(st[2]), sketch=sketch)
             for topic, st in sorted(state.items())}
 
 
@@ -280,17 +402,32 @@ class MetricsTap:
 
     All three are bit-identical, so engine choice never moves a checksum
     or a verdict.
+
+    ``ts_sketch=k`` caps the tap's memory on unbounded streams: each
+    topic's timestamp multiset is compacted incrementally to its KMV
+    sample (at most ``k`` values) while exact count / bounds / checksum
+    accumulate alongside, so the finalized :class:`TopicMetrics` are
+    sketch-mode partials — verdict-identical to exact mode (golden
+    compares read only the exact fields), approximate only in the gap
+    percentiles.
     """
 
     def __init__(self, engine: str = "numpy", metric_batch: int = 256,
-                 exclude_topics: Sequence[str] = ()):
+                 exclude_topics: Sequence[str] = (),
+                 ts_sketch: Optional[int] = None):
         if engine not in ("numpy", "jax", "fused"):
             raise ValueError(f"unknown digest engine {engine!r}")
+        if ts_sketch is not None and ts_sketch < 1:
+            raise ValueError("ts_sketch must be >= 1")
         self.engine = engine
         self.metric_batch = metric_batch
+        self.ts_sketch = ts_sketch
         self._exclude = set(exclude_topics)
         self._buffer: list[Message] = []
         self._state: dict[str, list] = {}
+        # topic -> [exact count, exact t_min, exact t_max, theta] once the
+        # timestamp chunks have been compacted at least once
+        self._exact: dict[str, list] = {}
         self._finalized: Optional[dict[str, TopicMetrics]] = None
 
     def on_message(self, msg: Message) -> None:
@@ -325,14 +462,51 @@ class MetricsTap:
         arrays = assemble_message_batch(batch)
         accumulate_topic_state(self._state, batch, arrays,
                                self._digests(arrays))
+        if self.ts_sketch is not None:
+            self._compact()
+
+    def _compact(self) -> None:
+        """Fold each topic's fresh timestamp chunks into its KMV sample,
+        banking the exact count/bounds first — the step that keeps tap
+        memory at O(k) per topic regardless of stream length."""
+        for topic, st in self._state.items():
+            ex = self._exact.get(topic)
+            if ex is None:
+                sample, raw = np.empty(0, np.int64), st[2]
+                ex = self._exact[topic] = [0, None, None, None]
+            else:
+                sample, raw = st[2][0], st[2][1:]
+            if not raw:
+                continue
+            fresh = np.concatenate(raw)
+            ex[0] += len(fresh)
+            lo, hi = int(fresh.min()), int(fresh.max())
+            ex[1] = lo if ex[1] is None else min(ex[1], lo)
+            ex[2] = hi if ex[2] is None else max(ex[2], hi)
+            merged = np.concatenate([sample, fresh])
+            sample, ex[3] = _kmv_compact(merged, self.ts_sketch, ex[3])
+            st[2][:] = [sample]
 
     def finalize(self) -> dict[str, TopicMetrics]:
         """Flush the tail batch and return the mergeable per-topic
         partials.  Idempotent — safe to call from cleanup paths."""
         if self._finalized is None:
             self._flush()
-            self._finalized = finalize_topic_state(self._state, sort=True)
+            if self.ts_sketch is None:
+                self._finalized = finalize_topic_state(self._state,
+                                                       sort=True)
+            else:
+                self._compact()
+                self._finalized = {
+                    topic: TopicMetrics.from_state(
+                        topic, st[0], st[1], np.sort(st[2][0]),
+                        sketch=self.ts_sketch, count=self._exact[topic][0],
+                        t_min=self._exact[topic][1],
+                        t_max=self._exact[topic][2],
+                        theta=self._exact[topic][3])
+                    for topic, st in sorted(self._state.items())}
             self._state = {}
+            self._exact = {}
         return self._finalized
 
 

@@ -77,9 +77,20 @@ LogicRef = Union[UserLogic, BatchUserLogic, str]
 def resolve_logic_ref(ref: LogicRef) -> Callable:
     """Resolve a ``"package.module:attr"`` string ref to the callable it
     names; callables pass through.  String refs are what a process-backend
-    scenario ships across the pickle boundary."""
+    scenario ships across the pickle boundary.
+
+    ``"perception://<model>"`` refs resolve to the stock jitted
+    decode→forward batched logic (:mod:`repro.perception`), cached per
+    process so every partition naming the same model shares one compiled
+    step and one deterministic param set.  Perception scenarios must set
+    ``batch_size`` (the step consumes assembled batches) and run on
+    in-process backends (see :class:`ScenarioSuite`).
+    """
     if callable(ref):
         return ref
+    if str(ref).startswith("perception://"):
+        from repro.perception import get_step
+        return get_step(str(ref))
     mod_name, _, attr = str(ref).partition(":")
     if not attr:
         raise ValueError(f"logic ref {ref!r} is not 'module:attr'")
@@ -131,6 +142,12 @@ class Scenario:
     (:class:`repro.core.aggregation.MetricsTap`): ``"auto"`` resolves to
     the fused Pallas consume step for batched in-process scenarios and the
     fork-safe numpy engine otherwise (process workers never init jax).
+    ``ts_sketch`` bounds the sink's per-topic timestamp state to a KMV
+    sample of that many values (see
+    :class:`repro.core.aggregation.TopicMetrics`): counts, bounds and
+    checksums — everything golden verdicts read — stay exact; gap
+    percentiles become estimates.  ``None`` (default) keeps exact
+    multisets.
 
     ``exports``/``imports`` wire scenarios together through the
     distributed message pool (:mod:`repro.net`): a scenario's user-logic
@@ -161,6 +178,7 @@ class Scenario:
     pipeline: Optional[bool] = None      # None = auto (see docstring)
     queue_depth: Optional[int] = None    # None = adaptive lanes
     metrics_engine: str = "auto"
+    ts_sketch: Optional[int] = None      # None = exact timestamp multisets
     exports: Optional[tuple[str, ...]] = None     # topics fed to importers
     imports: Optional[tuple[str, ...]] = None     # topics fed by exporters
 
@@ -170,6 +188,15 @@ class Scenario:
         if self.metrics_engine not in ("auto", "numpy", "jax", "fused"):
             raise ValueError(f"scenario {self.name!r}: unknown "
                              f"metrics_engine {self.metrics_engine!r}")
+        if self.ts_sketch is not None and self.ts_sketch < 1:
+            raise ValueError(f"scenario {self.name!r}: ts_sketch >= 1 "
+                             "(or None for exact timestamp multisets)")
+        if (isinstance(self.user_logic, str)
+                and self.user_logic.startswith("perception://")
+                and self.batch_size is None):
+            raise ValueError(
+                f"scenario {self.name!r}: perception:// logic is batched — "
+                "set batch_size")
         if self.queue_depth is not None and self.queue_depth < 1:
             raise ValueError(f"scenario {self.name!r}: queue_depth >= 1 "
                              "(or None for adaptive)")
@@ -345,7 +372,7 @@ def _run_scenario_partition(scenario: Scenario, source: "str | bytes",
     # metrics ride the sink stage: per-record digests accumulate as outputs
     # stream past, so partials are ready at drain (no output-image re-sweep);
     # input-topic exclusion is enforced bus-side (sink_kw below)
-    tap = MetricsTap(engine=metrics_engine)
+    tap = MetricsTap(engine=metrics_engine, ts_sketch=scenario.ts_sketch)
 
     n_out = 0
     n_drop = 0
@@ -724,6 +751,18 @@ class ScenarioSuite:
                            backend=self.backend,
                            **self.scheduler_kwargs) as sched:
                 backend_name = sched.backend.name
+                if backend_name == "process":
+                    jitted = [sc.name for sc in self.scenarios
+                              if isinstance(sc.user_logic, str)
+                              and sc.user_logic.startswith("perception://")]
+                    if jitted:
+                        # forked workers must never initialise jax (the
+                        # driver is jax-loaded; fork + XLA threads can
+                        # deadlock) — fail loudly instead of hanging
+                        raise ValueError(
+                            f"scenarios {jitted} use perception:// logic, "
+                            "which is jitted and cannot run on the process "
+                            "backend; use the thread backend")
                 pool_agg = self.aggregator
                 if backend_name == "process" and pool_agg.engine != "numpy":
                     # never initialize jax inside a forked worker of a

@@ -1,5 +1,8 @@
-from .pipeline import (BagTokenDataset, PrefetchIterator, write_token_bag,
-                       synthetic_corpus_bag)
+from .pipeline import (BagTokenDataset, PrefetchIterator,
+                       assemble_message_batch, batch_from_columns,
+                       iter_message_batches, payload_blob, payload_matrix,
+                       synthetic_corpus_bag, write_token_bag)
 
-__all__ = ["BagTokenDataset", "PrefetchIterator", "write_token_bag",
-           "synthetic_corpus_bag"]
+__all__ = ["BagTokenDataset", "PrefetchIterator", "assemble_message_batch",
+           "batch_from_columns", "iter_message_batches", "payload_blob",
+           "payload_matrix", "synthetic_corpus_bag", "write_token_bag"]

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Iterator, Optional, Sequence
 
 import numpy as np
@@ -51,6 +52,86 @@ def assemble_message_batch(messages: Sequence[Message], align: int = 128,
                                   dtype=np.int64, count=len(messages)),
         "scale": np.full(len(messages), scale, dtype=np.float32),
         "zero_point": np.full(len(messages), zero_point, dtype=np.float32),
+    }
+
+
+def payload_matrix(blob, lengths, align: int = 128) -> np.ndarray:
+    """Record-per-row (R, Nb) uint8 matrix from a concatenated payload blob.
+
+    The vectorized twin of :func:`assemble_message_batch`'s per-message copy
+    loop: ``blob`` is the concatenation of R payloads whose byte counts are
+    ``lengths`` — exactly the payload column of a wire DATA body or a
+    ``binpipe`` partition.  Layout parameters (Nb = max length rounded up to
+    ``align``, zero padding) are identical to ``assemble_message_batch``, so
+    the two construction paths are bit-interchangeable for the decode
+    kernels and the digest algebra.
+
+    When every record is already Nb bytes (uniform, align-multiple payloads
+    — the steady state of sensor streams), this is a pure ``reshape`` view
+    of the blob: zero copies between the wire frame and the device feed.
+    Ragged batches fall back to one vectorized scatter (no Python loop).
+    """
+    lengths = np.asarray(lengths)
+    R = int(lengths.shape[0])
+    if R == 0:
+        raise ValueError("empty message batch")
+    if isinstance(blob, (bytes, bytearray, memoryview)):
+        blob = np.frombuffer(blob, dtype=np.uint8)
+    else:
+        blob = np.asarray(blob, dtype=np.uint8)
+    nb = max(int(lengths.max()), 1)
+    nb = (nb + align - 1) // align * align
+    if int(lengths.min()) == nb:        # uniform aligned records
+        return blob.reshape(R, nb)
+    out = np.zeros((R, nb), dtype=np.uint8)
+    l64 = lengths.astype(np.int64)
+    ends = np.cumsum(l64)
+    starts = ends - l64
+    rows = np.repeat(np.arange(R, dtype=np.int64), l64)
+    cols = np.arange(int(ends[-1]), dtype=np.int64) - np.repeat(starts, l64)
+    out.reshape(-1)[rows * nb + cols] = blob
+    return out
+
+
+def payload_blob(payload: np.ndarray, lengths) -> np.ndarray:
+    """Inverse of :func:`payload_matrix`: the concatenated valid bytes of
+    each row as one flat uint8 array (a reshape view when rows are full)."""
+    payload = np.ascontiguousarray(payload, dtype=np.uint8)
+    R, nb = payload.shape
+    l64 = np.asarray(lengths).astype(np.int64)
+    if R and int(l64.min()) == nb:
+        return payload.reshape(-1)
+    ends = np.cumsum(l64)
+    starts = ends - l64
+    rows = np.repeat(np.arange(R, dtype=np.int64), l64)
+    total = int(ends[-1]) if R else 0
+    cols = np.arange(total, dtype=np.int64) - np.repeat(starts, l64)
+    return payload.reshape(-1)[rows * nb + cols]
+
+
+def batch_from_columns(topics: Sequence[str], topic_idx, timestamps,
+                       lengths, blob, *, align: int = 128,
+                       scale: float = 1.0 / 255.0,
+                       zero_point: float = 0.0) -> dict:
+    """Build the ``assemble_message_batch`` dict straight from columnar
+    arrays — the zero-copy seam between the wire codec and the device path.
+
+    Returns the usual five batch keys (bit-identical layout to
+    ``assemble_message_batch`` of the equivalent ``Message`` list) plus the
+    routing columns a batch-level consumer needs in place of per-message
+    ``Message.topic``: ``topics`` (tuple of names) and ``topic_idx`` (R,)
+    uint32 into it.  Kernels read the five core keys and ignore the extras.
+    """
+    lengths_i32 = np.asarray(lengths).astype(np.int32)
+    return {
+        "payload": payload_matrix(blob, lengths_i32, align),
+        "lengths": lengths_i32,
+        "timestamps": np.asarray(timestamps, dtype=np.int64),
+        "scale": np.full(len(lengths_i32), scale, dtype=np.float32),
+        "zero_point": np.full(len(lengths_i32), zero_point,
+                              dtype=np.float32),
+        "topics": tuple(topics),
+        "topic_idx": np.asarray(topic_idx).astype(np.uint32),
     }
 
 
@@ -213,19 +294,53 @@ class PrefetchIterator:
         return self
 
     def __next__(self):
-        item = self._q.get()
-        if item is self._done:
-            if self._err is not None:
-                raise self._err
-            raise StopIteration
-        return item
+        # Never a bare blocking get: after close() — or a drain race that
+        # consumed the done sentinel — nothing will ever arrive, and a
+        # consumer parked in q.get() would hang forever.  Poll with a short
+        # timeout and re-check the liveness facts each round; the timeout
+        # only matters on an empty queue (a ready item wakes us
+        # immediately).
+        while True:
+            if self._stop.is_set():
+                raise StopIteration
+            try:
+                item = self._q.get(timeout=0.05)
+            except queue.Empty:
+                if not self._thread.is_alive():
+                    # worker gone and its sentinel already consumed:
+                    # surface the error once, then end the stream
+                    err, self._err = self._err, None
+                    if err is not None:
+                        raise err
+                    raise StopIteration
+                continue
+            if item is self._done:
+                err, self._err = self._err, None
+                if err is not None:
+                    raise err
+                raise StopIteration
+            return item
 
     def close(self) -> None:
-        """Stop the reader thread and release its buffered items."""
+        """Stop the reader thread, join it, and release buffered items.
+
+        Safe in every worker state — mid-stream, finished, or dead from a
+        source-iterator exception: the drain below keeps unblocking any
+        stop-aware put until the thread exits, so close() cannot wedge
+        against a full queue.  Only a source iterator stuck in native code
+        can outlive the join deadline; the worker is a daemon thread, so
+        even that cannot pin interpreter shutdown.
+        """
         self._stop.set()
-        while True:                      # unblock a full-queue put promptly
+        deadline = time.monotonic() + 5.0
+        while self._thread.is_alive() and time.monotonic() < deadline:
+            try:                         # unblock a full-queue put promptly
+                self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=0.05)
+        while True:                      # drop whatever remained buffered
             try:
                 self._q.get_nowait()
             except queue.Empty:
                 break
-        self._thread.join(timeout=5.0)

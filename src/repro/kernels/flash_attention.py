@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .compat import CompilerParams
+from .compat import CompilerParams, resolve_interpret
 
 NEG_INF = -1e30
 
@@ -89,18 +89,27 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                        jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("causal", "window", "blk_q", "blk_k",
-                              "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int = 0,
                     blk_q: int = 128, blk_k: int = 128,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: "bool | None" = None) -> jax.Array:
     """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd); H % KV == 0.
 
     Returns (B, H, Sq, hd) in q.dtype.  ``window`` > 0 adds sliding-window
-    masking on top of causal.
+    masking on top of causal.  ``interpret=None`` resolves via
+    :func:`repro.kernels.compat.resolve_interpret`.
     """
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            blk_q=blk_q, blk_k=blk_k,
+                            interpret=resolve_interpret(interpret))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "blk_q", "blk_k",
+                              "interpret"))
+def _flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     causal: bool, window: int, blk_q: int, blk_k: int,
+                     interpret: bool) -> jax.Array:
     B, H, Sq, hd = q.shape
     _, KV, Sk, _ = k.shape
     G = H // KV

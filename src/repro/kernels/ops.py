@@ -1,38 +1,37 @@
 """Jit'd public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True off-TPU (this container is CPU-only; the
-kernels are *targeted* at TPU and validated in interpret mode).  On a real
-TPU backend the same calls compile to Mosaic.
+``interpret=None`` resolves through
+:func:`repro.kernels.compat.resolve_interpret`: the ``REPRO_PALLAS_INTERPRET``
+env var wins, otherwise compiled Mosaic on a real TPU backend and Python
+interpret mode everywhere else (this container is CPU-only; the kernels are
+*targeted* at TPU and validated in interpret mode).
 """
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .compat import resolve_interpret
 from .flash_attention import flash_attention
 from .selective_scan import selective_scan
 from .sensor_decode import sensor_decode
 
 
 def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
+    # kept for callers that need the resolved mode itself (benchmarks)
+    return resolve_interpret(None)
 
 
 def attention(q, k, v, *, causal=True, window=0, blk_q=128, blk_k=128,
               interpret=None):
     """Flash attention; layout (B, H, S, hd) / (B, KV, S, hd)."""
-    if interpret is None:
-        interpret = _interpret_default()
     return flash_attention(q, k, v, causal=causal, window=window,
                            blk_q=blk_q, blk_k=blk_k, interpret=interpret)
 
 
 def mamba_scan(x, dt, B, C, A, *, blk_d=128, blk_s=128, interpret=None):
     """Selective scan; x/dt (b,S,di), B/C (b,S,N), A (di,N) negative."""
-    if interpret is None:
-        interpret = _interpret_default()
     return selective_scan(x, dt, B, C, A, blk_d=blk_d, blk_s=blk_s,
                           interpret=interpret)
 
@@ -40,8 +39,6 @@ def mamba_scan(x, dt, B, C, A, *, blk_d=128, blk_s=128, interpret=None):
 def decode_records(payload, scale, zero_point, lengths, *, blk_r=8,
                    blk_n=512, interpret=None):
     """On-device BinPipedRDD decode stage (paper Fig 4)."""
-    if interpret is None:
-        interpret = _interpret_default()
     return sensor_decode(payload, scale, zero_point, lengths,
                          blk_r=blk_r, blk_n=blk_n, interpret=interpret)
 

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .compat import CompilerParams
+from .compat import CompilerParams, resolve_interpret
 
 
 def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, h_scr, *,
@@ -48,14 +48,22 @@ def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, y_ref, h_scr, *,
     h_scr[...] = jax.lax.fori_loop(0, blk_s, step, h_scr[...])
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("blk_d", "blk_s", "interpret"))
 def selective_scan(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
                    A: jax.Array, *, blk_d: int = 128, blk_s: int = 128,
-                   interpret: bool = True) -> jax.Array:
+                   interpret: "bool | None" = None) -> jax.Array:
     """x, dt: (batch, S, d_inner); B, C: (batch, S, N); A: (d_inner, N)
     (A already negative, i.e. ``A = -exp(A_log)``).  Returns y (batch, S,
-    d_inner) f32."""
+    d_inner) f32.  ``interpret=None`` resolves via
+    :func:`repro.kernels.compat.resolve_interpret`."""
+    return _selective_scan(x, dt, B, C, A, blk_d=blk_d, blk_s=blk_s,
+                           interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("blk_d", "blk_s", "interpret"))
+def _selective_scan(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
+                    A: jax.Array, *, blk_d: int, blk_s: int,
+                    interpret: bool) -> jax.Array:
     bsz, S, di = x.shape
     N = A.shape[1]
     blk_d = min(blk_d, di)

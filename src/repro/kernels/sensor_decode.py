@@ -24,7 +24,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .compat import CompilerParams
+from .compat import CompilerParams, resolve_interpret
 
 
 def _decode_kernel(payload_ref, scale_ref, zp_ref, len_ref, out_ref, *,
@@ -40,13 +40,26 @@ def _decode_kernel(payload_ref, scale_ref, zp_ref, len_ref, out_ref, *,
     out_ref[...] = jnp.where(col < ln, val, 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("blk_r", "blk_n", "interpret"))
 def sensor_decode(payload: jax.Array, scale: jax.Array, zero_point: jax.Array,
                   lengths: jax.Array, *, blk_r: int = 8, blk_n: int = 512,
-                  interpret: bool = True) -> jax.Array:
+                  interpret: "bool | None" = None) -> jax.Array:
     """payload: (R, Nb) uint8 — one framed record per row (128-aligned);
     scale, zero_point: (R,) f32; lengths: (R,) int32 valid-byte counts.
-    Returns (R, Nb) f32 with padding bytes zeroed."""
+    Returns (R, Nb) f32 with padding bytes zeroed.
+
+    ``interpret=None`` resolves via :func:`repro.kernels.compat
+    .resolve_interpret` (env ``REPRO_PALLAS_INTERPRET``, else compiled on
+    TPU / interpreted elsewhere); resolution happens here, outside the jit,
+    so the trace cache keys on the concrete mode.
+    """
+    return _sensor_decode(payload, scale, zero_point, lengths, blk_r=blk_r,
+                          blk_n=blk_n, interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("blk_r", "blk_n", "interpret"))
+def _sensor_decode(payload: jax.Array, scale: jax.Array,
+                   zero_point: jax.Array, lengths: jax.Array, *, blk_r: int,
+                   blk_n: int, interpret: bool) -> jax.Array:
     R, Nb = payload.shape
     blk_r = min(blk_r, R)
     blk_n = min(blk_n, Nb)
@@ -140,12 +153,12 @@ def _decode_metrics_kernel(payload_ref, scale_ref, zp_ref, len_ref, ts_ref,
         max_ref[...] = jnp.maximum(max_ref[...], 0)
 
 
-@functools.partial(jax.jit, static_argnames=("blk_r", "blk_n", "interpret"))
 def sensor_decode_metrics(payload: jax.Array, scale: jax.Array,
                           zero_point: jax.Array, lengths: jax.Array,
                           ts_low: jax.Array, *, blk_r: int = 128,
                           blk_n: int = 512,
-                          interpret: bool = True) -> dict[str, jax.Array]:
+                          interpret: "bool | None" = None
+                          ) -> dict[str, jax.Array]:
     """Single-pass decode **and** metric extraction (ISSUE 3 tentpole).
 
     Same contract as :func:`sensor_decode` plus ``ts_low``: (R,) uint32
@@ -164,7 +177,21 @@ def sensor_decode_metrics(payload: jax.Array, scale: jax.Array,
     The default record block is larger than :func:`sensor_decode`'s: the
     (blk_r, 1) accumulator tiles amortize the sequential byte-block sweep
     best over wide record blocks (measured optimum ~128 rows).
+
+    ``interpret=None`` resolves via :func:`repro.kernels.compat
+    .resolve_interpret` (env ``REPRO_PALLAS_INTERPRET``, else platform-
+    aware), outside the jit cache.
     """
+    return _sensor_decode_metrics(payload, scale, zero_point, lengths,
+                                  ts_low, blk_r=blk_r, blk_n=blk_n,
+                                  interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("blk_r", "blk_n", "interpret"))
+def _sensor_decode_metrics(payload: jax.Array, scale: jax.Array,
+                           zero_point: jax.Array, lengths: jax.Array,
+                           ts_low: jax.Array, *, blk_r: int, blk_n: int,
+                           interpret: bool) -> dict[str, jax.Array]:
     R, Nb = payload.shape
     blk_r = min(blk_r, R)
     blk_n = min(blk_n, Nb)
@@ -213,7 +240,8 @@ def sensor_decode_metrics(payload: jax.Array, scale: jax.Array,
     }
 
 
-def decode_message_batch(batch: dict, *, interpret: bool = True) -> jax.Array:
+def decode_message_batch(batch: dict, *,
+                         interpret: "bool | None" = None) -> jax.Array:
     """Run the decode stage on one assembled replay micro-batch.
 
     ``batch`` is the dict produced by
@@ -245,20 +273,18 @@ def batch_record_digests(batch: dict,
     to :func:`repro.core.aggregation.record_digests_np` and the jitted
     ``record_digest`` reduction, so engine choice never moves a verdict.
 
-    ``interpret=None`` resolves platform-aware like :mod:`repro.kernels.ops`
-    (compiled on TPU, interpret mode elsewhere) — the stock sink-stage path
-    must never run the Pallas kernel in Python emulation on real hardware.
+    ``interpret=None`` resolves via :func:`repro.kernels.compat
+    .resolve_interpret` (env toggle, else compiled on TPU / interpret mode
+    elsewhere) — the stock sink-stage path must never run the Pallas kernel
+    in Python emulation on real hardware.
     """
-    if interpret is None:
-        from .ops import _interpret_default
-        interpret = _interpret_default()
     return np.asarray(
         decode_message_batch_metrics(batch, interpret=interpret)
         ["record_digests"])
 
 
 def decode_message_batch_metrics(batch: dict, *,
-                                 interpret: bool = True) -> dict:
+                                 interpret: "bool | None" = None) -> dict:
     """Fused decode + metrics over one assembled replay micro-batch: the
     features ``decode_message_batch`` returns plus the per-record digest /
     count / min / max reductions, from one payload sweep (see

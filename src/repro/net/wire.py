@@ -134,6 +134,75 @@ def decode_data(body: bytes) -> list[Message]:
             for j, t, s, e in zip(idx, ts, [pos] + ends[:-1], ends)]
 
 
+def frame_to_batch(body, *, align: int = 128, scale: float = 1.0 / 255.0,
+                   zero_point: float = 0.0) -> dict:
+    """Reinterpret a DATA body as the ``assemble_message_batch`` dict —
+    the zero-copy device path (no per-message ``Message`` objects).
+
+    The columnar body already *is* the batch: ``timestamps`` and the
+    payload blob become numpy views over the frame bytes, and for uniform
+    align-multiple payloads the (R, Nb) payload matrix is a pure reshape
+    of that view — the received frame feeds the Pallas decode without a
+    single per-record copy (see ``repro.data.pipeline.payload_matrix`` for
+    the ragged fallback).  Returns the five batch keys bit-identical to
+    ``assemble_message_batch(decode_data(body))`` plus ``topics`` /
+    ``topic_idx`` routing columns; :func:`batch_to_frame` is the inverse,
+    so republishing a batch over another hop is column-to-column too.
+
+    Validation matches :func:`decode_data`: corrupt column lengths or topic
+    indices raise :class:`WireError` at the boundary.
+    """
+    from repro.data.pipeline import batch_from_columns
+
+    (n,) = _U32.unpack_from(body, 0)
+    (head_len,) = _U32.unpack_from(body, 4)
+    pos = 8
+    topics = [t.decode("utf-8")
+              for t in deserialize(bytes(body[pos:pos + head_len]))]
+    pos += head_len
+    idx = np.frombuffer(body, np.uint32, n, pos)
+    pos += 4 * n
+    ts = np.frombuffer(body, np.int64, n, pos)
+    pos += 8 * n
+    lengths = np.frombuffer(body, np.uint32, n, pos)
+    pos += 4 * n
+    total = int(lengths.sum(dtype=np.int64))
+    if n and (pos + total != len(body)
+              or (topics and int(idx.max()) >= len(topics))
+              or (not topics)):
+        raise WireError(
+            f"corrupt DATA frame: payload columns claim {pos + total} bytes "
+            f"of a {len(body)}-byte body / topic table of {len(topics)}")
+    if not n:
+        raise WireError("empty DATA frame has no batch form")
+    blob = np.frombuffer(body, np.uint8, total, pos)
+    return batch_from_columns(topics, idx, ts, lengths, blob, align=align,
+                              scale=scale, zero_point=zero_point)
+
+
+def batch_to_frame(batch: dict) -> bytes:
+    """Inverse of :func:`frame_to_batch`: one DATA body from a batch dict
+    carrying ``topics``/``topic_idx`` routing columns.
+
+    Byte-exact roundtrip — ``batch_to_frame(frame_to_batch(b)) == b`` —
+    because every column is written back in wire order and the payload blob
+    is regathered by the same length column that framed it.  Re-exporting a
+    received batch to another node is therefore column-to-column: no
+    ``Message`` materialization on either side of the hop.
+    """
+    topics = batch["topics"]
+    idx = np.asarray(batch["topic_idx"]).astype(np.uint32)
+    ts = np.asarray(batch["timestamps"]).astype(np.int64)
+    lengths = np.asarray(batch["lengths"]).astype(np.uint32)
+    from repro.data.pipeline import payload_blob
+    blob = payload_blob(np.asarray(batch["payload"]),
+                        np.asarray(batch["lengths"]))
+    head = serialize([t.encode("utf-8") for t in topics])
+    return b"".join((_U32.pack(len(idx)), _U32.pack(len(head)), head,
+                     idx.tobytes(), ts.tobytes(), lengths.tobytes(),
+                     blob.tobytes()))
+
+
 def encode_u32(value: int) -> bytes:
     return _U32.pack(value)
 

@@ -419,3 +419,125 @@ def test_aggregate_standalone_vacuous_rules():
     demanding = _write_bag(None, [("/t", 1, b"x")])
     _, v3 = agg.aggregate("empty", [], golden=demanding)
     assert not v3.passed and not v3.vacuous
+
+
+# -- timestamp KMV sketch ----------------------------------------------------
+
+
+def _ts_metrics(ts, topic="/t", sketch=None):
+    from repro.core.aggregation import TopicMetrics
+    ts = np.sort(np.asarray(ts, dtype=np.int64))
+    return TopicMetrics.from_state(topic, len(ts) * 8, 1, ts, sketch=sketch)
+
+
+def test_sketch_exact_below_k_and_default_exact():
+    rng = np.random.RandomState(3)
+    ts = np.cumsum(rng.randint(1, 1000, size=200))
+    exact = _ts_metrics(ts)
+    small = _ts_metrics(ts, sketch=512)        # n <= k: nothing compacted
+    assert exact.sketch is None and exact.theta is None
+    assert len(exact.timestamps) == 200
+    assert small.theta is None
+    assert np.array_equal(small.timestamps, exact.timestamps)
+    assert (small.gap_p50_ns, small.gap_p90_ns, small.gap_p99_ns) \
+        == (exact.gap_p50_ns, exact.gap_p90_ns, exact.gap_p99_ns)
+
+
+def test_sketch_bounds_state_and_keeps_exact_fields():
+    rng = np.random.RandomState(4)
+    ts = np.cumsum(rng.randint(1, 1000, size=5000))
+    m = _ts_metrics(ts, sketch=64)
+    assert len(m.timestamps) <= 64
+    assert m.theta is not None
+    # exact fields survive the compaction
+    assert m.count == 5000
+    assert (m.t_min, m.t_max) == (int(ts.min()), int(ts.max()))
+    # estimates land near truth on a near-uniform gap distribution
+    exact = _ts_metrics(ts)
+    assert abs(m.gap_p50_ns - exact.gap_p50_ns) / exact.gap_p50_ns < 0.5
+
+
+def test_sketch_merge_is_exactly_associative():
+    """Merging sketched partials in ANY association order is bit-identical
+    to sketching the union directly — the KMV sample is a deterministic
+    function of the timestamp multiset."""
+    rng = np.random.RandomState(5)
+    ts = np.cumsum(rng.randint(1, 5000, size=3000))
+    parts = [_ts_metrics(ts[i::3], sketch=48) for i in range(3)]
+    import dataclasses
+    direct = dataclasses.replace(_ts_metrics(ts, sketch=48),
+                                 checksum=3)    # three partials of sum 1
+    left = parts[0].merge(parts[1]).merge(parts[2])
+    right = parts[0].merge(parts[1].merge(parts[2]))
+    for merged in (left, right):
+        assert merged == direct                 # dataclass equality
+        assert np.array_equal(merged.timestamps, direct.timestamps)
+        assert merged.theta == direct.theta
+        assert (merged.gap_p50_ns, merged.gap_p90_ns, merged.gap_p99_ns) \
+            == (direct.gap_p50_ns, direct.gap_p90_ns, direct.gap_p99_ns)
+
+
+def test_sketch_merge_mixed_with_exact_partial():
+    rng = np.random.RandomState(6)
+    ts = np.cumsum(rng.randint(1, 100, size=1000))
+    sketched = _ts_metrics(ts[:500], sketch=32)
+    exact = _ts_metrics(ts[500:])              # exact-mode partial
+    m = sketched.merge(exact)
+    assert m.count == 1000
+    assert m.sketch == 32 and len(m.timestamps) <= 32
+    assert m.checksum == 2                      # wrapping sum of 1 + 1
+
+
+def test_metrics_tap_sketch_matches_direct_sketch():
+    """A ts_sketch tap folding a long stream chunk by chunk must finalize
+    bit-identically to sketching the full multiset in one shot."""
+    from repro.core.aggregation import MetricsTap, TopicMetrics
+
+    rng = np.random.RandomState(7)
+    msgs = [Message("/cam", int(t), bytes([i % 256]) * 16)
+            for i, t in enumerate(np.cumsum(rng.randint(1, 900, size=2000)))]
+    tap = MetricsTap(engine="numpy", metric_batch=64, ts_sketch=40)
+    for m in msgs:
+        tap.on_message(m)
+    out = tap.finalize()["/cam"]
+    assert len(out.timestamps) <= 40 and out.count == 2000
+
+    exact_tap = MetricsTap(engine="numpy", metric_batch=64)
+    for m in msgs:
+        exact_tap.on_message(m)
+    exact = exact_tap.finalize()["/cam"]
+    direct = TopicMetrics.from_state(
+        "/cam", exact.bytes_total, exact.checksum,
+        np.sort(np.asarray([m.timestamp for m in msgs], np.int64)),
+        sketch=40)
+    assert out == direct
+    assert np.array_equal(out.timestamps, direct.timestamps)
+    assert out.theta == direct.theta
+    assert out.checksum == exact.checksum       # checksums stay exact
+
+
+def test_metrics_tap_rejects_bad_sketch():
+    from repro.core.aggregation import MetricsTap
+    with pytest.raises(ValueError, match="ts_sketch"):
+        MetricsTap(ts_sketch=0)
+
+
+def test_scenario_ts_sketch_plumbs_to_verdict_metrics(tmp_path):
+    shards = _fleet(tmp_path, n_shards=2, n=400)
+    exact = ScenarioSuite(
+        [Scenario("fleet", bag_paths=shards, user_logic=fleet_logic,
+                  num_partitions=2)], num_workers=2).run()["fleet"]
+    sketched = ScenarioSuite(
+        [Scenario("fleet", bag_paths=shards, user_logic=fleet_logic,
+                  num_partitions=2, ts_sketch=16)],
+        num_workers=2).run()["fleet"]
+    assert sketched.passed
+    for topic, m in sketched.metrics.items():
+        e = exact.metrics[topic]
+        # exact planes survive sketching end to end
+        assert (m.checksum, m.count, m.bytes_total, m.t_min, m.t_max) \
+            == (e.checksum, e.count, e.bytes_total, e.t_min, e.t_max)
+        assert len(m.timestamps) <= 16
+    with pytest.raises(ValueError, match="ts_sketch"):
+        Scenario("bad", bag_paths=shards, user_logic=fleet_logic,
+                 ts_sketch=0)

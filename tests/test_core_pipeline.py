@@ -571,6 +571,87 @@ def test_prefetch_close_stops_abandoned_reader():
     it2.close()
 
 
+def test_prefetch_worker_exception_propagates_then_stops():
+    """A source iterator that raises mid-stream surfaces the error exactly
+    once in __next__; the worker thread exits and is joinable."""
+    from repro.data.pipeline import PrefetchIterator
+
+    def src():
+        yield 1
+        yield 2
+        raise ValueError("source died")
+
+    it = PrefetchIterator(src(), depth=4)
+    got = []
+    with pytest.raises(ValueError, match="source died"):
+        for x in it:
+            got.append(x)
+    assert got == [1, 2]
+    it._thread.join(timeout=2.0)
+    assert not it._thread.is_alive()
+    # the error surfaced once; the stream is simply over afterwards
+    with pytest.raises(StopIteration):
+        next(it)
+    it.close()                                  # idempotent after the fact
+
+
+def test_prefetch_close_after_worker_exception_does_not_hang():
+    """Regression: close() while the dead worker's done-sentinel (or a
+    buffered item) still clogs the full queue must return promptly with the
+    thread joined — not block forever on a queue nobody will drain."""
+    from repro.data.pipeline import PrefetchIterator
+
+    def src():
+        yield b"a"          # fills the depth-1 queue
+        yield b"b"          # worker blocks putting this one
+        raise ValueError("never reached until the queue drains")
+
+    it = PrefetchIterator(src(), depth=1)
+    assert next(it) == b"a"
+    t0 = time.monotonic()
+    it.close()
+    assert time.monotonic() - t0 < 3.0
+    assert not it._thread.is_alive()
+    with pytest.raises(StopIteration):          # closed stream stays closed
+        next(it)
+
+
+def test_prefetch_blocked_next_unblocks_on_close():
+    """A consumer parked in __next__ on an empty queue (source stalled)
+    must observe close() and end the stream instead of hanging."""
+    from repro.data.pipeline import PrefetchIterator
+
+    release = threading.Event()
+
+    def src():
+        yield 0
+        release.wait(10.0)                      # stalled source
+        yield 1
+
+    it = PrefetchIterator(src(), depth=1)
+    assert next(it) == 0
+    outcome = []
+
+    def consume():
+        try:
+            next(it)
+            outcome.append("item")
+        except StopIteration:
+            outcome.append("stop")
+
+    consumer = threading.Thread(target=consume)
+    consumer.start()
+    time.sleep(0.15)                            # let it park in the poll
+    closer = threading.Thread(target=it.close)
+    closer.start()
+    consumer.join(timeout=2.0)
+    assert outcome == ["stop"]
+    release.set()                               # un-stall so close() joins
+    closer.join(timeout=2.0)
+    assert not closer.is_alive()
+    assert not it._thread.is_alive()
+
+
 def test_rosplay_prefetch_survives_subscriber_error(bag_path):
     """A synchronous subscriber raising mid-replay must not leak the
     prefetch reader: run() propagates the error and stops the reader."""
