@@ -1,30 +1,67 @@
-"""Paper Fig 6 (§4.1) — ROSBag cache performance.
+"""Paper Fig 6 (§4.1) — ROSBag cache performance, two levels deep.
 
-"We compare the performance of ROS play (read) and ROS record (write) with
-and without using in memory cache.  Small File Test: repeatedly read and
-write [many] files 1 KB in size; Large File Test: [fewer] files 1 MB in
+**Level 1 — chunk cache (the paper's figure).**  "We compare the
+performance of ROS play (read) and ROS record (write) with and without
+using in memory cache.  Small File Test: repeatedly read and write
+[many] files 1 KB in size; Large File Test: [fewer] files 1 MB in
 size."   Paper's machine: 12-core, 65 GB; claimed speedups ~3x write,
-~5x read (large), ~10x (small).
+~5x read (large), ~10x (small).  This container has 1 core and a fast
+tmpfs-backed disk, so absolute numbers differ; the *shape* of the
+result (memory cache >> disk, small files benefiting most) is the
+reproduction target.  Disk writes include fsync (the paper's platform
+persists bags); set REPRO_BAG_NO_FSYNC=1 to measure page-cache-only
+disk I/O.
 
-This container has 1 core and a fast tmpfs-backed disk, so absolute
-numbers differ; the *shape* of the result (memory cache >> disk, small
-files benefiting most) is the reproduction target.  Disk writes include
-fsync (the paper's platform persists bags); set REPRO_BAG_NO_FSYNC=1 to
-measure page-cache-only disk I/O.
+**Level 2 — result cache (the suite race).**  The same suite runs
+twice against one content-addressed result cache (``repro.cache``):
+cold (every scenario replays, entries written) then warm (every
+scenario rehydrates, zero replay tasks scheduled).  User logic carries
+a per-message ``latency_model_s`` so the cold run costs real seconds —
+the regime the cache exists for.  Warm must be >= ``MIN_WARM_SPEEDUP``x
+faster AND bit-identical: statuses, per-topic checksums, full metric
+tuples and the merged output image are asserted equal, and every warm
+verdict must carry ``cache == "hit"``.
+
+Emits CSV rows plus machine-readable ``BENCH_bag_cache.json``.
+``--check`` re-reads the JSON and gates speedup + parity (the CI
+trip-wire); ``--warm-smoke DIR`` runs the suite twice against a
+*persistent* cache dir and exits non-zero unless the second invocation
+scores at least one hit — the shape CI uses to prove a cache restored
+by ``actions/cache`` is actually being consumed across workflow runs.
+
+    PYTHONPATH=src python -m benchmarks.bag_cache
+    PYTHONPATH=src python -m benchmarks.bag_cache --check [JSON]
+    PYTHONPATH=src python -m benchmarks.bag_cache --warm-smoke DIR
 """
 
 from __future__ import annotations
 
+import hashlib
+import json
 import os
 import shutil
+import sys
 import tempfile
 import time
 
+import numpy as np
+
+from repro.core import Scenario, ScenarioSuite
 from repro.core.bag import Bag
 
 # scaled from the paper (1e6 x 1KB / 1e5 x 1MB) to single-core CI budgets
 SMALL = {"count": 20_000, "size": 1024, "label": "small(1KB)"}
 LARGE = {"count": 400, "size": 1 << 20, "label": "large(1MB)"}
+
+# -- suite-race knobs ---------------------------------------------------------
+SUITE_MSGS = 600             # per scenario bag
+SUITE_PAYLOAD = 256
+SUITE_LATENCY_S = 0.004      # per-message model cost -> cold ~2.4s/scenario
+SUITE_TOPICS = ("/camera", "/lidar")
+MIN_WARM_SPEEDUP = 5.0       # acceptance floor, gated by --check
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         os.pardir, "BENCH_bag_cache.json")
 
 
 def _write_bag(backend: str, path, count: int, size: int) -> float:
@@ -79,10 +116,98 @@ def run(case: dict) -> dict:
         shutil.rmtree(d, ignore_errors=True)
 
 
-def main(csv: bool = True) -> list[tuple]:
+# -- level 2: result-cache suite race -----------------------------------------
+
+def _slow_logic(msg):
+    """Module-level so scenarios are cacheable (stable module:attr ref);
+    the latency model on the Scenario — not a sleep here — prices it."""
+    return ("/det" + msg.topic, msg.data[:16])
+
+
+def _make_suite_bag(path: str, n: int = SUITE_MSGS) -> str:
+    rng = np.random.RandomState(11)     # fixed seed: identical bag content
+    bag = Bag.open_write(path, chunk_bytes=8 * 1024)
+    for i in range(n):
+        bag.write(SUITE_TOPICS[i % len(SUITE_TOPICS)], i * 1000,
+                  rng.bytes(SUITE_PAYLOAD))
+    bag.close()
+    return path
+
+
+def _suite_scenarios(bag_path: str,
+                     latency_s: float = SUITE_LATENCY_S) -> list[Scenario]:
+    return [
+        Scenario("cached-perception", bag_path, _slow_logic,
+                 latency_model_s=latency_s),
+        Scenario("cached-planning", bag_path, _slow_logic,
+                 topics=("/camera",), drop_rate=0.05, seed=13,
+                 latency_model_s=latency_s),
+    ]
+
+
+def _snapshot(verdicts) -> dict:
+    """Everything "bit-identical" means for the race: status, per-topic
+    checksums, full metric tuples, counts, and the merged output image."""
+    return {
+        name: {
+            "status": v.status,
+            "checksums": {t: int(m.checksum)
+                          for t, m in sorted(v.metrics.items())},
+            "metrics": {t: (m.count, m.bytes_total, m.t_min, m.t_max,
+                            m.gap_p50_ns, m.gap_p90_ns, m.gap_p99_ns)
+                        for t, m in sorted(v.metrics.items())},
+            "messages": (v.report.messages_in, v.report.messages_out,
+                         v.report.messages_dropped),
+            "output_sha": hashlib.sha256(
+                v.report.output_image).hexdigest(),
+        }
+        for name, v in verdicts.items()
+    }
+
+
+def run_suite_race() -> dict:
+    with tempfile.TemporaryDirectory(prefix="repro-cachebench-") as d:
+        bag_path = _make_suite_bag(os.path.join(d, "drive.bag"))
+        cache_dir = os.path.join(d, "result-cache")
+
+        suite = ScenarioSuite(_suite_scenarios(bag_path), num_workers=2)
+        t0 = time.perf_counter()
+        cold_v = suite.run(cache=cache_dir, timeout=300)
+        cold_s = time.perf_counter() - t0
+        cold_stats = suite.last_cache_stats
+
+        suite = ScenarioSuite(_suite_scenarios(bag_path), num_workers=2)
+        t0 = time.perf_counter()
+        warm_v = suite.run(cache=cache_dir, timeout=300)
+        warm_s = time.perf_counter() - t0
+        warm_stats = suite.last_cache_stats
+
+    all_warm_hits = all(v.cache == "hit" for v in warm_v.values())
+    verdicts_identical = _snapshot(cold_v) == _snapshot(warm_v)
+    assert all_warm_hits, f"warm run missed the cache: {warm_stats}"
+    assert verdicts_identical, "warm rehydration drifted from cold replay"
+    return {
+        "bench": "bag_cache_suite",
+        "messages": SUITE_MSGS, "payload_bytes": SUITE_PAYLOAD,
+        "latency_model_s": SUITE_LATENCY_S,
+        "scenarios": sorted(warm_v),
+        "cold_wall_s": cold_s, "warm_wall_s": warm_s,
+        "warm_speedup": cold_s / warm_s,
+        "min_warm_speedup": MIN_WARM_SPEEDUP,
+        "cold_stats": cold_stats, "warm_stats": warm_stats,
+        "all_warm_hits": all_warm_hits,
+        "verdicts_identical": verdicts_identical,
+        "checksums": {n: s["checksums"]
+                      for n, s in _snapshot(warm_v).items()},
+    }
+
+
+def main(csv: bool = True, json_path: str = JSON_PATH) -> list[tuple]:
     rows = []
+    fig6 = []
     for case in (SMALL, LARGE):
         r = run(case)
+        fig6.append(r)
         rows.append(("bag_cache_write_" + r["case"],
                      r["write_mem_s"] / max(r["mb"], 1e-9) * 1e6,
                      f"write speedup {r['write_speedup']:.2f}x "
@@ -93,11 +218,75 @@ def main(csv: bool = True) -> list[tuple]:
                      f"read speedup {r['read_speedup']:.2f}x "
                      f"(disk {r['read_disk_s']:.3f}s mem "
                      f"{r['read_mem_s']:.3f}s)"))
+    race = run_suite_race()
+    rows.append(("bag_cache_suite_cold", race["cold_wall_s"] * 1e6,
+                 f"{race['cold_wall_s']:.3f}s replayed "
+                 f"({race['cold_stats']['puts']} entries written)"))
+    rows.append(("bag_cache_suite_warm", race["warm_wall_s"] * 1e6,
+                 f"{race['warm_wall_s']:.3f}s rehydrated "
+                 f"({race['warm_stats']['hits']} hits)"))
+    rows.append(("bag_cache_suite_warm_speedup", race["warm_speedup"],
+                 "verdicts + checksums + output image bit-identical"))
     if csv:
-        for name, us, derived in rows:
-            print(f"{name},{us:.2f},{derived}")
+        for name, val, derived in rows[:-1]:
+            print(f"{name},{val:.2f},{derived}")
+        print(f"{rows[-1][0]},{rows[-1][1]:.2f}x,{rows[-1][2]}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"fig6": fig6, "suite_race": race}, f, indent=2)
+            f.write("\n")
     return rows
 
 
+def check(json_path: str = JSON_PATH) -> int:
+    """CI gate: warm must be >= MIN_WARM_SPEEDUP x cold AND bit-identical."""
+    with open(json_path) as f:
+        race = json.load(f)["suite_race"]
+    floor = race.get("min_warm_speedup", MIN_WARM_SPEEDUP)
+    print(f"warm {race['warm_wall_s']:.3f}s vs cold "
+          f"{race['cold_wall_s']:.3f}s -> {race['warm_speedup']:.1f}x "
+          f"(floor {floor:.1f}x)")
+    if not race.get("all_warm_hits"):
+        print("FAIL: warm suite run did not hit the cache on every "
+              "scenario", file=sys.stderr)
+        return 1
+    if not race.get("verdicts_identical"):
+        print("FAIL: rehydrated verdicts are not bit-identical to the "
+              "cold replay", file=sys.stderr)
+        return 1
+    if race["warm_speedup"] < floor:
+        print(f"FAIL: warm speedup {race['warm_speedup']:.2f}x below the "
+              f"{floor:.1f}x floor", file=sys.stderr)
+        return 1
+    return 0
+
+
+def warm_smoke(cache_dir: str) -> int:
+    """Run a tiny suite twice against a *persistent* cache dir; the
+    second invocation must score >= 1 hit.  Bag content and scenario
+    params are fixed, and keys are path-independent, so a dir restored
+    by CI's ``actions/cache`` keeps hitting across workflow runs."""
+    with tempfile.TemporaryDirectory(prefix="repro-cachesmoke-") as d:
+        bag_path = _make_suite_bag(os.path.join(d, "drive.bag"), n=120)
+        for attempt in (1, 2):
+            suite = ScenarioSuite(
+                _suite_scenarios(bag_path, latency_s=0.0), num_workers=2)
+            suite.run(cache=cache_dir, timeout=120)
+            print(f"warm-smoke run {attempt}: {suite.last_cache_stats}")
+        hits = suite.last_cache_stats["hits"]
+    if hits < 1:
+        print("FAIL: second suite invocation scored zero cache hits",
+              file=sys.stderr)
+        return 1
+    print(f"warm-smoke OK: {hits} hit(s) on second invocation")
+    return 0
+
+
 if __name__ == "__main__":
+    if "--warm-smoke" in sys.argv:
+        i = sys.argv.index("--warm-smoke")
+        sys.exit(warm_smoke(sys.argv[i + 1]))
+    if "--check" in sys.argv:
+        args = [a for a in sys.argv[1:] if a != "--check"]
+        sys.exit(check(args[0] if args else JSON_PATH))
     main()

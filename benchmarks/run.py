@@ -3,7 +3,12 @@
     PYTHONPATH=src python -m benchmarks.run
 
 Prints ``name,us_per_call,derived`` CSV rows:
-    bag_cache_*        — paper Fig 6 (ROSBag memory cache vs disk)
+    bag_cache_*        — paper Fig 6 (ROSBag memory cache vs disk) plus
+                         the content-addressed result-cache suite race
+                         (cold replay vs warm rehydration); writes
+                         ``BENCH_bag_cache.json`` at the repo root
+                         (warm must be >= 5x cold with bit-identical
+                         verdicts — gated by ``--check`` in CI)
     scalability_*      — paper Fig 7 + §4.2 extrapolation
     scenario_matrix_*  — batched vs per-message replay × executor backend;
                          also writes machine-readable

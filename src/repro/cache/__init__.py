@@ -1,0 +1,33 @@
+"""Content-addressed result cache: incremental suite re-execution.
+
+The platform's dominant workload at fleet scale is the *unchanged re-run*:
+regression suites replayed against mostly-unchanged recorded data, where
+almost every scenario recomputes a verdict that is provably identical to
+the last one.  Replay here is deterministic and bit-identical across
+backends, carriers and replay shapes (ARCHITECTURE.md §5–8), which makes
+a cached result *substitutable* for a recomputed one — so the hot path of
+a warm suite collapses from full replay to a metadata read.
+
+Key derivation (see :meth:`ResultCache.scenario_key`)::
+
+    key = H(format, logic version, kernel/interpret config,
+            aggregator tolerance, Scenario.fingerprint(),
+            per-shard bag content digests, golden bag digest,
+            provider keys of every imported-from scenario)
+
+Every term is content-addressed: a single flipped byte in a bag, any
+scenario parameter change, a logic-version bump, or an interpret-mode
+flip produces a different key and a clean re-replay.  Store entries are
+written atomically and read corruption-safely — a truncated or garbled
+entry is a *miss* (fall back to replay), never a suite failure.
+"""
+
+from .result import (LOGIC_VERSION_ENV, CachedResult, ResultCache,
+                     decode_message_stream, encode_message_stream)
+from .store import CacheStore, StoreCorruption
+
+__all__ = [
+    "CacheStore", "StoreCorruption",
+    "CachedResult", "ResultCache", "LOGIC_VERSION_ENV",
+    "encode_message_stream", "decode_message_stream",
+]

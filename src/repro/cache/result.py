@@ -1,0 +1,266 @@
+"""Result-level cache: scenario keys, entry codec, hit/miss accounting.
+
+:class:`ResultCache` is what ``ScenarioSuite.run(cache=...)`` talks to.
+It owns three things:
+
+* **key derivation** — :meth:`ResultCache.scenario_key` folds every term
+  that can move a verdict into one SHA-256: the store format version, the
+  logic version (``REPRO_LOGIC_VERSION`` env or constructor arg — bump it
+  when user-logic *code* changes under an unchanged ref), the resolved
+  Pallas interpret mode (``REPRO_PALLAS_INTERPRET``), the aggregator
+  tolerance, the scenario's canonical parameter fingerprint
+  (:meth:`repro.core.simulation.Scenario.fingerprint`), the content
+  digests of every bag shard and of the golden bag, and — for importing
+  scenarios — the keys of every provider, so a change anywhere upstream
+  in the routing DAG invalidates every scenario downstream of it.
+
+* **entry codec** — :class:`CachedResult` round-trips a scenario's full
+  outcome: verdict (status/diffs), per-topic :class:`TopicMetrics`
+  including their timestamp multisets (bit-identical checksums and gap
+  percentiles on rehydrate), the merged output bag image, replay counts,
+  and — when the scenario exports topics — its committed export stream,
+  so an importer downstream of a cached exporter replays exactly the
+  stream a live run would have fed it.
+
+* **bag digesting** — memoized per ``(path, size, mtime)`` so one warm
+  suite run digests each shard once even when many scenarios share it.
+
+Loads are corruption-safe end to end: a store-level miss, a garbled
+entry, or a codec mismatch all return ``None`` (replay), never raise.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.aggregation import Diff, TopicMetrics
+from repro.core.bag import Bag, Message, bag_content_digest
+
+from .store import CacheStore
+
+#: bump when user-logic *code* changes under an unchanged module:attr ref
+LOGIC_VERSION_ENV = "REPRO_LOGIC_VERSION"
+
+#: entry/key format version — part of every key, so a codec change never
+#: rehydrates against a stale layout
+FORMAT = 1
+
+
+# -- message-stream codec -----------------------------------------------------
+
+def encode_message_stream(msgs: Sequence[Message]) -> bytes:
+    """Order-preserving bag-image encoding of an export stream.  Bags
+    write and read chunks (and records within them) sequentially, so the
+    round-trip reproduces the stream byte- and order-exactly."""
+    bag = Bag.open_write(backend="memory")
+    for m in msgs:
+        bag.write_message(m)
+    bag.close()
+    return bag.chunked_file.image()
+
+
+def decode_message_stream(image: bytes) -> list[Message]:
+    bag = Bag.open_read(backend="memory", image=image)
+    try:
+        return list(bag.read_messages())
+    finally:
+        bag.close()
+
+
+# -- metrics codec ------------------------------------------------------------
+
+_METRIC_FIELDS = ("count", "bytes_total", "t_min", "t_max", "gap_p50_ns",
+                  "gap_p90_ns", "gap_p99_ns", "checksum", "sketch", "theta")
+
+
+def _metrics_encode(metrics: dict[str, TopicMetrics],
+                    ) -> tuple[list[dict], dict[str, bytes]]:
+    rows: list[dict] = []
+    blobs: dict[str, bytes] = {}
+    for k, topic in enumerate(sorted(metrics)):
+        m = metrics[topic]
+        row = {"topic": topic}
+        row.update({f: getattr(m, f) for f in _METRIC_FIELDS})
+        row["has_ts"] = m.timestamps is not None
+        rows.append(row)
+        if m.timestamps is not None:
+            blobs[f"ts{k}"] = np.ascontiguousarray(
+                m.timestamps, dtype=np.int64).tobytes()
+    return rows, blobs
+
+
+def _metrics_decode(rows: list[dict],
+                    blobs: dict[str, bytes]) -> dict[str, TopicMetrics]:
+    out: dict[str, TopicMetrics] = {}
+    for k, row in enumerate(rows):
+        ts = (np.frombuffer(blobs[f"ts{k}"], dtype=np.int64)
+              if row.get("has_ts") else None)
+        out[row["topic"]] = TopicMetrics(
+            topic=row["topic"], timestamps=ts,
+            **{f: row[f] for f in _METRIC_FIELDS})
+    return out
+
+
+# -- the cached outcome -------------------------------------------------------
+
+@dataclass
+class CachedResult:
+    """Everything a hit must rehydrate — see module docstring."""
+    scenario: str                       # name at record time (informational)
+    passed: bool
+    vacuous: bool
+    diffs: list[dict] = field(default_factory=list)
+    metrics: dict[str, TopicMetrics] = field(default_factory=dict)
+    output_image: bytes = b""
+    export_image: Optional[bytes] = None   # committed export stream, if any
+    messages_in: int = 0
+    messages_out: int = 0
+    messages_dropped: int = 0
+    partitions: int = 0
+    shards: int = 1
+    wall_time_s: float = 0.0            # the *recorded* (cold) wall time
+
+    def rebuild_diffs(self) -> list[Diff]:
+        return [Diff(topic=d["topic"], field=d["field"],
+                     expected=d.get("expected"), actual=d.get("actual"),
+                     detail=d.get("detail", "")) for d in self.diffs]
+
+
+def _interpret_token() -> str:
+    """The resolved Pallas interpret mode as a key term.  Uses the same
+    policy point every kernel entry honors (explicit env > platform
+    default), so an ``REPRO_PALLAS_INTERPRET`` flip — which can move
+    compiled-vs-interpreted numerics — forces a clean re-replay."""
+    from repro.kernels.compat import resolve_interpret
+    return "interpret" if resolve_interpret(None) else "compiled"
+
+
+class ResultCache:
+    """High-level cache face over a :class:`CacheStore` (see module doc).
+
+    ``logic_version`` defaults to ``$REPRO_LOGIC_VERSION`` (or ``"0"``);
+    it is the escape hatch for the one thing content addressing cannot
+    see — the *code* behind an unchanged ``module:attr`` logic ref.
+    """
+
+    def __init__(self, store: "CacheStore | str",
+                 logic_version: Optional[str] = None):
+        self.store = (store if isinstance(store, CacheStore)
+                      else CacheStore(store))
+        self.logic_version = (logic_version if logic_version is not None
+                              else os.environ.get(LOGIC_VERSION_ENV, "0"))
+        self.hits = 0
+        self.misses = 0
+        self.puts = 0
+        self.put_errors = 0
+        self._digest_memo: dict[tuple, str] = {}
+
+    # -- key derivation ------------------------------------------------------
+
+    def bag_digest(self, path: str) -> str:
+        """Streaming content digest of a disk bag, memoized per
+        ``(path, size, mtime_ns)`` — a touched file re-digests, an
+        untouched one is a stat call."""
+        st = os.stat(path)
+        memo_key = (os.path.abspath(path), st.st_size, st.st_mtime_ns)
+        got = self._digest_memo.get(memo_key)
+        if got is None:
+            got = bag_content_digest(path)
+            self._digest_memo[memo_key] = got
+        return got
+
+    def scenario_key(self, fingerprint: str, bag_digests: Sequence[str],
+                     golden_digest: Optional[str],
+                     provider_keys: Sequence[str] = (),
+                     tolerance: int = 0) -> str:
+        h = hashlib.sha256()
+        h.update(json.dumps({
+            "format": FORMAT,
+            "logic_version": self.logic_version,
+            "kernel": _interpret_token(),
+            "tolerance": tolerance,
+            "fingerprint": fingerprint,
+            "bags": list(bag_digests),
+            "golden": golden_digest,
+            "providers": list(provider_keys),
+        }, sort_keys=True).encode())
+        return h.hexdigest()
+
+    # -- load / store --------------------------------------------------------
+
+    def load(self, key: str,
+             require_exports: bool = False) -> Optional[CachedResult]:
+        """Rehydrate one entry; ``None`` is a miss (absent, corrupt, or a
+        codec mismatch).  ``require_exports=True`` additionally treats an
+        entry recorded *without* a committed export stream as a miss —
+        the shape a suite needs when this scenario's exports are routed
+        to importers this run but weren't when the entry was written."""
+        got = self.store.get(key)
+        if got is None:
+            self.misses += 1
+            return None
+        meta, blobs = got
+        try:
+            result = CachedResult(
+                scenario=meta["scenario"],
+                passed=bool(meta["passed"]),
+                vacuous=bool(meta["vacuous"]),
+                diffs=list(meta.get("diffs", [])),
+                metrics=_metrics_decode(meta.get("metrics", []), blobs),
+                output_image=blobs["output"],
+                export_image=blobs.get("exports"),
+                messages_in=int(meta["messages_in"]),
+                messages_out=int(meta["messages_out"]),
+                messages_dropped=int(meta["messages_dropped"]),
+                partitions=int(meta["partitions"]),
+                shards=int(meta["shards"]),
+                wall_time_s=float(meta.get("wall_time_s", 0.0)),
+            )
+        except (KeyError, TypeError, ValueError):
+            # codec mismatch reads as a miss, exactly like corruption
+            self.misses += 1
+            return None
+        if require_exports and result.export_image is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return result
+
+    def put(self, key: str, result: CachedResult) -> bool:
+        """Write one entry; returns False (and counts) instead of raising
+        on I/O failure — a full disk costs cache coverage, not the suite."""
+        rows, blobs = _metrics_encode(result.metrics)
+        blobs["output"] = result.output_image
+        if result.export_image is not None:
+            blobs["exports"] = result.export_image
+        meta = {
+            "scenario": result.scenario,
+            "passed": result.passed,
+            "vacuous": result.vacuous,
+            "diffs": result.diffs,
+            "metrics": rows,
+            "messages_in": result.messages_in,
+            "messages_out": result.messages_out,
+            "messages_dropped": result.messages_dropped,
+            "partitions": result.partitions,
+            "shards": result.shards,
+            "wall_time_s": result.wall_time_s,
+        }
+        try:
+            self.store.put(key, meta, blobs)
+        except (OSError, ValueError):
+            self.put_errors += 1
+            return False
+        self.puts += 1
+        return True
+
+    @property
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "puts": self.puts, "put_errors": self.put_errors}

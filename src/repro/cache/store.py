@@ -1,0 +1,236 @@
+"""File-backed content-addressed store with atomic writes and
+corruption-safe reads.
+
+One entry per key, one file per entry::
+
+    <root>/<key[:2]>/<key>.rpc      the entry container
+    <root>/events.jsonl             append-only get/put/evict event log
+                                    (what ``repro.tools.cache_report``
+                                    aggregates into hit/miss stats)
+
+Entry container layout::
+
+    [8s magic "RPCACHE1"][u32 header_len][header JSON][blob section]
+
+The header JSON carries the caller's ``meta`` dict, a blob table
+(``name -> [offset, length]`` relative to the blob section), and a
+SHA-256 of the blob section.  :meth:`CacheStore.get` validates magic,
+header parse, blob-table bounds and the payload hash; *any* failure —
+truncation, bit rot, a concurrent writer's partial file — surfaces as a
+miss (``None``), never an exception, so a corrupt store can only cost a
+re-replay, not a suite.  Writes land on a temp file in the same
+directory and :func:`os.replace` into place, so readers never observe a
+half-written entry.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import struct
+import tempfile
+import time
+from typing import Iterator, Optional
+
+_MAGIC = b"RPCACHE1"
+_LEN = struct.Struct("<I")
+_SUFFIX = ".rpc"
+_EVENTS = "events.jsonl"
+
+
+class StoreCorruption(Exception):
+    """Internal marker for an unreadable entry; never escapes ``get``."""
+
+
+class CacheStore:
+    """Keyed blob store under one root directory (see module docstring).
+
+    ``record_events=False`` turns off the event log (tests that assert
+    exact directory contents).
+    """
+
+    def __init__(self, root: str, record_events: bool = True):
+        self.root = root
+        self.record_events = record_events
+        os.makedirs(root, exist_ok=True)
+
+    # -- paths ---------------------------------------------------------------
+
+    def path_for(self, key: str) -> str:
+        if not key or any(c in key for c in "/\\."):
+            raise ValueError(f"bad cache key {key!r}")
+        return os.path.join(self.root, key[:2], key + _SUFFIX)
+
+    def _event(self, op: str, key: str, **extra) -> None:
+        if not self.record_events:
+            return
+        rec = {"op": op, "key": key, "t": time.time(), **extra}
+        try:
+            with open(os.path.join(self.root, _EVENTS), "a") as f:
+                f.write(json.dumps(rec, sort_keys=True) + "\n")
+        except OSError:
+            pass            # the event log is observability, never load-bearing
+
+    # -- write path ----------------------------------------------------------
+
+    def put(self, key: str, meta: dict, blobs: dict[str, bytes]) -> str:
+        """Atomically write one entry; an existing entry is replaced.
+        Returns the entry path."""
+        path = self.path_for(key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        table: dict[str, list[int]] = {}
+        parts: list[bytes] = []
+        off = 0
+        for name in sorted(blobs):
+            data = blobs[name]
+            table[name] = [off, len(data)]
+            parts.append(data)
+            off += len(data)
+        payload = b"".join(parts)
+        header = json.dumps({
+            "meta": meta,
+            "blobs": table,
+            "payload_sha256": hashlib.sha256(payload).hexdigest(),
+            "created": time.time(),
+        }, sort_keys=True, default=str).encode()
+        fd, tmp = tempfile.mkstemp(prefix=".put-", suffix=_SUFFIX,
+                                   dir=os.path.dirname(path))
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(_MAGIC)
+                f.write(_LEN.pack(len(header)))
+                f.write(header)
+                f.write(payload)
+            os.replace(tmp, path)       # atomic publish
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        self._event("put", key, bytes=len(payload) + len(header))
+        return path
+
+    # -- read path -----------------------------------------------------------
+
+    def _read_header(self, path: str) -> tuple[dict, int]:
+        """(header dict, blob-section offset); raises StoreCorruption."""
+        try:
+            with open(path, "rb") as f:
+                magic = f.read(len(_MAGIC))
+                if magic != _MAGIC:
+                    raise StoreCorruption("bad magic")
+                raw = f.read(_LEN.size)
+                if len(raw) != _LEN.size:
+                    raise StoreCorruption("truncated length")
+                (hlen,) = _LEN.unpack(raw)
+                header = f.read(hlen)
+                if len(header) != hlen:
+                    raise StoreCorruption("truncated header")
+                return (json.loads(header.decode()),
+                        len(_MAGIC) + _LEN.size + hlen)
+        except StoreCorruption:
+            raise
+        except (OSError, ValueError, UnicodeDecodeError) as e:
+            raise StoreCorruption(str(e))
+
+    def get(self, key: str,
+            ) -> Optional[tuple[dict, dict[str, bytes]]]:
+        """Load one entry as ``(meta, blobs)``; ``None`` on a missing *or
+        unreadable* entry — corruption can only cost a replay."""
+        path = self.path_for(key)
+        if not os.path.exists(path):
+            self._event("get", key, hit=False)
+            return None
+        try:
+            header, base = self._read_header(path)
+            with open(path, "rb") as f:
+                f.seek(base)
+                payload = f.read()
+            if (hashlib.sha256(payload).hexdigest()
+                    != header.get("payload_sha256")):
+                raise StoreCorruption("payload hash mismatch")
+            blobs: dict[str, bytes] = {}
+            for name, (off, length) in header.get("blobs", {}).items():
+                if off < 0 or off + length > len(payload):
+                    raise StoreCorruption(f"blob {name!r} out of bounds")
+                blobs[name] = payload[off:off + length]
+            self._event("get", key, hit=True)
+            return header.get("meta", {}), blobs
+        except StoreCorruption as e:
+            self._event("get", key, hit=False, corrupt=str(e))
+            return None
+
+    def entry_info(self, key: str) -> Optional[dict]:
+        """Header meta + file size/mtime without loading blobs; ``None``
+        when missing or unreadable."""
+        path = self.path_for(key)
+        try:
+            st = os.stat(path)
+            header, _ = self._read_header(path)
+        except (OSError, StoreCorruption):
+            return None
+        return {"key": key, "meta": header.get("meta", {}),
+                "created": header.get("created"),
+                "size": st.st_size, "mtime": st.st_mtime}
+
+    def verify(self, key: str) -> bool:
+        """Full payload-hash verification of one entry."""
+        return self.get(key) is not None
+
+    # -- enumeration / maintenance -------------------------------------------
+
+    def keys(self) -> Iterator[str]:
+        for sub in sorted(os.listdir(self.root)):
+            d = os.path.join(self.root, sub)
+            if len(sub) != 2 or not os.path.isdir(d):
+                continue
+            for name in sorted(os.listdir(d)):
+                if name.endswith(_SUFFIX):
+                    yield name[:-len(_SUFFIX)]
+
+    def delete(self, key: str) -> bool:
+        try:
+            os.unlink(self.path_for(key))
+            return True
+        except OSError:
+            return False
+
+    def total_bytes(self) -> int:
+        return sum((i or {}).get("size", 0)
+                   for i in (self.entry_info(k) for k in self.keys()) if i)
+
+    def evict_to(self, max_bytes: int) -> list[str]:
+        """Delete oldest-mtime entries until the store fits ``max_bytes``;
+        returns the evicted keys."""
+        infos = [i for i in (self.entry_info(k) for k in self.keys()) if i]
+        infos.sort(key=lambda i: i["mtime"])
+        total = sum(i["size"] for i in infos)
+        evicted: list[str] = []
+        for info in infos:
+            if total <= max_bytes:
+                break
+            if self.delete(info["key"]):
+                total -= info["size"]
+                evicted.append(info["key"])
+                self._event("evict", info["key"], bytes=info["size"])
+        return evicted
+
+    def events(self) -> list[dict]:
+        """Parsed event log (malformed lines skipped)."""
+        path = os.path.join(self.root, _EVENTS)
+        out: list[dict] = []
+        try:
+            with open(path) as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        out.append(json.loads(line))
+                    except json.JSONDecodeError:
+                        continue
+        except OSError:
+            pass
+        return out

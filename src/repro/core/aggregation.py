@@ -532,7 +532,11 @@ class Verdict:
     ``vacuous`` marks a PASS earned by an empty selection (zero input
     messages and nothing the golden bag demanded) rather than by matching
     outputs.  ``report`` carries the full :class:`SimulationReport` when
-    the verdict came out of ``ScenarioSuite.run``.
+    the verdict came out of ``ScenarioSuite.run``.  ``cache`` is the
+    result-cache provenance when the suite ran with one
+    (``"hit"`` — rehydrated without replay — or ``"miss"``; ``None``
+    when no cache was configured): it rides into the verdict JSONL so
+    trend tooling can tell a metadata read from a real replay.
     """
     scenario: str
     passed: bool
@@ -541,6 +545,7 @@ class Verdict:
     metrics: dict[str, TopicMetrics] = field(default_factory=dict)
     golden_path: Optional[str] = None
     report: Optional[Any] = None        # SimulationReport (layer above)
+    cache: Optional[str] = None         # "hit" | "miss" | None (no cache)
 
     @property
     def status(self) -> str:

@@ -19,6 +19,7 @@ Chunk payload = concatenated records:
 
 from __future__ import annotations
 
+import hashlib
 import heapq
 import io
 import os
@@ -430,6 +431,32 @@ class Bag:
             pos += dlen
             yield Message(self._topic_names[tid], ts, data)
 
+    def content_digest(self) -> str:
+        """Streaming chunk-level SHA-256 of the bag's logical content.
+
+        Covers the format version, topic table and every chunk (record
+        count, index time bounds, raw payload bytes) — one chunk resident
+        at a time, **no record decode**: the per-record framing inside a
+        chunk payload is hashed as raw bytes, so digesting costs one
+        sequential sweep of the storage tier, not a replay.  Any flipped
+        payload byte, timestamp, topic rename or re-chunking changes the
+        digest.  This is the bag term of the result-cache key
+        (:mod:`repro.cache`): disk and memory backends with identical
+        images digest identically.
+        """
+        if self._writable:
+            raise RuntimeError("content_digest requires a read-mode bag")
+        h = hashlib.sha256()
+        h.update(_MAGIC + struct.pack("<I", _VERSION))
+        names = "\x00".join(self._topic_names).encode()
+        h.update(struct.pack("<I", len(names)) + names)
+        for info in self._chunks:
+            payload, record_count = self._cf.read_chunk(info.offset)
+            h.update(struct.pack("<IQQ", record_count, info.t_min,
+                                 info.t_max))
+            h.update(payload)
+        return h.hexdigest()
+
     def read_messages(self, topics: Optional[Sequence[str]] = None,
                       start: Optional[int] = None,
                       end: Optional[int] = None,
@@ -485,6 +512,17 @@ def iter_time_ordered(bag: Bag, topics: Optional[Sequence[str]] = None,
             yield heapq.heappop(heap)[2]
     while heap:
         yield heapq.heappop(heap)[2]
+
+
+def bag_content_digest(source: "Bag | bytes | str") -> str:
+    """:meth:`Bag.content_digest` over any bag-backed source — an open
+    read-mode ``Bag``, a memory-bag image (``bytes``) or a disk path."""
+    bag, owned = _open_source(source)
+    try:
+        return bag.content_digest()
+    finally:
+        if owned:
+            bag.close()
 
 
 BagSource = Union["Bag", bytes, bytearray, memoryview, str,

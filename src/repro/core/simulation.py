@@ -51,6 +51,7 @@ pickle boundary.
 
 from __future__ import annotations
 
+import hashlib
 import importlib
 import json
 import os
@@ -58,7 +59,7 @@ import random
 import threading
 import time
 import zlib
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields as dataclass_fields
 from typing import Callable, Optional, Sequence, Union
 
 from .aggregation import Aggregator, MetricsTap, TopicMetrics, Verdict
@@ -98,6 +99,42 @@ def resolve_logic_ref(ref: LogicRef) -> Callable:
     if not callable(fn):
         raise TypeError(f"logic ref {ref!r} resolved to non-callable {fn!r}")
     return fn
+
+
+def _logic_fingerprint(ref: LogicRef) -> str:
+    """Canonical content-addressable identity of a user-logic ref.
+
+    String refs (``"module:attr"`` / ``"perception://<model>"``) are their
+    own identity.  A module-level callable is accepted iff it re-resolves
+    to itself through its ``module:qualname`` — the same contract the
+    process backend already imposes — and fingerprints as that ref.
+    Lambdas, closures and bound methods have no stable identity across
+    runs, so they raise: a scenario carrying one is simply *uncacheable*
+    (the suite replays it every time rather than risking a stale hit).
+    """
+    if isinstance(ref, str):
+        return ref
+    mod = getattr(ref, "__module__", None)
+    qualname = getattr(ref, "__qualname__", None)
+    if mod and qualname and "<" not in qualname:
+        try:
+            obj: object = importlib.import_module(mod)
+            for part in qualname.split("."):
+                obj = getattr(obj, part)
+        except (ImportError, AttributeError):
+            obj = None
+        if obj is ref:
+            return f"{mod}:{qualname}"
+    raise ValueError(
+        f"user_logic {ref!r} has no stable content identity (lambda, "
+        "closure or non-importable callable); use a 'module:attr' ref to "
+        "make the scenario cacheable")
+
+
+#: Scenario fields that name *where* content lives rather than *what* runs;
+#: the result-cache key digests their content separately (bag/golden
+#: digests), so renaming a scenario or moving a bag never invalidates.
+_FINGERPRINT_EXCLUDE = ("name", "bag_path", "bag_paths", "golden_bag_path")
 
 
 @dataclass(frozen=True)
@@ -223,6 +260,32 @@ class Scenario:
         """The fleet as a tuple of bag paths (length 1 for ``bag_path``)."""
         return ((self.bag_path,) if self.bag_path is not None
                 else self.bag_paths)
+
+    def fingerprint(self) -> str:
+        """Canonical SHA-256 over every replay-relevant parameter — the
+        scenario term of the result-cache key (:mod:`repro.cache`).
+
+        Covers the topic filter, time window, latency/drop profiles and
+        seed, batch/queue/pipeline parameters, metric engine and sketch
+        settings, the exports/imports wiring and the user-logic ref —
+        every dataclass field except the scenario *name* and the bag /
+        golden *paths* (their content is digested separately, so a
+        rename or relocation with identical bytes still hits).  Any
+        parameter change produces a new fingerprint and forces a clean
+        re-replay.  Raises ``ValueError`` when the user logic has no
+        stable content identity (see :func:`_logic_fingerprint`) — such
+        scenarios are uncacheable, never wrongly cached.
+        """
+        spec = {}
+        for f in dataclass_fields(self):
+            if f.name in _FINGERPRINT_EXCLUDE:
+                continue
+            value = getattr(self, f.name)
+            if f.name == "user_logic":
+                value = _logic_fingerprint(value)
+            spec[f.name] = value
+        return hashlib.sha256(
+            json.dumps(spec, sort_keys=True).encode()).hexdigest()
 
     @property
     def staged(self) -> bool:
@@ -606,6 +669,22 @@ class ScenarioSuite:
     scenario (name, verdict, metric checksums, timings) to ``path`` and
     rewrites a suite manifest (scenario → golden path → verdict) next to
     it — the CI-native face of the regression harness.
+
+    ``run(cache=...)`` (a :class:`repro.cache.ResultCache` or a store
+    root path) turns on the **content-addressed result cache**: at
+    planning time each scenario's key — bag content digests + parameter
+    fingerprint + logic version + kernel/interpret config + provider
+    keys (ARCHITECTURE.md §9) — is probed against the store, and every
+    hit is pruned from scheduling entirely: its verdict, metrics, merged
+    output image and export stream rehydrate from the entry, so an
+    unchanged suite re-run costs a digest sweep and a metadata read
+    instead of a replay.  Misses replay normally and bank their outcome.
+    Replay here is bit-identical across backends/carriers/shapes, which
+    is what makes a cached result substitutable for a recomputed one;
+    each verdict carries ``cache="hit"|"miss"`` provenance (persisted to
+    the JSONL log and manifest), and ``last_cache_stats`` exposes the
+    run's hit/miss/put counters.  Corrupt or truncated entries read as
+    misses — the cache can cost a replay, never a suite.
     """
 
     def __init__(self, scenarios: Sequence[Scenario], num_workers: int = 4,
@@ -626,6 +705,9 @@ class ScenarioSuite:
         self.on_scheduler = on_scheduler
         self.aggregator = aggregator or Aggregator()
         self.export_transport = export_transport
+        #: hit/miss/put counters of the last ``run(cache=...)``; None when
+        #: the last run had no cache
+        self.last_cache_stats: Optional[dict] = None
 
     def _plan_routing(self) -> tuple[list[set], list[set]]:
         """Resolve ``Scenario.exports``/``imports`` into the routing graph.
@@ -686,6 +768,49 @@ class ScenarioSuite:
             return self.export_transport
         return "wire" if backend_name == "process" else "inline"
 
+    def _plan_cache_keys(self, cache, needs: list[set]) -> list:
+        """Per-scenario result-cache keys; ``None`` marks an uncacheable
+        scenario (non-addressable user logic — or one anywhere upstream
+        of it, since an importer's inputs include its providers' exports).
+
+        Keys are pure functions of configuration and bag *content*:
+        logic version + kernel/interpret config + aggregator tolerance +
+        ``Scenario.fingerprint()`` + per-shard bag digests + the golden
+        bag digest + (recursively) the providers' keys — so a change
+        anywhere upstream in the routing DAG invalidates every scenario
+        downstream.  Any I/O or digest failure degrades that scenario to
+        uncacheable rather than failing the suite.
+        """
+        keys: list = [None] * len(self.scenarios)
+        done = [False] * len(self.scenarios)
+
+        def key_of(i: int):
+            if done[i]:
+                return keys[i]
+            done[i] = True
+            sc = self.scenarios[i]
+            try:
+                fp = sc.fingerprint()
+                provider_keys = []
+                for j in sorted(needs[i]):
+                    kj = key_of(j)
+                    if kj is None:
+                        return None
+                    provider_keys.append(kj)
+                digests = [cache.bag_digest(p) for p in sc.shard_paths]
+                golden = (cache.bag_digest(sc.golden_bag_path)
+                          if sc.golden_bag_path is not None else None)
+                keys[i] = cache.scenario_key(
+                    fp, digests, golden, provider_keys,
+                    tolerance=self.aggregator.tolerance)
+            except (OSError, ValueError):
+                keys[i] = None
+            return keys[i]
+
+        for i in range(len(self.scenarios)):
+            key_of(i)
+        return keys
+
     def _plan(self, sc: Scenario) -> list[tuple[int, str, tuple[int, int]]]:
         """One (shard index, shard path, chunk range) triple per task."""
         tasks: list[tuple[int, str, tuple[int, int]]] = []
@@ -715,7 +840,8 @@ class ScenarioSuite:
 
     def run(self, timeout: float = 300.0,
             verdict_log: Optional[str] = None,
-            manifest_path: Optional[str] = None) -> dict[str, Verdict]:
+            manifest_path: Optional[str] = None,
+            cache=None) -> dict[str, Verdict]:
         for sc in self.scenarios:
             # fail before burning replay time, not at aggregation
             if (sc.golden_bag_path is not None
@@ -726,12 +852,41 @@ class ScenarioSuite:
         plans = [(sc, self._plan(sc)) for sc in self.scenarios]
         needs, consumers = self._plan_routing()
 
+        # -- result cache probe (the unchanged-suite hot path) ----------
+        # a hit scenario contributes ZERO tasks: its verdict, metrics,
+        # merged image and export stream rehydrate from the store, and
+        # the suite only schedules what actually changed
+        encode_stream = decode_stream = _CachedResult = None
+        cache_keys: list = [None] * len(self.scenarios)
+        cached: list = [None] * len(self.scenarios)
+        if cache is not None:
+            from repro.cache import CachedResult as _CachedResult
+            from repro.cache import (ResultCache,
+                                     decode_message_stream as decode_stream,
+                                     encode_message_stream as encode_stream)
+            if not isinstance(cache, ResultCache):
+                cache = ResultCache(cache)
+            cache_keys = self._plan_cache_keys(cache, needs)
+            for i, key in enumerate(cache_keys):
+                if key is None:
+                    continue
+                if not plans[i][1] and not needs[i]:
+                    # pruned-empty scenario: the vacuous verdict is
+                    # cheaper to recompute than to round-trip
+                    cache_keys[i] = None
+                    continue
+                cached[i] = cache.load(
+                    key, require_exports=bool(consumers[i]
+                                              and self.scenarios[i].exports))
+        self.last_cache_stats = None
+
         t0 = time.monotonic()
         # tid -> (scenario i, (shard j, partition k)) for result assembly;
         # an importing scenario's import partition carries key (-1, 0) so
         # the import-stream output merges first, deterministically
         owner: dict[int, tuple[int, tuple[int, int]]] = {}
-        pending = [len(tasks) + (1 if needs[i] else 0)
+        pending = [0 if cached[i] is not None
+                   else len(tasks) + (1 if needs[i] else 0)
                    for i, (_, tasks) in enumerate(plans)]
         total_tasks = list(pending)
         # scenario i -> (shard, partition) -> (image, partial metrics);
@@ -823,7 +978,13 @@ class ScenarioSuite:
                 exports_inline: dict[tuple[int, tuple[int, int]],
                                      list[Message]] = {}
                 exports_of: dict[int, list[Message]] = {}
-                submitted_imports: set = set()
+                # cache-hit importers never submit an import partition;
+                # seeding them here also lets providers release streams
+                # once every *live* importer has consumed
+                submitted_imports: set = {i for i in range(len(plans))
+                                          if cached[i] is not None}
+                # encoded export streams captured for store writes
+                export_snaps: dict[int, bytes] = {}
                 agg_spills: dict[int, list[str]] = {}
                 spill_by_tid: dict[int, list[str]] = {}
 
@@ -872,6 +1033,12 @@ class ScenarioSuite:
 
                 def finish_exports(j: int) -> None:
                     exports_of[j] = collect_export_stream(j)
+                    if cache_keys[j] is not None:
+                        # snapshot before importers consume + release: the
+                        # store entry must carry the committed stream so a
+                        # future importer downstream of this (cached)
+                        # exporter can still replay
+                        export_snaps[j] = encode_stream(exports_of[j])
                     for i in sorted(consumers[j]):
                         maybe_submit_import(i)
 
@@ -946,6 +1113,8 @@ class ScenarioSuite:
                         reclaim_paths(agg_spills.pop(i, ()))
 
                 for i, (sc, tasks) in enumerate(plans):
+                    if cached[i] is not None:
+                        continue        # rehydrated: no replay tasks at all
                     engine = self._resolve_metrics_engine(sc, backend_name)
                     exporting = bool(consumers[i])
                     part_of_shard: dict[int, int] = {}
@@ -961,11 +1130,23 @@ class ScenarioSuite:
                             lineage=("scenario", sc.name, si, shard,
                                      lo, hi))
                         owner[tid] = (i, (si, k))
+                # a cache-hit exporter's stream is final at t0: decode it
+                # from the store entry and unblock live importers now —
+                # this is how a changed importer replays bit-identically
+                # downstream of an *unchanged, never-replayed* provider
+                for j in range(len(plans)):
+                    if cached[j] is None or not consumers[j]:
+                        continue
+                    if any(cached[c] is None for c in consumers[j]):
+                        exports_of[j] = decode_stream(cached[j].export_image)
+                        for i in sorted(consumers[j]):
+                            maybe_submit_import(i)
                 # a pruned-empty exporter produces no tasks, so its
                 # (empty) export stream is final now — unblock importers
                 # before the run, not never
                 for j in range(len(plans)):
-                    if consumers[j] and not plans[j][1] and not needs[j]:
+                    if (cached[j] is None and consumers[j]
+                            and not plans[j][1] and not needs[j]):
                         finish_exports(j)
                 if self.on_scheduler is not None:
                     self.on_scheduler(sched)
@@ -982,32 +1163,70 @@ class ScenarioSuite:
 
         verdicts: dict[str, Verdict] = {}
         for i, (sc, tasks) in enumerate(plans):
-            if tasks or needs[i]:
-                image, verdict = agg_out[i]
+            if cached[i] is not None:
+                # cache hit: the whole scenario — verdict, diffs, metrics
+                # (with their timestamp multisets), merged output image —
+                # rehydrates from the store; replay never ran, so the
+                # reported wall time is the metadata read (~0)
+                ent = cached[i]
+                verdict = Verdict(
+                    scenario=sc.name, passed=ent.passed,
+                    vacuous=ent.vacuous, diffs=ent.rebuild_diffs(),
+                    metrics=ent.metrics, golden_path=sc.golden_bag_path,
+                    cache="hit")
+                image = ent.output_image
+                n_in, n_out, n_drop = (ent.messages_in, ent.messages_out,
+                                       ent.messages_dropped)
+                n_parts, wall = ent.partitions, 0.0
             else:
-                # pruned-empty scenario: a clean zero-message vacuous
-                # verdict, no tasks burned on the pool
-                merged, verdict = self.aggregator.aggregate(
-                    sc.name, [], golden=sc.golden_bag_path, messages_in=0)
-                image = merged.chunked_file.image()
-                merged.close()
-            wall = (replay_end[i] - t0) if replay_end[i] else 0.0
+                if tasks or needs[i]:
+                    image, verdict = agg_out[i]
+                else:
+                    # pruned-empty scenario: a clean zero-message vacuous
+                    # verdict, no tasks burned on the pool
+                    merged, verdict = self.aggregator.aggregate(
+                        sc.name, [], golden=sc.golden_bag_path,
+                        messages_in=0)
+                    image = merged.chunked_file.image()
+                    merged.close()
+                if cache is not None:
+                    verdict.cache = "miss"
+                n_in, n_out, n_drop = counts[i]
+                n_parts = total_tasks[i]
+                wall = (replay_end[i] - t0) if replay_end[i] else 0.0
             report = SimulationReport(
-                messages_in=counts[i][0],
-                messages_out=counts[i][1],
+                messages_in=n_in,
+                messages_out=n_out,
                 wall_time_s=wall,
-                partitions=total_tasks[i],
+                partitions=n_parts,
                 scheduler_stats=stats,
                 scenario=sc.name,
                 backend=backend_name,
                 batch_size=sc.batch_size,
-                messages_dropped=counts[i][2],
+                messages_dropped=n_drop,
                 shards=len(sc.shard_paths),
                 output_image=image,
                 metrics=verdict.metrics,
             )
             verdict.report = report
             verdicts[sc.name] = verdict
+            if (cache is not None and cache_keys[i] is not None
+                    and cached[i] is None):
+                # freshly computed + content-addressable: bank it (a
+                # failed write costs coverage, never the suite)
+                cache.put(cache_keys[i], _CachedResult(
+                    scenario=sc.name, passed=verdict.passed,
+                    vacuous=verdict.vacuous,
+                    diffs=[{"topic": d.topic, "field": d.field,
+                            "expected": d.expected, "actual": d.actual,
+                            "detail": d.detail} for d in verdict.diffs],
+                    metrics=verdict.metrics, output_image=image,
+                    export_image=export_snaps.get(i),
+                    messages_in=n_in, messages_out=n_out,
+                    messages_dropped=n_drop, partitions=n_parts,
+                    shards=len(sc.shard_paths), wall_time_s=wall))
+        if cache is not None:
+            self.last_cache_stats = dict(cache.stats)
         if verdict_log is not None:
             self._persist_verdicts(verdict_log, manifest_path, verdicts,
                                    backend_name)
@@ -1046,6 +1265,7 @@ class ScenarioSuite:
                 "partitions": r.partitions,
                 "shards": r.shards,
                 "backend": backend_name,
+                "cache": v.cache,
                 "unix_time": now,
             })
         with open(verdict_log, "a") as f:
@@ -1059,7 +1279,8 @@ class ScenarioSuite:
             "scenarios": {
                 r["scenario"]: {"golden": r["golden"],
                                 "status": r["status"],
-                                "passed": r["passed"]}
+                                "passed": r["passed"],
+                                "cache": r["cache"]}
                 for r in records
             },
         }

@@ -1,0 +1,183 @@
+"""Result-cache introspection: what's in the store, is it healthy,
+and is it earning its keep.
+
+``ScenarioSuite.run(cache=dir)`` fills a content-addressed store of
+per-scenario results (see ``repro.cache``); this tool reports on one:
+
+    PYTHONPATH=src python -m repro.tools.cache_report .repro-result-cache
+    PYTHONPATH=src python -m repro.tools.cache_report DIR --verify
+    PYTHONPATH=src python -m repro.tools.cache_report DIR --evict-to 50000000
+
+Default output is a per-entry listing (key prefix, scenario name at
+record time, PASS/FAIL, entry size, age) plus hit/miss/put/evict totals
+aggregated from the store's append-only event log — the cumulative view
+across every suite run that touched the store, not just the last one.
+
+``--verify`` re-reads every entry payload against its recorded SHA-256
+and exits 1 if any entry is corrupt (the suite itself would silently
+re-replay those; this is how you find out *that* it did).
+``--evict-to BYTES`` deletes oldest-mtime entries until the store fits,
+printing what went.  ``--json out.json`` writes the full report.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Optional, Sequence
+
+from repro.cache import CacheStore
+
+
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if n < 1024 or unit == "GiB":
+            return f"{n:.1f}{unit}" if unit != "B" else f"{int(n)}B"
+        n /= 1024
+    return f"{n:.1f}GiB"
+
+
+def _fmt_age(seconds: float) -> str:
+    if seconds < 120:
+        return f"{int(seconds)}s"
+    if seconds < 7200:
+        return f"{seconds / 60:.0f}m"
+    if seconds < 172800:
+        return f"{seconds / 3600:.1f}h"
+    return f"{seconds / 86400:.1f}d"
+
+
+def summarize_events(events: Sequence[dict]) -> dict:
+    """Roll the store's event log up into lifetime counters."""
+    out = {"gets": 0, "hits": 0, "misses": 0, "corrupt_reads": 0,
+           "puts": 0, "put_bytes": 0, "evictions": 0, "evicted_bytes": 0}
+    for ev in events:
+        op = ev.get("op")
+        if op == "get":
+            out["gets"] += 1
+            if ev.get("hit"):
+                out["hits"] += 1
+            else:
+                out["misses"] += 1
+                if "corrupt" in ev:
+                    out["corrupt_reads"] += 1
+        elif op == "put":
+            out["puts"] += 1
+            out["put_bytes"] += int(ev.get("bytes", 0))
+        elif op == "evict":
+            out["evictions"] += 1
+            out["evicted_bytes"] += int(ev.get("bytes", 0))
+    return out
+
+
+def build_report(store: CacheStore, verify: bool = False) -> dict:
+    """Entry inventory + event-log summary for one store.
+
+    With ``verify=True`` every entry's payload hash is re-checked and
+    unreadable/corrupt entries are listed under ``"corrupt"``.
+    """
+    entries: list[dict] = []
+    corrupt: list[str] = []
+    for key in store.keys():
+        info = store.entry_info(key)
+        if info is None:
+            corrupt.append(key)
+            continue
+        if verify and not store.verify(key):
+            corrupt.append(key)
+            continue
+        meta = info.get("meta", {})
+        entries.append({
+            "key": key,
+            "scenario": meta.get("scenario", "?"),
+            "passed": meta.get("passed"),
+            "size": info["size"],
+            "mtime": info["mtime"],
+        })
+    entries.sort(key=lambda e: e["mtime"])
+    return {
+        "root": store.root,
+        "entries": entries,
+        "corrupt": corrupt,
+        "total_bytes": sum(e["size"] for e in entries),
+        "events": summarize_events(store.events()),
+        "verified": verify,
+    }
+
+
+def render(report: dict, now: Optional[float] = None) -> str:
+    if now is None:
+        now = time.time()
+    entries = report["entries"]
+    lines = [f"cache {report['root']}: {len(entries)} entries, "
+             f"{_fmt_bytes(report['total_bytes'])}"]
+    for e in entries:
+        status = ("PASS" if e["passed"] else
+                  "FAIL" if e["passed"] is not None else "?")
+        lines.append(f"  {e['key'][:12]}  {status:<4} "
+                     f"{_fmt_bytes(e['size']):>9}  "
+                     f"{_fmt_age(max(0.0, now - e['mtime'])):>6}  "
+                     f"{e['scenario']}")
+    ev = report["events"]
+    if ev["gets"] or ev["puts"]:
+        rate = (100.0 * ev["hits"] / ev["gets"]) if ev["gets"] else 0.0
+        lines.append(f"lifetime: {ev['hits']} hits / {ev['misses']} misses "
+                     f"({rate:.0f}% hit rate), {ev['puts']} puts "
+                     f"({_fmt_bytes(ev['put_bytes'])}), "
+                     f"{ev['evictions']} evictions")
+        if ev["corrupt_reads"]:
+            lines.append(f"  {ev['corrupt_reads']} read(s) hit a corrupt "
+                         "entry and fell back to replay")
+    if report["corrupt"]:
+        lines.append(f"{len(report['corrupt'])} CORRUPT entr"
+                     f"{'y' if len(report['corrupt']) == 1 else 'ies'}:")
+        for key in report["corrupt"]:
+            lines.append(f"  {key}")
+    elif report["verified"]:
+        lines.append("all entries verified OK")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.tools.cache_report",
+        description="Inspect a ScenarioSuite result-cache directory: "
+                    "entry inventory, lifetime hit/miss stats, payload "
+                    "verification, size-bounded eviction.")
+    parser.add_argument("root", help="cache directory passed to "
+                                     "ScenarioSuite.run(cache=...)")
+    parser.add_argument("--verify", action="store_true",
+                        help="re-check every entry's payload hash; "
+                             "exit 1 if any entry is corrupt")
+    parser.add_argument("--evict-to", type=int, default=None,
+                        metavar="BYTES",
+                        help="delete oldest entries until the store is "
+                             "at most this many bytes")
+    parser.add_argument("--json", dest="json_out", default=None,
+                        help="also write the report as JSON")
+    args = parser.parse_args(argv)
+    # record_events=False: this tool's own reads are inspection, not
+    # cache traffic — they must not skew the lifetime hit/miss stats
+    store = CacheStore(args.root, record_events=False)
+    evicted: list[str] = []
+    if args.evict_to is not None:
+        evicted = store.evict_to(args.evict_to)
+    report = build_report(store, verify=args.verify)
+    report["evicted"] = evicted
+    print(render(report))
+    if evicted:
+        print(f"evicted {len(evicted)} entr"
+              f"{'y' if len(evicted) == 1 else 'ies'}:")
+        for key in evicted:
+            print(f"  {key}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return 1 if report["corrupt"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,7 +22,11 @@ and wall time to the median of all earlier runs):
                     PASS -> PASS(vacuous) — all worth eyes)
 ``WALLTIME``        latest wall time exceeds ``--wall-factor`` (default
                     1.5) x the median of earlier runs (floored at 50 ms —
-                    sub-noise runs never flag)
+                    sub-noise runs never flag).  Cache-hit rows
+                    (``"cache": "hit"`` from ``run(cache=...)``) are
+                    excluded on both sides: a hit's near-zero wall would
+                    poison the median and a hit can never *be* a wall-time
+                    regression, so hits neither flag nor count as baseline
 
 ``--strict`` exits 1 when any flag fires — the CI trip-wire shape.
 ``--json out.json`` additionally writes the full analysis.
@@ -113,8 +117,13 @@ def analyze(records: Sequence[dict],
                     flag(name, "COUNT-DRIFT",
                          f"{fld}: {prev[fld]} -> {last[fld]}")
         earlier = [r.get("wall_time_s") for r in runs[:-1]
-                   if r.get("wall_time_s") is not None]
+                   if r.get("wall_time_s") is not None
+                   and r.get("cache") != "hit"]
         wall = last.get("wall_time_s")
+        if last.get("cache") == "hit":
+            # a cache hit skipped replay entirely; its ~0 wall time is
+            # neither a regression nor a usable baseline sample
+            wall = None
         if earlier and wall is not None:
             baseline = max(_median(earlier), WALL_FLOOR_S)
             entry["wall_baseline_s"] = baseline

@@ -1,0 +1,435 @@
+"""Content-addressed result cache (ISSUE 7): bag content digests,
+scenario fingerprints, suite-level hit/rehydration parity, the
+invalidation matrix (bag bytes, params, logic version, kernel config),
+corruption fallback, export-stream rehydration, and the CLI faces.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.cache import (CachedResult, CacheStore, ResultCache,
+                         decode_message_stream, encode_message_stream)
+from repro.core import Bag, Message, Scenario, ScenarioSuite
+from repro.core.bag import bag_content_digest
+from repro.core.simulation import _logic_fingerprint
+
+TOPICS = ("/camera", "/lidar")
+
+
+def _make_bag(path, n=240, payload=64, seed=0):
+    rng = np.random.RandomState(seed)
+    b = Bag.open_write(path, chunk_bytes=4096)
+    for i in range(n):
+        b.write(TOPICS[i % len(TOPICS)], i * 1000 + int(rng.randint(400)),
+                rng.bytes(payload))
+    b.close()
+    return path
+
+
+def det_logic(msg):
+    return ("/det" + msg.topic, msg.data[:16])
+
+
+def score_logic(msg):
+    return ("/score", bytes(reversed(msg.data)))
+
+
+@pytest.fixture
+def bag_path(tmp_path):
+    return _make_bag(str(tmp_path / "drive.bag"))
+
+
+@pytest.fixture
+def cache_dir(tmp_path):
+    return str(tmp_path / "result-cache")
+
+
+def _suite(bag_path, **kw):
+    return ScenarioSuite(
+        [Scenario("det", bag_path, "tests.test_cache:det_logic",
+                  drop_rate=0.1, seed=3, **kw),
+         Scenario("score", bag_path, "tests.test_cache:score_logic",
+                  topics=("/camera",), **kw)],
+        num_workers=2)
+
+
+def _snap(verdicts):
+    return {n: (v.status, v.report.output_image,
+                {t: (m.checksum, m.count, m.bytes_total, m.t_min, m.t_max,
+                     m.gap_p50_ns, m.gap_p90_ns, m.gap_p99_ns)
+                 for t, m in v.metrics.items()},
+                v.report.messages_in, v.report.messages_out,
+                v.report.messages_dropped)
+            for n, v in verdicts.items()}
+
+
+# -- bag content digest -------------------------------------------------------
+
+class TestBagDigest:
+    def test_stable_across_reopens(self, bag_path):
+        assert bag_content_digest(bag_path) == bag_content_digest(bag_path)
+
+    def test_identical_content_different_path(self, tmp_path):
+        a = _make_bag(str(tmp_path / "a.bag"), seed=5)
+        b = _make_bag(str(tmp_path / "b.bag"), seed=5)
+        assert bag_content_digest(a) == bag_content_digest(b)
+
+    def test_single_payload_byte_flip_changes_digest(self, bag_path):
+        before = bag_content_digest(bag_path)
+        raw = bytearray(open(bag_path, "rb").read())
+        # flip one bit deep in the chunk payload region
+        raw[len(raw) // 2] ^= 0x01
+        open(bag_path, "wb").write(bytes(raw))
+        assert bag_content_digest(bag_path) != before
+
+    def test_writable_bag_refuses(self, tmp_path):
+        b = Bag.open_write(str(tmp_path / "w.bag"))
+        with pytest.raises(RuntimeError):
+            b.content_digest()
+        b.close()
+
+
+# -- scenario fingerprint -----------------------------------------------------
+
+class TestFingerprint:
+    def test_path_and_name_independent(self, tmp_path):
+        a = _make_bag(str(tmp_path / "a.bag"))
+        b = _make_bag(str(tmp_path / "b.bag"))
+        s1 = Scenario("one", a, "tests.test_cache:det_logic", seed=9)
+        s2 = Scenario("two", b, "tests.test_cache:det_logic", seed=9)
+        assert s1.fingerprint() == s2.fingerprint()
+
+    @pytest.mark.parametrize("change", [
+        {"seed": 10}, {"drop_rate": 0.2}, {"batch_size": 8},
+        {"topics": ("/camera",)}, {"start": 1000},
+        {"latency_model_s": 0.001}, {"exports": ("/det/camera",)},
+    ])
+    def test_any_param_change_moves_fingerprint(self, bag_path, change):
+        base = dict(seed=9, drop_rate=0.1)
+        s1 = Scenario("s", bag_path, "tests.test_cache:det_logic", **base)
+        s2 = Scenario("s", bag_path, "tests.test_cache:det_logic",
+                      **{**base, **change})
+        assert s1.fingerprint() != s2.fingerprint()
+
+    def test_module_level_callable_equals_string_ref(self, bag_path):
+        ref = f"{det_logic.__module__}:det_logic"
+        by_ref = Scenario("s", bag_path, ref)
+        by_obj = Scenario("s", bag_path, det_logic)
+        assert by_ref.fingerprint() == by_obj.fingerprint()
+
+    def test_lambda_uncacheable(self, bag_path):
+        sc = Scenario("s", bag_path, lambda m: None)
+        with pytest.raises(ValueError):
+            sc.fingerprint()
+
+
+# -- store container ----------------------------------------------------------
+
+class TestCacheStore:
+    def test_roundtrip(self, cache_dir):
+        st = CacheStore(cache_dir)
+        key = "ab" + "0" * 62
+        st.put(key, {"x": 1}, {"blob": b"payload", "empty": b""})
+        meta, blobs = st.get(key)
+        assert meta == {"x": 1}
+        assert blobs == {"blob": b"payload", "empty": b""}
+
+    def test_missing_is_none(self, cache_dir):
+        assert CacheStore(cache_dir).get("cd" + "0" * 62) is None
+
+    @pytest.mark.parametrize("mangle", ["truncate", "flip_payload",
+                                        "flip_magic", "garbage"])
+    def test_corruption_reads_as_miss(self, cache_dir, mangle):
+        st = CacheStore(cache_dir)
+        key = "ef" + "0" * 62
+        path = st.put(key, {"x": 1}, {"blob": b"payload" * 100})
+        raw = bytearray(open(path, "rb").read())
+        if mangle == "truncate":
+            raw = raw[: len(raw) // 2]
+        elif mangle == "flip_payload":
+            raw[-10] ^= 0xFF
+        elif mangle == "flip_magic":
+            raw[0] ^= 0xFF
+        else:
+            raw = bytearray(b"not a cache entry")
+        open(path, "wb").write(bytes(raw))
+        assert st.get(key) is None
+        assert not st.verify(key)
+
+    def test_bad_keys_rejected(self, cache_dir):
+        st = CacheStore(cache_dir)
+        for bad in ("", "../evil", "a/b", "a.b"):
+            with pytest.raises(ValueError):
+                st.path_for(bad)
+
+    def test_evict_to_drops_oldest(self, cache_dir):
+        st = CacheStore(cache_dir)
+        keys = [f"{i:02d}" + "0" * 62 for i in range(4)]
+        for i, key in enumerate(keys):
+            st.put(key, {}, {"b": bytes(1000)})
+            os.utime(st.path_for(key), (i, i))   # deterministic ages
+        evicted = st.evict_to(st.total_bytes() - 1)
+        assert evicted == [keys[0]]
+        assert set(st.keys()) == set(keys[1:])
+
+
+# -- message-stream codec -----------------------------------------------------
+
+def test_export_stream_codec_roundtrip():
+    msgs = [Message("/det/camera", i * 10, bytes([i]) * 20)
+            for i in range(50)]
+    out = decode_message_stream(encode_message_stream(msgs))
+    assert [(m.topic, m.timestamp, m.data) for m in out] \
+        == [(m.topic, m.timestamp, m.data) for m in msgs]
+
+
+# -- suite integration: hits, parity, provenance ------------------------------
+
+class TestSuiteCache:
+    def test_warm_run_hits_and_is_bit_identical(self, bag_path, cache_dir):
+        cold = _suite(bag_path)
+        cold_v = cold.run(cache=cache_dir)
+        assert cold.last_cache_stats == {"hits": 0, "misses": 2,
+                                        "puts": 2, "put_errors": 0}
+        assert all(v.cache == "miss" for v in cold_v.values())
+
+        warm = _suite(bag_path)
+        warm_v = warm.run(cache=cache_dir)
+        assert warm.last_cache_stats["hits"] == 2
+        assert warm.last_cache_stats["puts"] == 0
+        assert all(v.cache == "hit" for v in warm_v.values())
+        assert _snap(cold_v) == _snap(warm_v)
+
+    def test_no_cache_means_no_provenance(self, bag_path):
+        suite = _suite(bag_path)
+        v = suite.run()
+        assert all(vv.cache is None for vv in v.values())
+        assert suite.last_cache_stats is None
+
+    def test_jsonl_and_manifest_carry_cache_field(self, bag_path, cache_dir,
+                                                  tmp_path):
+        log = str(tmp_path / "verdicts.jsonl")
+        _suite(bag_path).run(cache=cache_dir, verdict_log=log)
+        _suite(bag_path).run(cache=cache_dir, verdict_log=log)
+        rows = [json.loads(line) for line in open(log)]
+        assert [r["cache"] for r in rows] == ["miss", "miss", "hit", "hit"]
+        manifest = json.load(open(log + ".manifest.json"))
+        assert all(s["cache"] == "hit"
+                   for s in manifest["scenarios"].values())
+
+    def test_lambda_logic_still_replays(self, bag_path, cache_dir):
+        suite = ScenarioSuite(
+            [Scenario("anon", bag_path, lambda m: ("/out", m.data[:4]))],
+            num_workers=1)
+        for _ in range(2):     # uncacheable: replays every time, no error
+            v = suite.run(cache=cache_dir)
+            assert v["anon"].passed
+            assert v["anon"].cache == "miss"
+            assert suite.last_cache_stats["puts"] == 0
+
+
+# -- the invalidation matrix --------------------------------------------------
+
+class TestInvalidation:
+    def _warm(self, bag_path, cache_dir, **kw):
+        _suite(bag_path, **kw).run(cache=cache_dir)
+
+    def test_bag_byte_flip_forces_replay(self, bag_path, cache_dir):
+        self._warm(bag_path, cache_dir)
+        raw = bytearray(open(bag_path, "rb").read())
+        raw[len(raw) // 2] ^= 0x01
+        open(bag_path, "wb").write(bytes(raw))
+        suite = _suite(bag_path)
+        v = suite.run(cache=cache_dir)
+        assert suite.last_cache_stats["hits"] == 0
+        assert all(vv.cache == "miss" for vv in v.values())
+
+    def test_param_change_forces_replay(self, bag_path, cache_dir):
+        self._warm(bag_path, cache_dir)
+        suite = _suite(bag_path, batch_size=None, start=2000)
+        v = suite.run(cache=cache_dir)
+        assert suite.last_cache_stats["hits"] == 0
+        assert all(vv.cache == "miss" for vv in v.values())
+
+    def test_logic_version_bump_forces_replay(self, bag_path, cache_dir,
+                                              monkeypatch):
+        monkeypatch.setenv("REPRO_LOGIC_VERSION", "v1")
+        self._warm(bag_path, cache_dir)
+        suite = _suite(bag_path)
+        assert suite.run(cache=cache_dir)["det"].cache == "hit"
+        monkeypatch.setenv("REPRO_LOGIC_VERSION", "v2")
+        suite = _suite(bag_path)
+        v = suite.run(cache=cache_dir)
+        assert suite.last_cache_stats["hits"] == 0
+        assert all(vv.cache == "miss" for vv in v.values())
+
+    def test_interpret_flip_forces_replay(self, bag_path, cache_dir,
+                                          monkeypatch):
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+        self._warm(bag_path, cache_dir)
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+        suite = _suite(bag_path)
+        v = suite.run(cache=cache_dir)
+        assert suite.last_cache_stats["hits"] == 0
+        assert all(vv.cache == "miss" for vv in v.values())
+        # and back: the original entries are still there
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+        suite = _suite(bag_path)
+        assert all(vv.cache == "hit"
+                   for vv in suite.run(cache=cache_dir).values())
+
+    def test_corrupt_entry_falls_back_to_replay(self, bag_path, cache_dir):
+        self._warm(bag_path, cache_dir)
+        st = CacheStore(cache_dir)
+        for key in list(st.keys()):
+            path = st.path_for(key)
+            raw = bytearray(open(path, "rb").read())
+            open(path, "wb").write(bytes(raw[: len(raw) // 3]))  # truncate
+        suite = _suite(bag_path)
+        v = suite.run(cache=cache_dir)      # must not raise
+        assert all(vv.passed for vv in v.values())
+        assert suite.last_cache_stats["hits"] == 0
+        assert suite.last_cache_stats["puts"] == 2   # entries rewritten
+        suite = _suite(bag_path)
+        assert all(vv.cache == "hit"
+                   for vv in suite.run(cache=cache_dir).values())
+
+
+# -- export-stream rehydration across the routing DAG -------------------------
+
+class TestExportRehydration:
+    def _dag(self, bag_path, importer_seed=0):
+        return [
+            Scenario("prov", bag_path, "tests.test_cache:det_logic",
+                     exports=("/det/camera", "/det/lidar")),
+            Scenario("cons", bag_path, "tests.test_cache:score_logic",
+                     imports=("/det/camera", "/det/lidar"),
+                     seed=importer_seed),
+        ]
+
+    def test_full_dag_hit(self, bag_path, cache_dir):
+        r1 = ScenarioSuite(self._dag(bag_path), num_workers=2)\
+            .run(cache=cache_dir)
+        suite = ScenarioSuite(self._dag(bag_path), num_workers=2)
+        r2 = suite.run(cache=cache_dir)
+        assert suite.last_cache_stats["hits"] == 2
+        assert all(v.cache == "hit" for v in r2.values())
+        assert _snap(r1) == _snap(r2)
+
+    def test_cached_exporter_feeds_live_importer(self, bag_path, cache_dir):
+        ScenarioSuite(self._dag(bag_path), num_workers=2)\
+            .run(cache=cache_dir)
+        # change only the importer: provider hits, importer replays
+        # against the rehydrated export stream
+        changed = self._dag(bag_path, importer_seed=9)
+        suite = ScenarioSuite(changed, num_workers=2)
+        v = suite.run(cache=cache_dir)
+        assert v["prov"].cache == "hit"
+        assert v["cons"].cache == "miss"
+        # ground truth: the same DAG replayed with no cache at all
+        ref = ScenarioSuite(self._dag(bag_path, importer_seed=9),
+                            num_workers=2).run()
+        assert _snap({"cons": v["cons"]}) == _snap({"cons": ref["cons"]})
+
+    def test_upstream_change_invalidates_downstream(self, bag_path,
+                                                    cache_dir, tmp_path):
+        ScenarioSuite(self._dag(bag_path), num_workers=2)\
+            .run(cache=cache_dir)
+        # new provider params -> provider AND importer must both replay,
+        # even though the importer's own params are unchanged
+        changed = self._dag(bag_path)
+        changed[0] = Scenario("prov", bag_path, "tests.test_cache:det_logic",
+                              exports=("/det/camera", "/det/lidar"),
+                              drop_rate=0.3, seed=21)
+        suite = ScenarioSuite(changed, num_workers=2)
+        v = suite.run(cache=cache_dir)
+        assert v["prov"].cache == "miss"
+        assert v["cons"].cache == "miss"
+
+
+# -- tool faces ---------------------------------------------------------------
+
+def _run_tool(args, cwd="/root/repo"):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(cwd, "src"), cwd, env.get("PYTHONPATH", "")])
+    return subprocess.run([sys.executable, "-m", *args],
+                          capture_output=True, text=True, env=env, cwd=cwd)
+
+
+class TestCacheReportCLI:
+    def test_listing_stats_and_verify(self, bag_path, cache_dir):
+        _suite(bag_path).run(cache=cache_dir)
+        _suite(bag_path).run(cache=cache_dir)
+        r = _run_tool(["repro.tools.cache_report", cache_dir, "--verify"])
+        assert r.returncode == 0, r.stderr
+        assert "2 entries" in r.stdout
+        assert "2 hits / 2 misses" in r.stdout
+        assert "all entries verified OK" in r.stdout
+
+    def test_verify_flags_corruption(self, bag_path, cache_dir):
+        _suite(bag_path).run(cache=cache_dir)
+        st = CacheStore(cache_dir)
+        key = next(iter(st.keys()))
+        path = st.path_for(key)
+        raw = bytearray(open(path, "rb").read())
+        raw[-3] ^= 0xFF
+        open(path, "wb").write(bytes(raw))
+        r = _run_tool(["repro.tools.cache_report", cache_dir, "--verify"])
+        assert r.returncode == 1
+        assert "CORRUPT" in r.stdout
+
+    def test_evict_to(self, bag_path, cache_dir, tmp_path):
+        _suite(bag_path).run(cache=cache_dir)
+        out = str(tmp_path / "report.json")
+        r = _run_tool(["repro.tools.cache_report", cache_dir,
+                       "--evict-to", "0", "--json", out])
+        assert r.returncode == 0, r.stderr
+        report = json.load(open(out))
+        assert len(report["evicted"]) == 2
+        assert report["entries"] == []
+
+
+class TestVerdictReportCacheAware:
+    def _rows(self, walls_and_cache):
+        return [{"scenario": "s", "status": "PASS", "passed": True,
+                 "wall_time_s": w, "cache": c, "checksums": {},
+                 "messages_in": 1, "messages_out": 1}
+                for w, c in walls_and_cache]
+
+    def test_cache_hit_rows_never_flag_walltime(self):
+        from repro.tools.verdict_report import analyze
+        # slow replays, then a near-zero cache hit: no WALLTIME flag
+        rows = self._rows([(1.0, "miss"), (1.0, "miss"), (0.001, "hit")])
+        assert analyze(rows)["flags"] == []
+
+    def test_cache_hits_excluded_from_baseline(self):
+        from repro.tools.verdict_report import analyze
+        # hits would drag the median to ~0 and flag the honest replay;
+        # excluded, the replay matches its real baseline
+        rows = self._rows([(1.0, "miss"), (0.001, "hit"), (0.001, "hit"),
+                           (1.1, "miss")])
+        assert analyze(rows)["flags"] == []
+        # a genuine regression still fires
+        rows = self._rows([(1.0, "miss"), (0.001, "hit"), (3.0, "miss")])
+        assert [f["flag"] for f in analyze(rows)["flags"]] == ["WALLTIME"]
+
+
+# -- logic fingerprint helper -------------------------------------------------
+
+def test_logic_fingerprint_shapes():
+    assert _logic_fingerprint("pkg.mod:fn") == "pkg.mod:fn"
+    assert _logic_fingerprint(det_logic) \
+        == f"{det_logic.__module__}:det_logic"
+    with pytest.raises(ValueError):
+        _logic_fingerprint(lambda m: None)
+
+    def nested(m):
+        return None
+    with pytest.raises(ValueError):
+        _logic_fingerprint(nested)
