@@ -1,0 +1,236 @@
+"""Chaos race: a clean suite vs the same suite under injected faults.
+
+The paper's platform claims fault tolerance; this benchmark makes the
+claim falsifiable.  It runs one scenario matrix twice on the same thread
+pool:
+
+  * **clean**    — no chaos plan installed,
+  * **injected** — a seeded :class:`repro.chaos.ChaosPlan` active for the
+    whole run: one worker crash (tolerated — the scheduler reschedules
+    and the run stays green), one slow-lane stall (tolerated — queued
+    backpressure absorbs it), and ``k`` perma-failing user-logic faults
+    (NOT tolerated — each burns ``max_attempts`` and must degrade).
+
+The degradation contract is exact, and ``--check`` gates it in CI:
+
+  * the injected suite **completes** (``on_error="degrade"``),
+  * exactly ``k`` directly-poisoned scenarios come back ERROR, plus
+    every scenario downstream of a poisoned *exporter* in the routing
+    DAG (with the upstream lineage in its cause string),
+  * every surviving scenario's verdict, per-topic checksums **and
+    merged output image** are bit-identical to the clean run — chaos
+    may slow the suite down, it may never move a surviving byte.
+
+Emits CSV rows plus machine-readable ``BENCH_chaos.json``.
+
+    PYTHONPATH=src python -m benchmarks.chaos [--check]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro import chaos
+from repro.core import Bag, Scenario, ScenarioSuite
+
+N_MSGS = 1500
+TOPICS = ("/camera", "/lidar", "/imu")
+NUM_WORKERS = 4
+MAX_ATTEMPTS = 2
+
+#: directly-poisoned scenarios (ERROR by injection)
+POISONED = ("victim", "provider")
+#: scenarios errored transitively through the routing DAG
+DOWNSTREAM = ("consumer",)
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         os.pardir, "BENCH_chaos.json")
+
+
+def _make_bag(path: str, seed: int) -> str:
+    rng = np.random.RandomState(seed)
+    bag = Bag.open_write(path, chunk_bytes=16 * 1024)
+    for i in range(N_MSGS):
+        bag.write(TOPICS[i % len(TOPICS)], i * 1000 + int(rng.randint(500)),
+                  rng.bytes(96))
+    bag.close()
+    return path
+
+
+def _det_logic(msg):
+    return ("/det" + msg.topic, msg.data[:16])
+
+
+def _det_batch_logic(msgs):
+    return [("/det" + m.topic, m.timestamp, m.data[:16]) for m in msgs]
+
+
+def _prov_logic(msg):
+    return ("/fused", msg.data[:8])
+
+
+def _cons_logic(msg):
+    return ("/score", bytes(reversed(msg.data)))
+
+
+def _scenarios(bag: str) -> list[Scenario]:
+    return [
+        Scenario("clean-a", bag, _det_logic),
+        Scenario("victim", bag, _det_logic),
+        Scenario("clean-b", bag, _det_logic, drop_rate=0.2, seed=7),
+        Scenario("provider", bag, _prov_logic, exports=("/fused",)),
+        Scenario("consumer", bag, _cons_logic, imports=("/fused",)),
+        Scenario("clean-c", bag, _det_batch_logic, batch_size=64),
+    ]
+
+
+def _plan() -> chaos.ChaosPlan:
+    return chaos.ChaosPlan([
+        # tolerated: one thread worker dies mid-run; the scheduler reaps
+        # it and reruns the lost task elsewhere
+        chaos.Fault("worker_crash", target="w1", at=1, count=1),
+        # tolerated: one replay lane stalls per delivery for a while;
+        # backpressure absorbs it without reordering anything
+        chaos.Fault("lane_stall", target="*logic*", at=0, count=20,
+                    param=0.002),
+        # NOT tolerated: these two scenarios' user logic raises on every
+        # attempt — each must degrade to an ERROR verdict, and
+        # "provider"'s failure must cascade to "consumer" downstream
+        chaos.Fault("logic_raise", target="victim", count=None),
+        chaos.Fault("logic_raise", target="provider", count=None),
+    ], seed=20260807)
+
+
+def _suite(bag: str) -> ScenarioSuite:
+    return ScenarioSuite(_scenarios(bag), num_workers=NUM_WORKERS,
+                         backend="thread", on_error="degrade",
+                         scheduler_kwargs={"max_attempts": MAX_ATTEMPTS})
+
+
+def _snapshot(verdicts) -> dict:
+    return {n: {"status": v.status,
+                "error": v.error,
+                "image": v.report.output_image,
+                "checksums": {t: m.checksum for t, m in v.metrics.items()}}
+            for n, v in verdicts.items()}
+
+
+def run_race() -> dict:
+    with tempfile.TemporaryDirectory(prefix="repro-chaos-") as d:
+        bag = _make_bag(os.path.join(d, "drive.bag"), 3)
+
+        _suite(bag).run(timeout=300)        # warmup: imports, lazy inits
+
+        t0 = time.perf_counter()
+        clean = _snapshot(_suite(bag).run(timeout=300))
+        clean_s = time.perf_counter() - t0
+        assert all(v["status"].startswith("PASS") for v in clean.values()), \
+            {n: v["status"] for n, v in clean.items()}
+
+        plan = _plan()
+        chaos.install(plan)
+        try:
+            t0 = time.perf_counter()
+            hurt = _snapshot(_suite(bag).run(timeout=300))
+            hurt_s = time.perf_counter() - t0
+        finally:
+            chaos.uninstall()
+
+    expect_error = set(POISONED) | set(DOWNSTREAM)
+    errored = {n for n, v in hurt.items() if v["status"] == "ERROR"}
+    lineage_ok = all(
+        hurt[n]["error"] is not None
+        and f"upstream scenario {POISONED[1]!r} errored" in hurt[n]["error"]
+        for n in DOWNSTREAM)
+    survivors = sorted(set(clean) - expect_error)
+    survivors_identical = all(hurt[n] == clean[n] for n in survivors)
+
+    return {
+        "bench": "chaos",
+        "scenarios": len(clean),
+        "messages": N_MSGS,
+        "seed": plan.seed,
+        "faults_planned": len(plan.faults),
+        "faults_fired": plan.fired_count(),
+        "fired_by_seam": {
+            seam: plan.fired_count(seam)
+            for seam in ("worker_crash", "lane_stall", "logic_raise")},
+        "poisoned": sorted(POISONED),
+        "downstream": sorted(DOWNSTREAM),
+        "errors_expected": sorted(expect_error),
+        "errors_observed": sorted(errored),
+        "errors_exact": errored == expect_error,
+        "downstream_lineage_ok": lineage_ok,
+        "survivors": survivors,
+        "survivors_bit_identical": survivors_identical,
+        "clean_wall_s": clean_s,
+        "injected_wall_s": hurt_s,
+        "injected_vs_clean_ratio": hurt_s / clean_s if clean_s else 0.0,
+    }
+
+
+def main(csv: bool = True, json_path: str = JSON_PATH) -> list[tuple]:
+    payload = run_race()
+    rows = [
+        ("chaos_clean", payload["clean_wall_s"] * 1e6 / N_MSGS,
+         f"{payload['scenarios']} scenarios, all PASS"),
+        ("chaos_injected", payload["injected_wall_s"] * 1e6 / N_MSGS,
+         f"{payload['faults_fired']} faults fired, "
+         f"{len(payload['errors_observed'])} ERROR, "
+         "survivors bit-identical"),
+        ("chaos_injected_vs_clean_ratio",
+         payload["injected_vs_clean_ratio"],
+         f"errors exact={payload['errors_exact']} "
+         f"lineage={payload['downstream_lineage_ok']}"),
+    ]
+    if csv:
+        for name, val, derived in rows[:2]:
+            print(f"{name},{val:.2f},{derived}")
+        print(f"{rows[2][0]},{rows[2][1]:.2f}x,{rows[2][2]}")
+    if json_path:
+        out = dict(payload)
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return rows
+
+
+def check(json_path: str = JSON_PATH) -> int:
+    """CI gate: the injected run must degrade exactly the poisoned set
+    (plus DAG downstream, with lineage) and move nothing else."""
+    with open(json_path) as f:
+        payload = json.load(f)
+    print(f"{payload['faults_fired']} faults fired -> "
+          f"{len(payload['errors_observed'])} ERROR "
+          f"(expected {len(payload['errors_expected'])}), "
+          f"{len(payload['survivors'])} survivors")
+    ok = True
+    if not payload.get("errors_exact"):
+        print(f"FAIL: errored set {payload['errors_observed']} != expected "
+              f"{payload['errors_expected']}", file=sys.stderr)
+        ok = False
+    if not payload.get("downstream_lineage_ok"):
+        print("FAIL: downstream ERROR verdicts are missing the upstream "
+              "cause lineage", file=sys.stderr)
+        ok = False
+    if not payload.get("survivors_bit_identical"):
+        print("FAIL: a surviving scenario's verdict/checksums/output moved "
+              "under chaos", file=sys.stderr)
+        ok = False
+    if payload.get("fired_by_seam", {}).get("logic_raise", 0) <= 0:
+        print("FAIL: the logic_raise faults never fired", file=sys.stderr)
+        ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    if "--check" in sys.argv:
+        args = [a for a in sys.argv[1:] if a != "--check"]
+        sys.exit(check(args[0] if args else JSON_PATH))
+    main()

@@ -34,6 +34,12 @@ Prints ``name,us_per_call,derived`` CSV rows:
                          (input checksums + suite verdicts asserted
                          bit-identical across all three consumers)
     binpipe_*          — paper Fig 4 (BinPipedRDD stage throughput)
+    chaos_*            — clean suite vs the same suite under a seeded
+                         fault plan (worker crash, lane stall, poison
+                         user logic); writes ``BENCH_chaos.json``
+                         (``--check`` gates that exactly the poisoned
+                         scenarios + DAG downstream degrade to ERROR and
+                         every survivor is bit-identical)
     roofline_*         — dry-run roofline terms per (arch x shape x mesh)
 """
 
@@ -45,12 +51,13 @@ import traceback
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import (aggregation, bag_cache, binpipe, perception,
-                            pipeline, roofline_report, scalability,
-                            scenario_matrix, transport)
+    from benchmarks import (aggregation, bag_cache, binpipe, chaos,
+                            perception, pipeline, roofline_report,
+                            scalability, scenario_matrix, transport)
     failures = 0
     for mod in (bag_cache, scalability, scenario_matrix, aggregation,
-                pipeline, transport, perception, binpipe, roofline_report):
+                pipeline, transport, perception, binpipe, chaos,
+                roofline_report):
         try:
             mod.main(csv=True)
         except Exception:  # noqa: BLE001

@@ -7,6 +7,11 @@ One entry per key, one file per entry::
     <root>/events.jsonl             append-only get/put/evict event log
                                     (what ``repro.tools.cache_report``
                                     aggregates into hit/miss stats)
+    <root>/events.jsonl.1           previous event-log generation: the
+                                    log rotates once it passes
+                                    ``events_max_bytes``, so a long-lived
+                                    store is bounded at ~2x the cap
+                                    instead of growing without limit
 
 Entry container layout::
 
@@ -47,12 +52,22 @@ class CacheStore:
     """Keyed blob store under one root directory (see module docstring).
 
     ``record_events=False`` turns off the event log (tests that assert
-    exact directory contents).
+    exact directory contents).  ``events_max_bytes`` caps the log: once
+    the current file reaches the cap it is renamed to ``events.jsonl.1``
+    (replacing the previous generation) and appending starts over, so
+    the store carries at most ~2x the cap of observability data.
     """
 
-    def __init__(self, root: str, record_events: bool = True):
+    #: default event-log rotation threshold (bytes)
+    EVENTS_MAX_BYTES = 4 << 20
+
+    def __init__(self, root: str, record_events: bool = True,
+                 events_max_bytes: Optional[int] = None):
         self.root = root
         self.record_events = record_events
+        self.events_max_bytes = (self.EVENTS_MAX_BYTES
+                                 if events_max_bytes is None
+                                 else events_max_bytes)
         os.makedirs(root, exist_ok=True)
 
     # -- paths ---------------------------------------------------------------
@@ -66,8 +81,18 @@ class CacheStore:
         if not self.record_events:
             return
         rec = {"op": op, "key": key, "t": time.time(), **extra}
+        path = os.path.join(self.root, _EVENTS)
         try:
-            with open(os.path.join(self.root, _EVENTS), "a") as f:
+            if self.events_max_bytes:
+                try:
+                    if os.path.getsize(path) >= self.events_max_bytes:
+                        # keep exactly one prior generation; os.replace
+                        # is atomic, so a concurrent reader sees either
+                        # the old or the new file, never a half-rotation
+                        os.replace(path, path + ".1")
+                except OSError:
+                    pass        # no log yet
+            with open(path, "a") as f:
                 f.write(json.dumps(rec, sort_keys=True) + "\n")
         except OSError:
             pass            # the event log is observability, never load-bearing
@@ -218,19 +243,21 @@ class CacheStore:
         return evicted
 
     def events(self) -> list[dict]:
-        """Parsed event log (malformed lines skipped)."""
+        """Parsed event log, oldest first — the rotated generation (if
+        any) followed by the current file; malformed lines skipped."""
         path = os.path.join(self.root, _EVENTS)
         out: list[dict] = []
-        try:
-            with open(path) as f:
-                for line in f:
-                    line = line.strip()
-                    if not line:
-                        continue
-                    try:
-                        out.append(json.loads(line))
-                    except json.JSONDecodeError:
-                        continue
-        except OSError:
-            pass
+        for p in (path + ".1", path):
+            try:
+                with open(p) as f:
+                    for line in f:
+                        line = line.strip()
+                        if not line:
+                            continue
+                        try:
+                            out.append(json.loads(line))
+                        except json.JSONDecodeError:
+                            continue
+            except OSError:
+                continue
         return out

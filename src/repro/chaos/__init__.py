@@ -1,0 +1,64 @@
+"""Seeded, deterministic fault injection for the scenario engine.
+
+Install a :class:`ChaosPlan` process-wide and the instrumented seams in
+the executor/net/playback/simulation layers consult it; with no plan
+installed every seam is a single ``None`` check (the default, zero-cost
+path).  See :mod:`repro.chaos.plan` for the matching semantics and
+``benchmarks/chaos.py`` for the end-to-end harness that races a clean
+suite against an injected one and asserts graceful degradation.
+
+Instrumented seams (key probed at each):
+
+====================  ====================================================
+``worker_crash``      thread/process worker about to run a task
+                      (key: worker name) — worker dies mid-task
+``wire_corrupt``      frame about to be sent on a ``FrameSocket``
+                      (key: socket's ``chaos_key``) — bitflip/truncation
+``credit_starve``     receiver about to grant credit (key: stream id)
+                      — credit withheld, sender must ride the backoff
+``lane_stall``        playback lane about to deliver (key: lane key)
+                      — delivery stalled by ``param`` seconds
+``logic_raise``       user logic callback about to run
+                      (key: scenario name) — callback raises ChaosFault
+====================  ====================================================
+"""
+
+from __future__ import annotations
+
+import threading
+
+from .plan import SEAMS, ChaosFault, ChaosPlan, Fault
+
+__all__ = ["SEAMS", "ChaosFault", "ChaosPlan", "Fault", "active_plan",
+           "install", "uninstall", "probe"]
+
+_active: "ChaosPlan | None" = None
+_lock = threading.Lock()
+
+
+def install(plan: ChaosPlan) -> ChaosPlan:
+    """Make ``plan`` the process-wide active plan (replacing any other)."""
+    global _active
+    with _lock:
+        _active = plan
+    return plan
+
+
+def uninstall() -> None:
+    global _active
+    with _lock:
+        _active = None
+
+
+def active_plan() -> "ChaosPlan | None":
+    return _active
+
+
+def probe(seam: str, key: str = "") -> "Fault | None":
+    """Convenience one-shot probe against the active plan (if any).
+
+    Hot paths should instead capture ``active_plan()`` once and probe the
+    local reference, which keeps the no-chaos cost to one global read.
+    """
+    plan = _active
+    return plan.probe(seam, key) if plan is not None else None

@@ -1,0 +1,134 @@
+"""Deterministic fault-injection plans (the chaos layer's data model).
+
+A :class:`ChaosPlan` is a list of :class:`Fault` specs plus a seed.  Code
+under test exposes **named seams** — fixed points where a fault *could*
+happen (a worker about to execute a task, a frame about to hit the wire, a
+lane worker about to deliver) — and probes the installed plan there:
+
+    plan = chaos.active_plan()
+    ...
+    if plan is not None and plan.probe("logic_raise", scenario.name):
+        raise ChaosFault(...)
+
+``probe(seam, key)`` matches the seam name exactly and the key against the
+fault's ``target`` glob, counts matching probes *per fault*, and fires on
+probes ``at <= n < at + count`` — so "crash the 3rd task on worker w1",
+"corrupt the first two frames of stream X" and "always raise in scenario
+Y's logic" are all one spec shape.  Everything is deterministic: the same
+plan over the same execution produces the same injections, which is what
+lets the chaos benchmark assert *bit-identical* unaffected verdicts.
+
+``Fault.param`` / ``Fault.mode`` are seam-specific knobs (stall seconds,
+``"bitflip"`` vs ``"truncate"``); ``plan.rng(seam, key)`` hands seams a
+:class:`random.Random` seeded from ``(plan.seed, seam, key, fire count)``
+so even "random" corruption replays identically.
+
+The plan records every firing in ``plan.fired`` — the harness's ground
+truth for "k faults were injected, so exactly k scenarios must degrade".
+"""
+
+from __future__ import annotations
+
+import fnmatch
+import random
+import threading
+import zlib
+from dataclasses import dataclass, field
+
+
+class ChaosFault(RuntimeError):
+    """An injected failure (raised by seams whose fault *is* an exception)."""
+
+
+#: the named seams the platform exposes (see the package docstring for
+#: what each one's probe key is); validated at Fault construction so a
+#: typo'd plan fails loudly instead of silently never firing
+SEAMS = frozenset({"worker_crash", "wire_corrupt", "credit_starve",
+                   "lane_stall", "logic_raise"})
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One injection spec: fire at seam ``seam`` on probes whose key
+    matches ``target`` (fnmatch glob), starting at the ``at``-th matching
+    probe, for ``count`` consecutive matches (``count=None`` = forever).
+    """
+    seam: str
+    target: str = "*"
+    at: int = 0
+    count: "int | None" = 1
+    param: float = 0.0
+    mode: str = ""
+
+    def __post_init__(self):
+        if self.seam not in SEAMS:
+            raise ValueError(f"unknown seam {self.seam!r}; "
+                             f"one of {sorted(SEAMS)}")
+        if self.at < 0:
+            raise ValueError("Fault.at must be >= 0")
+        if self.count is not None and self.count < 1:
+            raise ValueError("Fault.count must be >= 1 (or None = forever)")
+
+
+@dataclass
+class _Firing:
+    seam: str
+    key: str
+    fault: Fault
+
+
+class ChaosPlan:
+    """A seeded set of faults plus the per-fault probe counters.
+
+    Thread-safe: seams probe from lane workers, transport readers and
+    scheduler threads concurrently.  Counters advance only on *matching*
+    probes, so unrelated traffic through the same seam never shifts when
+    a targeted fault fires.
+    """
+
+    def __init__(self, faults: "list[Fault] | tuple[Fault, ...]" = (),
+                 seed: int = 0):
+        self.faults = tuple(faults)
+        self.seed = seed
+        self.fired: list[_Firing] = []
+        self._counts = [0] * len(self.faults)
+        self._lock = threading.Lock()
+
+    def probe(self, seam: str, key: str = "") -> "Fault | None":
+        """The fault to apply at this (seam, key) event, or ``None``.
+        At most one fault fires per probe (first matching spec wins)."""
+        hit: "Fault | None" = None
+        with self._lock:
+            for idx, f in enumerate(self.faults):
+                if f.seam != seam or not fnmatch.fnmatchcase(key, f.target):
+                    continue
+                n = self._counts[idx]
+                self._counts[idx] = n + 1
+                if n < f.at or (f.count is not None
+                                and n >= f.at + f.count):
+                    continue
+                if hit is None:
+                    hit = f
+                    self.fired.append(_Firing(seam, key, f))
+        return hit
+
+    def rng(self, seam: str, key: str = "") -> random.Random:
+        """Deterministic per-(seam, key, firing ordinal) RNG for seams
+        that need "random" corruption positions/lengths."""
+        with self._lock:
+            ordinal = sum(1 for f in self.fired
+                          if f.seam == seam and f.key == key)
+        return random.Random(self.seed * 1_000_003
+                             + zlib.crc32(f"{seam}|{key}".encode()) * 131
+                             + ordinal)
+
+    def fired_count(self, seam: "str | None" = None) -> int:
+        with self._lock:
+            if seam is None:
+                return len(self.fired)
+            return sum(1 for f in self.fired if f.seam == seam)
+
+    def summary(self) -> list[dict]:
+        with self._lock:
+            return [{"seam": f.seam, "key": f.key, "target": f.fault.target,
+                     "mode": f.fault.mode} for f in self.fired]

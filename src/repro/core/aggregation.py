@@ -537,6 +537,13 @@ class Verdict:
     (``"hit"`` — rehydrated without replay — or ``"miss"``; ``None``
     when no cache was configured): it rides into the verdict JSONL so
     trend tooling can tell a metadata read from a real replay.
+
+    ``error`` turns the verdict into an **ERROR**: the scenario never
+    produced comparable outputs (its partition perma-failed, or an
+    upstream export provider it imports from did), so neither PASS nor
+    FAIL is honest — the string carries the cause lineage.  ERROR
+    verdicts are falsy like FAIL, but report tooling keeps them out of
+    checksum/walltime trending: there is nothing real to trend.
     """
     scenario: str
     passed: bool
@@ -546,9 +553,12 @@ class Verdict:
     golden_path: Optional[str] = None
     report: Optional[Any] = None        # SimulationReport (layer above)
     cache: Optional[str] = None         # "hit" | "miss" | None (no cache)
+    error: Optional[str] = None         # cause lineage; makes status ERROR
 
     @property
     def status(self) -> str:
+        if self.error is not None:
+            return "ERROR"
         if not self.passed:
             return "FAIL"
         return "PASS(vacuous)" if self.vacuous else "PASS"

@@ -40,6 +40,8 @@ import threading
 import time
 from typing import Any, Callable, Optional
 
+from repro import chaos
+
 # payload shipped to a worker: (task_id, fn, args, attempt)
 TaskPayload = tuple[int, Callable[..., Any], tuple, int]
 # report(worker_id, task_id, attempt, result, error)
@@ -201,6 +203,11 @@ class Worker(threading.Thread):
                 return
             self._heartbeat(self.worker_id)
             self._executed += 1
+            plan = chaos.active_plan()
+            if plan is not None and plan.probe("worker_crash",
+                                               self.worker_id) is not None:
+                self._alive = False   # injected node crash mid-task
+                continue
             if self._fail_after is not None and self._executed >= self._fail_after:
                 self._alive = False   # crash: no report, no more heartbeats
                 continue
@@ -373,6 +380,12 @@ def _process_worker_main(worker_id: str, conn,
             return
         task_id, fn, args, attempt = msg
         executed += 1
+        # a forked worker inherits the driver's installed chaos plan, so
+        # process-backend crash injection is deterministic per worker too
+        plan = chaos.active_plan()
+        if plan is not None and plan.probe("worker_crash",
+                                           worker_id) is not None:
+            os._exit(13)
         if fail_after is not None and executed >= fail_after:
             os._exit(13)               # crash: no report, pipe goes EOF
         if slow_factor > 1.0:
@@ -685,8 +698,18 @@ class ProcessBackend(ExecutorBackend):
         deadline = time.monotonic() + min(join_timeout, 1.0)
         for w in workers:
             w.proc.join(timeout=max(0.0, deadline - time.monotonic()))
+        # escalation ladder for workers that ignored the sentinel (wedged
+        # in user logic, blocked on a pipe): SIGTERM, then SIGKILL — a
+        # shutdown must never leave live worker processes behind
+        stubborn = [w for w in workers if w.proc.is_alive()]
+        for w in stubborn:
+            w.proc.terminate()
+        for w in stubborn:
+            w.proc.join(timeout=1.0)
             if w.proc.is_alive():
-                w.proc.terminate()
+                w.proc.kill()
+                w.proc.join(timeout=1.0)
+        for w in workers:
             try:
                 w.conn.close()
             except OSError:

@@ -58,6 +58,8 @@ import time
 from collections import defaultdict
 from typing import Callable, Iterable, NamedTuple, Optional, Sequence
 
+from repro import chaos
+
 from .bag import Bag, Message, iter_time_ordered
 
 Callback = Callable[[Message], None]
@@ -207,6 +209,13 @@ class _Lane:
             try:
                 if callback is None:            # stop sentinel
                     return
+                plan = chaos.active_plan()
+                if plan is not None:
+                    fault = plan.probe("lane_stall", self.key)
+                    if fault is not None:
+                        # an injected slow consumer: delivery stalls, the
+                        # lane backs up, publishers feel the backpressure
+                        time.sleep(fault.param or 0.05)
                 callback(item)
             except BaseException as e:          # noqa: BLE001 - defer to drain
                 self._record_error(e)

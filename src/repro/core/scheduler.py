@@ -20,7 +20,16 @@ at thousand-node scale:
   healthy tasks in a heterogeneous suite,
 * **elastic scaling**: workers can join and leave (or die) mid-job,
 * bounded retries: a task failing ``max_attempts`` times fails the job
-  (poison-pill semantics, not an infinite loop).
+  (poison-pill semantics, not an infinite loop),
+* **quarantine mode** (``quarantine=True``): a perma-failing task is
+  marked FAILED and *surrendered* instead of failing the whole job — the
+  driver keeps going and reports the failure through ``on_task_failed``,
+  which is how the scenario suite degrades one scenario to an ERROR
+  verdict while the rest of the fleet completes,
+* **per-task deadlines** (``task_deadline_s``): an attempt running past
+  the deadline is retried on another worker (and counts against
+  ``max_attempts``) — a task wedged inside user logic can't pin the job
+  to the run timeout.
 
 *Where* tasks execute is delegated to an :class:`ExecutorBackend`
 (:mod:`repro.core.executors`): ``backend="thread"`` is the in-process pool
@@ -85,7 +94,9 @@ class Scheduler:
                  speculation: bool = True,
                  speculation_factor: float = 4.0,
                  speculation_min_done: int = 3,
-                 backend: Union[str, ExecutorBackend] = "thread"):
+                 backend: Union[str, ExecutorBackend] = "thread",
+                 quarantine: bool = False,
+                 task_deadline_s: Optional[float] = None):
         self._tasks: dict[int, Task] = {}
         self._next_id = 0
         self._lock = threading.Lock()
@@ -98,11 +109,15 @@ class Scheduler:
         self._spec = speculation
         self._spec_factor = speculation_factor
         self._spec_min_done = speculation_min_done
+        self._quarantine = quarantine
+        self._task_deadline = task_deadline_s
         self._outstanding = 0
         self._newly_done: list[int] = []     # completions not yet notified
+        self._newly_failed: list[int] = []   # quarantined, not yet notified
         self._failed_job: Optional[BaseException] = None
         self.stats = {"retries": 0, "speculative_launches": 0,
-                      "worker_deaths": 0, "tasks_done": 0}
+                      "worker_deaths": 0, "tasks_done": 0,
+                      "tasks_failed": 0, "deadline_retries": 0}
         self._backend = make_backend(backend)
         self._backend.start(self._on_report, self._on_beat)
         for i in range(num_workers):
@@ -209,8 +224,14 @@ class Scheduler:
         if task.attempt >= self._max_attempts:
             task.state = TaskState.FAILED
             task.error = error
-            self._failed_job = error
             self._outstanding -= 1
+            if self._quarantine:
+                # surrender the poison task, keep the job: the failure is
+                # delivered through on_task_failed, never re-dispatched
+                self.stats["tasks_failed"] += 1
+                self._newly_failed.append(task.task_id)
+            else:
+                self._failed_job = error
         else:
             self._dispatch(task)
 
@@ -243,6 +264,28 @@ class Scheduler:
                         if now - started > self._hb_timeout:
                             self._retry_locked(
                                 task, WorkerError("lost on dead worker"))
+
+    def _check_deadlines(self) -> None:
+        """Retry RUNNING attempts older than ``task_deadline_s`` — the
+        worker may be wedged in user logic (no crash, heartbeats flowing),
+        which neither the fault sweep nor speculation medians catch when
+        every sibling is equally stuck.  Retries burn attempts, so a task
+        that *always* exceeds the deadline converges to FAILED/quarantine
+        instead of looping."""
+        if self._task_deadline is None:
+            return
+        now = time.monotonic()
+        with self._lock:
+            for task in self._tasks.values():
+                if task.state != TaskState.RUNNING:
+                    continue
+                started = task.started_at.get(task.attempt)
+                if started is not None \
+                        and now - started > self._task_deadline:
+                    self.stats["deadline_retries"] += 1
+                    self._retry_locked(task, WorkerError(
+                        f"task {task.task_id} attempt {task.attempt} "
+                        f"exceeded the {self._task_deadline}s deadline"))
 
     def _check_stragglers(self) -> None:
         if not self._spec:
@@ -284,6 +327,8 @@ class Scheduler:
 
     def run(self, timeout: float = 120.0,
             on_task_done: Optional[Callable[[int, Any], None]] = None,
+            on_task_failed: Optional[Callable[[int, BaseException],
+                                              None]] = None,
             ) -> dict[int, Any]:
         """Drive to completion; returns {task_id: result}.
 
@@ -296,24 +341,38 @@ class Scheduler:
         loop only exits when nothing is outstanding *and* every completion
         has been notified, so late submissions from callbacks are never
         dropped.
+
+        ``on_task_failed(task_id, error)`` is the quarantine twin: invoked
+        (driver loop, in failure order) for each task surrendered at
+        ``max_attempts`` when ``quarantine=True``.  Without the flag a
+        perma-failed task raises :class:`WorkerError` here instead.
         """
         deadline = time.monotonic() + timeout
         while True:
             with self._lock:
                 fresh, self._newly_done = self._newly_done, []
+                fresh_failed, self._newly_failed = self._newly_failed, []
             if on_task_done is not None:
                 for tid in fresh:
                     with self._lock:
                         task = self._tasks.get(tid)
                         result = task.result if task is not None else None
                     on_task_done(tid, result)
+            for tid in fresh_failed:
+                if on_task_failed is None:
+                    continue
+                with self._lock:
+                    task = self._tasks.get(tid)
+                    error = task.error if task is not None else None
+                on_task_failed(tid, error)
             with self._lock:
                 outstanding = self._outstanding
                 failed = self._failed_job
-                drained = not self._newly_done
+                drained = not self._newly_done and not self._newly_failed
             if failed is not None:
                 raise WorkerError(f"job failed: {failed}") from failed
-            if outstanding == 0 and drained and not fresh:
+            if outstanding == 0 and drained and not fresh \
+                    and not fresh_failed:
                 break
             if outstanding > 0:
                 if time.monotonic() > deadline:
@@ -324,15 +383,17 @@ class Scheduler:
             # fault/straggler sweeps run every iteration — a steady stream
             # of completions must not starve dead-worker detection
             self._check_faults()
+            self._check_deadlines()
             self._check_stragglers()
-            if not fresh:
+            if not fresh and not fresh_failed:
                 time.sleep(0.005)   # idle tick; skip the nap mid-burst
         with self._lock:
             return {tid: t.result for tid, t in self._tasks.items()
                     if t.state == TaskState.DONE}
 
     def discard(self, task_id: int) -> None:
-        """Drop a DONE task's result and args from driver memory.
+        """Drop a DONE (or quarantined-FAILED) task's result and args
+        from driver memory.
 
         The task record (state, lineage, timings) survives, so stats and
         ``task_finished_at`` keep working — only the payload references
@@ -343,7 +404,8 @@ class Scheduler:
         """
         with self._lock:
             task = self._tasks.get(task_id)
-            if task is not None and task.state == TaskState.DONE:
+            if task is not None and task.state in (TaskState.DONE,
+                                                   TaskState.FAILED):
                 task.result = None
                 task.args = ()
 

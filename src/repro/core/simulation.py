@@ -62,6 +62,8 @@ import zlib
 from dataclasses import dataclass, field, fields as dataclass_fields
 from typing import Callable, Optional, Sequence, Union
 
+from repro import chaos
+
 from .aggregation import Aggregator, MetricsTap, TopicMetrics, Verdict
 from .bag import Bag, Message, partition_bag
 from .binpipe import BinaryPartition, encode
@@ -451,6 +453,10 @@ def _run_scenario_partition(scenario: Scenario, source: "str | bytes",
                         + lo * 8191 + hi)
     drop = scenario.drop_rate
 
+    # chaos: captured ONCE per partition — the common no-chaos case costs
+    # a single global read here and one None check per delivery
+    chaos_plan = chaos.active_plan()
+
     # one shared "logic" lane across all input topics: the drop-RNG draw
     # order (and hence the output stream) is exactly the synchronous one.
     # The tap excludes input topics bus-side, so replay traffic is never
@@ -466,6 +472,10 @@ def _run_scenario_partition(scenario: Scenario, source: "str | bytes",
                 return
             if scenario.latency_model_s:
                 time.sleep(scenario.latency_model_s)  # simulated perception
+            if chaos_plan is not None and chaos_plan.probe(
+                    "logic_raise", scenario.name) is not None:
+                raise chaos.ChaosFault(
+                    f"injected user-logic failure in {scenario.name!r}")
             out = logic(msg)
             if out is not None:
                 topic, data = out
@@ -486,6 +496,10 @@ def _run_scenario_partition(scenario: Scenario, source: "str | bytes",
                     return
             if scenario.latency_model_s:
                 time.sleep(scenario.latency_model_s)  # one model step/batch
+            if chaos_plan is not None and chaos_plan.probe(
+                    "logic_raise", scenario.name) is not None:
+                raise chaos.ChaosFault(
+                    f"injected user-logic failure in {scenario.name!r}")
             outs = logic(msgs)
             if outs:
                 out_msgs = [Message(t, ts, d) for t, ts, d in outs]
@@ -685,6 +699,18 @@ class ScenarioSuite:
     the JSONL log and manifest), and ``last_cache_stats`` exposes the
     run's hit/miss/put counters.  Corrupt or truncated entries read as
     misses — the cache can cost a replay, never a suite.
+
+    ``on_error`` picks the failure model (ARCHITECTURE.md §10).  The
+    default ``"raise"`` keeps the historical semantics: the first
+    perma-failed task fails the whole run.  ``"degrade"`` runs the
+    scheduler in quarantine mode instead — a scenario whose partition
+    (or aggregation) perma-fails degrades to a
+    ``Verdict(status="ERROR")`` carrying the cause string, every
+    scenario downstream of a failed *exporter* in the routing DAG gets
+    an ERROR with the upstream lineage, and everything else completes
+    bit-identically to a clean run.  ERROR verdicts are never banked in
+    the result cache and ride into the verdict JSONL/manifest like any
+    other status.
     """
 
     def __init__(self, scenarios: Sequence[Scenario], num_workers: int = 4,
@@ -692,12 +718,15 @@ class ScenarioSuite:
                  scheduler_kwargs: Optional[dict] = None,
                  on_scheduler: Optional[Callable[[Scheduler], None]] = None,
                  aggregator: Optional[Aggregator] = None,
-                 export_transport: str = "auto"):
+                 export_transport: str = "auto",
+                 on_error: str = "raise"):
         names = [s.name for s in scenarios]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate scenario names in {names}")
         if export_transport not in ("auto", "wire", "inline"):
             raise ValueError(f"unknown export_transport {export_transport!r}")
+        if on_error not in ("raise", "degrade"):
+            raise ValueError(f"unknown on_error {on_error!r}")
         self.scenarios = list(scenarios)
         self.num_workers = num_workers
         self.backend = backend
@@ -705,6 +734,7 @@ class ScenarioSuite:
         self.on_scheduler = on_scheduler
         self.aggregator = aggregator or Aggregator()
         self.export_transport = export_transport
+        self.on_error = on_error
         #: hit/miss/put counters of the last ``run(cache=...)``; None when
         #: the last run had no cache
         self.last_cache_stats: Optional[dict] = None
@@ -893,6 +923,15 @@ class ScenarioSuite:
         # released to the aggregation task as soon as the scenario drains
         parts: list[Optional[dict]] = [{} for _ in plans]
         counts = [[0, 0, 0] for _ in plans]      # in / out / dropped
+        # degraded-mode failure ledger: cause string per errored scenario
+        scn_error: list[Optional[str]] = [None] * len(plans)
+        degrade = self.on_error == "degrade"
+        sched_kwargs = dict(self.scheduler_kwargs)
+        if degrade:
+            # poison tasks surrender instead of failing the job; the
+            # failure is delivered through on_task_failed below and the
+            # scenario that owned it degrades to an ERROR verdict
+            sched_kwargs.setdefault("quarantine", True)
         replay_end = [0.0 for _ in plans]        # last replay-task finish
         agg_owner: dict[int, int] = {}           # aggregation tid -> i
         agg_out: dict[int, tuple[bytes, Verdict]] = {}
@@ -904,7 +943,7 @@ class ScenarioSuite:
         try:
             with Scheduler(num_workers=self.num_workers,
                            backend=self.backend,
-                           **self.scheduler_kwargs) as sched:
+                           **sched_kwargs) as sched:
                 backend_name = sched.backend.name
                 if backend_name == "process":
                     jitted = [sc.name for sc in self.scenarios
@@ -1080,9 +1119,56 @@ class ScenarioSuite:
                         if consumers[j] <= submitted_imports:
                             exports_of[j] = []
 
+                def fail_scenario(i: int, cause: str) -> None:
+                    """Degrade scenario i to ERROR and cascade through the
+                    routing DAG: an importer of a failed exporter can never
+                    see a complete input stream, so it errors too (with the
+                    upstream lineage in its cause).  Cache-hit consumers
+                    are immune — they rehydrate, they never replay."""
+                    if scn_error[i] is not None:
+                        return
+                    scn_error[i] = cause
+                    parts[i] = None          # drop partial partition images
+                    reclaim_paths(agg_spills.pop(i, ()))
+                    # a failed scenario never submits its import partition;
+                    # marking it "submitted" also lets providers release
+                    # streams no live importer is still waiting on
+                    submitted_imports.add(i)
+                    name = plans[i][0].name
+                    for c in sorted(consumers[i]):
+                        if cached[c] is not None:
+                            continue
+                        fail_scenario(
+                            c, f"upstream scenario {name!r} errored: "
+                               f"{cause}")
+
+                def on_task_failed(tid: int, error) -> None:
+                    # quarantine delivery: a task burned max_attempts.
+                    # Replay-partition failures poison the whole scenario
+                    # (and its DAG downstream); an aggregation failure
+                    # degrades only its own verdict — the exports were
+                    # committed at the drain barrier before the aggregate
+                    # was even submitted, so downstream inputs are sound.
+                    reclaim_paths(spill_by_tid.pop(tid, ()))
+                    sched.discard(tid)
+                    if tid in owner:
+                        i, _key = owner[tid]
+                        fail_scenario(i, str(error))
+                    else:
+                        i = agg_owner[tid]
+                        reclaim_paths(agg_spills.pop(i, ()))
+                        if scn_error[i] is None:
+                            scn_error[i] = str(error)
+
                 def on_task_done(tid: int, result) -> None:
                     if tid in owner:
                         i, key = owner[tid]
+                        if scn_error[i] is not None:
+                            # straggler partition of an already-degraded
+                            # scenario: release and forget
+                            sched.discard(tid)
+                            reclaim_paths(spill_by_tid.pop(tid, ()))
+                            return
                         n_in, n_out, n_drop, image, partial, exported = \
                             result
                         counts[i][0] += n_in
@@ -1150,7 +1236,9 @@ class ScenarioSuite:
                         finish_exports(j)
                 if self.on_scheduler is not None:
                     self.on_scheduler(sched)
-                sched.run(timeout=timeout, on_task_done=on_task_done)
+                sched.run(timeout=timeout, on_task_done=on_task_done,
+                          on_task_failed=(on_task_failed if degrade
+                                          else None))
                 stats = dict(sched.stats)
         finally:
             # error-path spill cleanup: a failed suite must not leave
@@ -1178,6 +1266,21 @@ class ScenarioSuite:
                 n_in, n_out, n_drop = (ent.messages_in, ent.messages_out,
                                        ent.messages_dropped)
                 n_parts, wall = ent.partitions, 0.0
+            elif scn_error[i] is not None:
+                # degraded: the scenario never produced comparable
+                # outputs, so neither PASS nor FAIL is honest — an ERROR
+                # verdict carries the cause lineage and an empty output
+                # image, and is never banked in the result cache
+                empty = Bag.open_write(backend="memory")
+                empty.close()
+                image = empty.chunked_file.image()
+                verdict = Verdict(
+                    scenario=sc.name, passed=False, error=scn_error[i],
+                    golden_path=sc.golden_bag_path,
+                    cache="miss" if cache is not None else None)
+                n_in, n_out, n_drop = counts[i]
+                n_parts = total_tasks[i]
+                wall = (replay_end[i] - t0) if replay_end[i] else 0.0
             else:
                 if tasks or needs[i]:
                     image, verdict = agg_out[i]
@@ -1211,7 +1314,7 @@ class ScenarioSuite:
             verdict.report = report
             verdicts[sc.name] = verdict
             if (cache is not None and cache_keys[i] is not None
-                    and cached[i] is None):
+                    and cached[i] is None and scn_error[i] is None):
                 # freshly computed + content-addressable: bank it (a
                 # failed write costs coverage, never the suite)
                 cache.put(cache_keys[i], _CachedResult(
@@ -1266,6 +1369,7 @@ class ScenarioSuite:
                 "shards": r.shards,
                 "backend": backend_name,
                 "cache": v.cache,
+                "error": v.error,
                 "unix_time": now,
             })
         with open(verdict_log, "a") as f:

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from . import context as ctx
+
 
 @dataclass(frozen=True)
 class CompressionConfig:
@@ -103,5 +105,5 @@ def ring_reduce_scatter_int8(x: jax.Array, mesh: Mesh, axis: str,
         chunks = qg[producer].astype(jnp.float32) * sg[producer][:, None]
         return (chunks.reshape(-1) / N).astype(x.dtype)
 
-    return jax.shard_map(body, mesh=mesh, in_specs=P(),
-                         out_specs=P(), check_vma=False)(x)
+    return ctx.shard_map(body, mesh=mesh, in_specs=P(),
+                         out_specs=P())(x)

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from . import context as ctx
+
 
 def gpipe_apply(mesh: Mesh, stage_fn: Callable, stage_params,
                 x: jax.Array, n_micro: int, axis: str = "pod") -> jax.Array:
@@ -77,9 +79,8 @@ def gpipe_apply(mesh: Mesh, stage_fn: Callable, stage_params,
         return jax.lax.psum(
             jnp.where(is_last, result, jnp.zeros_like(result)), axis)
 
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=(P(axis), P()), out_specs=P(),
-                       check_vma=False)
+    fn = ctx.shard_map(body, mesh=mesh,
+                       in_specs=(P(axis), P()), out_specs=P())
     out = fn(stage_params, micro)
     return out.reshape((B,) + x.shape[1:])
 

@@ -125,6 +125,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str, fsdp: str = "auto",
                              opt_cfg)
         comp = low.compile()
         cost = comp.cost_analysis()
+        if isinstance(cost, (list, tuple)):     # older jax: list per program
+            cost = cost[0] if cost else {}
         coll = rl.collective_bytes(comp.as_text())
         return (float(cost.get("flops", 0.0)),
                 float(cost.get("bytes accessed", 0.0)),

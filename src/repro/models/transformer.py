@@ -29,6 +29,28 @@ from .layers import (ParamDef, embed_table, embed_tokens, init_table,
 # block structure
 # --------------------------------------------------------------------------
 
+@jax.custom_vjp
+def _remat_barrier(x: jax.Array) -> jax.Array:
+    """``optimization_barrier`` with an explicit VJP: identity-with-barrier
+    on both passes.  Some jax versions ship no differentiation rule for the
+    barrier primitive, which would make every ``scan_layers`` grad step
+    raise ``NotImplementedError`` — the custom rule keeps the memory-pinning
+    barrier in the forward *and* backward HLO without relying on one."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _remat_barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _remat_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_remat_barrier.defvjp(_remat_barrier_fwd, _remat_barrier_bwd)
+
+
+
 def block_tables(cfg: ModelConfig) -> dict[str, dict[str, ParamDef]]:
     D = cfg.d_model
     t: dict[str, dict[str, ParamDef]] = {}
@@ -134,7 +156,7 @@ def block_forward(cfg: ModelConfig, p: dict, x: jax.Array, positions,
         x = ctx.constrain(x, ctx.dp(), None, None)
     # pin the remat-saved layer input to bf16: without the barrier XLA
     # hoists the norm's f32 upcast into the saved stack (3x the memory)
-    x = jax.lax.optimization_barrier(x)
+    x = _remat_barrier(x)
     mix, caches = _mix_forward(cfg, p, x, positions)
     x = x + mix
     if cfg.d_ff > 0:

@@ -30,25 +30,61 @@ backpressure across the wire: the receiver replenishes credit only after
 its local republish returns, and a republish into a full queued lane
 blocks — so a slow subscriber three hops away still paces the original
 publisher, the same contract the in-process bus gives.
+
+Robustness (both optional, off by default for raw-socket endpoints):
+
+**Authentication** — give both ends a shared ``secret`` and every HELLO is
+challenged: the receiver sends a random nonce, the sender answers with
+``HMAC-SHA256(secret, nonce + stream_id)``, and a wrong or missing answer
+closes the connection before any credit is granted — an unauthenticated
+peer can never feed a DATA frame into the pool.
+
+**Reconnect** — a ``LaneTransport`` built via :meth:`LaneTransport.connect`
+(it knows its address) rides out transient connection loss: bounded
+exponential-backoff redial, re-handshake, then a full resend of the
+stream's send history on the fresh connection.  Full-history resend is
+what makes reconnect *correct* here: the receiver's sink commits a
+per-connection snapshot at each DRAIN (replacing the stream's previous
+commit), so the fresh connection must carry the complete stream, and a
+``drain()`` interrupted by the loss retries its token on the new
+connection.  Bus-mode republish stays exactly-once for named streams via
+a per-stream delivered-count (resent prefixes are skipped); credit
+starvation is *not* a reconnect trigger — a stalled peer is alive, just
+slow, and redialing it would only duplicate pressure.
 """
 
 from __future__ import annotations
 
+import hashlib
+import hmac
 import itertools
+import os
 import socket
 import threading
 import time
 from typing import Callable, Optional, Sequence
 
+from repro import chaos
 from repro.core.bag import Message
 
-from .wire import (T_CLOSE, T_CREDIT, T_DATA, T_DRAIN, T_DRAIN_ACK, T_HELLO,
-                   FrameSocket, WireError, decode_data, decode_u32,
-                   encode_data, encode_u32)
+from .wire import (T_AUTH, T_CHALLENGE, T_CLOSE, T_CREDIT, T_DATA, T_DRAIN,
+                   T_DRAIN_ACK, T_HELLO, FrameSocket, WireError, decode_data,
+                   decode_u32, encode_data, encode_u32)
 
 
 class TransportError(ConnectionError):
     """The bridge to the peer is gone (or starved past its timeout)."""
+
+
+def _as_secret(secret: "str | bytes | None") -> Optional[bytes]:
+    if secret is None or isinstance(secret, bytes):
+        return secret
+    return secret.encode("utf-8")
+
+
+def _auth_mac(secret: bytes, nonce: bytes, stream_id: str) -> bytes:
+    return hmac.new(secret, bytes(nonce) + stream_id.encode("utf-8"),
+                    hashlib.sha256).digest()
 
 
 class _CreditGate:
@@ -65,11 +101,30 @@ class _CreditGate:
         self._err: Optional[BaseException] = None
         self._cond = threading.Condition()
         self.stalls = 0                # acquires that had to wait
+        self.granted = 0               # lifetime total for this connection
 
     def grant(self, n: int) -> None:
         with self._cond:
             self._avail += n
+            self.granted += n
             self._cond.notify_all()
+
+    def wait_granted(self, timeout: float) -> None:
+        """Block until the peer has granted at least once — its proof of
+        accepting this connection (credit is only ever sent post-auth)."""
+        deadline = time.monotonic() + timeout
+        with self._cond:
+            while self.granted == 0:
+                if self._err is not None:
+                    raise TransportError(
+                        f"transport closed while awaiting first credit: "
+                        f"{self._err!r}") from self._err
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TransportError(
+                        f"no credit from peer within {timeout}s of "
+                        "(re)connecting — handshake rejected or stalled")
+                self._cond.wait(remaining)
 
     def abort(self, err: BaseException) -> None:
         with self._cond:
@@ -111,6 +166,14 @@ class LaneTransport:
     retry) reject.  ``timeout`` bounds every wait against the peer
     (credit, drain ack) — a dead or wedged peer fails the bridge instead
     of hanging it.
+
+    With an ``address`` (what :meth:`connect` provides), connection loss
+    triggers up to ``reconnect_attempts`` redials with exponential backoff
+    (``reconnect_backoff`` doubling per try), after which the transport is
+    permanently failed.  Reconnect re-handshakes (HELLO, auth if
+    ``secret``) and resends the whole send history — see the module
+    docstring for why that is the correct recovery under snapshot-commit
+    sinks.  ``secret`` enables answering the receiver's HMAC challenge.
     """
 
     #: cut a DATA frame once its payload reaches this many bytes (always
@@ -118,45 +181,82 @@ class LaneTransport:
     FRAME_BYTES_TARGET = 8 << 20
 
     def __init__(self, sock: socket.socket, stream_id: str = "",
-                 flush_batch: int = 128, timeout: float = 30.0):
+                 flush_batch: int = 128, timeout: float = 30.0,
+                 secret: "str | bytes | None" = None,
+                 address: Optional[tuple[str, int]] = None,
+                 reconnect_attempts: int = 4,
+                 reconnect_backoff: float = 0.05):
         if flush_batch < 1:
             raise ValueError("flush_batch must be >= 1")
-        try:
-            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        except OSError:
-            pass                        # not TCP (e.g. a unix socketpair)
         self.stream_id = stream_id
-        self._fs = FrameSocket(sock)
         self._flush_batch = flush_batch
         self._timeout = timeout
-        self._credits = _CreditGate()
+        self._secret = _as_secret(secret)
+        self._address = address
+        self._reconnect_attempts = reconnect_attempts
+        self._reconnect_backoff = reconnect_backoff
         self._buffer: list[Message] = []
         self._send_lock = threading.Lock()   # buffer + frame-write order
+        self._state_lock = threading.Lock()  # _gen / _conn_lost / _error
         self._acks: set[int] = set()
         self._ack_cond = threading.Condition()
         self._drain_token = itertools.count(1)
         self._error: Optional[BaseException] = None
+        self._conn_lost: Optional[BaseException] = None
         self._closed = False
+        self._gen = 0
         self.messages_sent = 0
         self.frames_sent = 0
-        self._fs.send_frame(T_HELLO, stream_id.encode("utf-8"))
-        self._reader = threading.Thread(
-            target=self._read_loop, name=f"transport-rx-{stream_id or id(self)}",
-            daemon=True)
-        self._reader.start()
+        self.reconnects = 0
+        self._flaps = 0
+        # resend source on reconnect; disabled (None) when redialing is
+        # impossible/off, so socketpair-style endpoints pay no memory
+        self._history: Optional[list[Message]] = (
+            [] if address is not None and reconnect_attempts > 0 else None)
+        self._attach(sock)
 
     @classmethod
     def connect(cls, address: tuple[str, int], stream_id: str = "",
                 flush_batch: int = 128, timeout: float = 30.0,
-                ) -> "LaneTransport":
+                secret: "str | bytes | None" = None,
+                reconnect_attempts: int = 4,
+                reconnect_backoff: float = 0.05) -> "LaneTransport":
         sock = socket.create_connection(address, timeout=timeout)
         sock.settimeout(None)
         return cls(sock, stream_id=stream_id, flush_batch=flush_batch,
-                   timeout=timeout)
+                   timeout=timeout, secret=secret, address=address,
+                   reconnect_attempts=reconnect_attempts,
+                   reconnect_backoff=reconnect_backoff)
+
+    def _attach(self, sock: socket.socket) -> None:
+        """Adopt ``sock`` as the live connection: fresh framer, fresh
+        credit gate, new reader generation, then HELLO."""
+        try:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:
+            pass                        # not TCP (e.g. a unix socketpair)
+        fs = FrameSocket(sock, chaos_key=self.stream_id)
+        gate = _CreditGate()
+        old = getattr(self, "_fs", None)
+        if old is not None:
+            self._bytes_prior += old.bytes_sent
+        else:
+            self._bytes_prior = 0
+        with self._state_lock:
+            self._gen += 1
+            gen = self._gen
+            self._fs = fs
+            self._credits = gate
+            self._conn_lost = None
+        fs.send_frame(T_HELLO, self.stream_id.encode("utf-8"))
+        self._reader = threading.Thread(
+            target=self._read_loop, args=(fs, gate, gen),
+            name=f"transport-rx-{self.stream_id or id(self)}", daemon=True)
+        self._reader.start()
 
     @property
     def bytes_sent(self) -> int:
-        return self._fs.bytes_sent
+        return self._bytes_prior + self._fs.bytes_sent
 
     @property
     def credit_stalls(self) -> int:
@@ -164,29 +264,44 @@ class LaneTransport:
 
     # -- receive side (reader thread) --------------------------------------
 
-    def _read_loop(self) -> None:
+    def _read_loop(self, fs: FrameSocket, gate: _CreditGate,
+                   gen: int) -> None:
+        """Reader for connection generation ``gen``.  Grants go to *this*
+        connection's gate; a stale reader (its generation superseded by a
+        reconnect) must never mark the new connection lost."""
         err: BaseException = TransportError("peer closed the connection")
         try:
             while True:
-                ftype, body = self._fs.recv_frame()
+                ftype, body = fs.recv_frame()
                 if ftype is None:
                     break
                 if ftype == T_CREDIT:
-                    self._credits.grant(decode_u32(body))
+                    gate.grant(decode_u32(body))
                 elif ftype == T_DRAIN_ACK:
+                    self._flaps = 0     # a full barrier: the link is good
                     with self._ack_cond:
                         self._acks.add(decode_u32(body))
                         self._ack_cond.notify_all()
+                elif ftype == T_CHALLENGE:
+                    if self._secret is None:
+                        raise WireError(
+                            "peer demands authentication but this "
+                            "transport has no shared secret")
+                    fs.send_frame(
+                        T_AUTH, _auth_mac(self._secret, body, self.stream_id))
         except (WireError, OSError) as e:
             err = e
         finally:
-            if not self._closed:
-                self._error = err
+            with self._state_lock:
+                stale = gen != self._gen or self._closed
+                if not stale:
+                    self._conn_lost = err
             # wake anything blocked on the dead peer — credit waiters raise
-            # from acquire, drain waiters re-check _error
-            self._credits.abort(err)
-            with self._ack_cond:
-                self._ack_cond.notify_all()
+            # from acquire, drain waiters re-check the loss and reconnect
+            gate.abort(err)
+            if not stale:
+                with self._ack_cond:
+                    self._ack_cond.notify_all()
 
     # -- send side ----------------------------------------------------------
 
@@ -196,6 +311,70 @@ class LaneTransport:
         if self._error is not None:
             raise TransportError(
                 f"transport failed: {self._error!r}") from self._error
+
+    def _note_conn_lost(self, err: BaseException) -> None:
+        with self._state_lock:
+            if self._conn_lost is None:
+                self._conn_lost = err
+
+    def _ensure_conn_locked(self) -> None:
+        """(Holding ``_send_lock``.)  If the current connection is gone,
+        redial with bounded exponential backoff, re-handshake and resend
+        the full history; exhausting the budget permanently fails the
+        transport."""
+        with self._state_lock:
+            cause = self._conn_lost
+        if cause is None:
+            return
+        self._fs.close()                # stale reader unblocks on EOF
+        attempts = (self._reconnect_attempts
+                    if self._address is not None and self._history is not None
+                    and not self._closed
+                    # flapping guard: a link that keeps dying right after
+                    # each "successful" redial must converge to failure,
+                    # not redial forever (the counter resets at drain acks)
+                    and self._flaps < self._reconnect_attempts * 4 else 0)
+        for attempt in range(attempts):
+            time.sleep(min(self._reconnect_backoff * (2 ** attempt), 2.0))
+            try:
+                sock = socket.create_connection(self._address,
+                                                timeout=self._timeout)
+                sock.settimeout(None)
+                self._attach(sock)
+                self._resend_history_locked()
+                # a redial only counts once the peer grants credit — that
+                # happens strictly after auth, so a rejected peer can't
+                # loop on instantly-"successful" empty-history reconnects
+                self._credits.wait_granted(self._timeout)
+                self.reconnects += 1
+                self._flaps += 1
+                return
+            except (TransportError, OSError) as e:
+                cause = e
+                self._note_conn_lost(e)
+        err = TransportError(
+            f"connection lost and not recovered after {attempts} "
+            f"reconnect attempts: {cause!r}")
+        err.__cause__ = cause
+        with self._state_lock:
+            if self._error is None:
+                self._error = err
+        raise err
+
+    def _resend_history_locked(self) -> None:
+        """Replay every previously-sent message on the fresh connection
+        (credit-gated).  The receiver's snapshot sink needs the complete
+        stream on this connection; bus-mode receivers dedup the replayed
+        prefix by delivered-count."""
+        pos = 0
+        while pos < len(self._history):
+            left = len(self._history) - pos
+            n = self._credits.acquire_up_to(min(left, self._flush_batch),
+                                            self._timeout)
+            batch = self._history[pos:pos + n]
+            self._fs.send_frame(T_DATA, encode_data(batch))
+            self.frames_sent += 1
+            pos += n
 
     def send_message(self, msg: Message) -> None:
         """Buffer one message; flush when the batch threshold is reached.
@@ -216,8 +395,14 @@ class LaneTransport:
     def _flush_locked(self) -> None:
         while self._buffer:
             self._check_alive()
-            n = self._credits.acquire_up_to(
-                min(len(self._buffer), self._flush_batch), self._timeout)
+            self._ensure_conn_locked()
+            try:
+                n = self._credits.acquire_up_to(
+                    min(len(self._buffer), self._flush_batch), self._timeout)
+            except TransportError:
+                if self._conn_lost is not None and not self._closed:
+                    continue        # connection died under us — redial
+                raise
             size = 0
             for i in range(n):          # byte-bound the frame as well
                 size += len(self._buffer[i].data)
@@ -228,9 +413,16 @@ class LaneTransport:
                     n = i + 1
                     break
             batch, self._buffer = self._buffer[:n], self._buffer[n:]
+            if self._history is not None:
+                # into history *before* the send: if the frame dies on the
+                # wire the reconnect resend already covers this batch
+                self._history.extend(batch)
             try:
                 self._fs.send_frame(T_DATA, encode_data(batch))
             except OSError as e:
+                if self._history is not None:
+                    self._note_conn_lost(e)
+                    continue        # redial at the top of the loop
                 raise TransportError(f"send failed: {e!r}") from e
             self.messages_sent += len(batch)
             self.frames_sent += 1
@@ -242,27 +434,52 @@ class LaneTransport:
 
     def drain(self) -> None:
         """Barrier: returns once everything sent so far has been
-        republished on (and committed by) the remote end."""
+        republished on (and committed by) the remote end.
+
+        A connection lost mid-barrier retries the *same* token on the
+        reconnected stream (after the history resend), so a returned
+        ``drain()`` always means the receiver committed the complete
+        stream — ack'd tokens are only ever sent commit-first."""
         token = next(self._drain_token)
-        with self._send_lock:
-            self._flush_locked()
-            try:
-                self._fs.send_frame(T_DRAIN, encode_u32(token))
-            except OSError as e:
-                raise TransportError(f"drain send failed: {e!r}") from e
-        deadline = time.monotonic() + self._timeout
-        with self._ack_cond:
-            while token not in self._acks:
-                if self._error is not None:
-                    raise TransportError(
-                        f"peer lost before drain ack: {self._error!r}"
-                    ) from self._error
-                remaining = deadline - time.monotonic()
-                if remaining <= 0:
-                    raise TransportError(
-                        f"no drain ack within {self._timeout}s")
-                self._ack_cond.wait(remaining)
-            self._acks.discard(token)
+        retries = 0
+        while True:
+            with self._send_lock:
+                self._flush_locked()
+                try:
+                    self._fs.send_frame(T_DRAIN, encode_u32(token))
+                except OSError as e:
+                    if self._history is not None \
+                            and retries <= self._reconnect_attempts:
+                        self._note_conn_lost(e)
+                        retries += 1
+                        continue
+                    raise TransportError(f"drain send failed: {e!r}") from e
+            deadline = time.monotonic() + self._timeout
+            lost = False
+            with self._ack_cond:
+                while token not in self._acks:
+                    if self._error is not None:
+                        raise TransportError(
+                            f"peer lost before drain ack: {self._error!r}"
+                        ) from self._error
+                    if self._conn_lost is not None:
+                        lost = True     # redial + resend, then retry token
+                        break
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        raise TransportError(
+                            f"no drain ack within {self._timeout}s")
+                    self._ack_cond.wait(remaining)
+                else:
+                    self._acks.discard(token)
+                    return
+            if not lost or self._history is None \
+                    or retries > self._reconnect_attempts:
+                with self._state_lock:
+                    cause = self._conn_lost
+                raise TransportError(
+                    f"peer lost before drain ack: {cause!r}") from cause
+            retries += 1
 
     def close(self) -> None:
         """Best-effort orderly shutdown: flush, CLOSE, close the socket.
@@ -277,7 +494,8 @@ class LaneTransport:
             with self._send_lock:
                 if self._buffer and self._error is None:
                     self._flush_locked()
-                self._closed = True
+                with self._state_lock:
+                    self._closed = True
                 self._fs.send_frame(T_CLOSE)
         except (TransportError, OSError):
             pass
@@ -302,11 +520,20 @@ class RemoteBus:
 
     ``window`` is the per-connection credit window in messages — the
     remote analogue of a lane's ``maxsize``.
+
+    ``secret`` arms the HELLO challenge: every connection must answer
+    ``HMAC-SHA256(secret, nonce + stream_id)`` before its first credit —
+    failures are recorded in ``auth_failures`` and the socket is closed
+    without ever accepting a DATA frame.  For *named* streams the bus
+    republish is reconnect-idempotent: a per-stream delivered-count skips
+    the prefix a reconnecting sender replays (unnamed streams can't be
+    told apart across connections, so they get at-least-once on redial).
     """
 
     def __init__(self, bus=None, sink: Optional[Callable[[str, list[Message]],
                                                          None]] = None,
-                 host: str = "127.0.0.1", port: int = 0, window: int = 256):
+                 host: str = "127.0.0.1", port: int = 0, window: int = 256,
+                 secret: "str | bytes | None" = None):
         if bus is None and sink is None:
             raise ValueError("RemoteBus needs a bus and/or a sink")
         if window < 1:
@@ -316,14 +543,17 @@ class RemoteBus:
         self._host = host
         self._port = port
         self._window = window
+        self._secret = _as_secret(secret)
         self._listener: Optional[socket.socket] = None
         self._accept_thread: Optional[threading.Thread] = None
         self._conns: list[FrameSocket] = []
         self._threads: list[threading.Thread] = []
         self._lock = threading.Lock()
         self._stopped = False
+        self._delivered: dict[str, int] = {}   # per named stream, bus-mode
         self.messages_received = 0
         self.frames_received = 0
+        self.auth_failures = 0
         self.errors: list[BaseException] = []
 
     # -- lifecycle -----------------------------------------------------------
@@ -404,9 +634,34 @@ class RemoteBus:
                 self._threads.append(t)
             t.start()
 
+    def _grant(self, fs: FrameSocket, stream_id: str, n: int) -> None:
+        """Send a credit grant — unless a ``credit_starve`` fault withholds
+        it, in which case the sender must ride out its credit timeout."""
+        plan = chaos.active_plan()
+        if plan is not None \
+                and plan.probe("credit_starve", stream_id) is not None:
+            return
+        fs.send_frame(T_CREDIT, encode_u32(n))
+
+    def _authenticate(self, fs: FrameSocket, stream_id: str) -> bool:
+        """Challenge the fresh connection; ``True`` iff it may proceed."""
+        if self._secret is None:
+            return True
+        nonce = os.urandom(16)
+        fs.send_frame(T_CHALLENGE, nonce)
+        ftype, body = fs.recv_frame()
+        if ftype != T_AUTH or not hmac.compare_digest(
+                bytes(body), _auth_mac(self._secret, nonce, stream_id)):
+            self.auth_failures += 1
+            self.errors.append(WireError(
+                f"authentication failed for stream {stream_id!r}"))
+            return False
+        return True
+
     def _handle(self, fs: FrameSocket) -> None:
         stream_id = ""
         stream: list[Message] = []
+        seen = 0                 # messages received on THIS connection
         try:
             ftype, body = fs.recv_frame()
             if ftype is None:
@@ -414,7 +669,13 @@ class RemoteBus:
             if ftype != T_HELLO:
                 raise WireError(f"expected HELLO, got frame type {ftype}")
             stream_id = body.decode("utf-8")
-            fs.send_frame(T_CREDIT, encode_u32(self._window))
+            fs.chaos_key = stream_id or fs.chaos_key
+            if not self._authenticate(fs, stream_id):
+                return          # finally: closes before any DATA/credit
+            with self._lock:
+                already = self._delivered.get(stream_id, 0) \
+                    if stream_id else 0
+            self._grant(fs, stream_id, self._window)
             while True:
                 ftype, body = fs.recv_frame()
                 if ftype is None or ftype == T_CLOSE:
@@ -424,13 +685,22 @@ class RemoteBus:
                     self.frames_received += 1
                     self.messages_received += len(msgs)
                     if self._bus is not None:
-                        # blocks while downstream lanes are full — credit
-                        # is withheld and the sender stalls: backpressure
-                        # has crossed the wire
-                        self._bus.publish_batch(msgs)
+                        # skip the prefix a reconnecting sender replays
+                        # (already republished by its previous connection)
+                        skip = min(max(already - seen, 0), len(msgs))
+                        if len(msgs) > skip:
+                            # blocks while downstream lanes are full —
+                            # credit is withheld and the sender stalls:
+                            # backpressure has crossed the wire
+                            self._bus.publish_batch(msgs[skip:])
                     if self._sink is not None:
                         stream.extend(msgs)
-                    fs.send_frame(T_CREDIT, encode_u32(len(msgs)))
+                    seen += len(msgs)
+                    if stream_id and seen > already:
+                        with self._lock:
+                            self._delivered[stream_id] = max(
+                                self._delivered.get(stream_id, 0), seen)
+                    self._grant(fs, stream_id, len(msgs))
                 elif ftype == T_DRAIN:
                     if self._bus is not None:
                         try:

@@ -5,8 +5,14 @@ Spark workers exchange topic traffic over the network.  This module is the
 byte-level contract of that fabric — deliberately *not* a third
 serialization format:
 
-* a **frame** is ``[u32 body_len][u8 type][body]`` — the same
+* a **frame** is ``[u32 body_len][u8 type][body][u32 crc]`` — the same
   length-prefixed discipline every chunk/record of the bag format uses,
+  plus a CRC32C trailer over ``type + body`` (crc32c when the optional
+  accelerated module is importable, ``zlib.crc32`` otherwise — both ends
+  of a link run this module, so the choice is consistent per process
+  image).  A receiver verifies the trailer before interpreting the body:
+  a flipped bit or truncated payload is a :class:`WireError` at the
+  frame boundary, never a silently corrupt batch downstream,
 * a **DATA body** is one message batch in the *batch-array layout* — the
   compact wire twin of
   :func:`repro.data.pipeline.assemble_message_batch`: a topic table
@@ -39,6 +45,12 @@ Frame types (the whole protocol):
                before the matching ``DRAIN`` is now visible to remote
                subscribers.
 ``CLOSE``      sender -> receiver: orderly end of stream.
+``CHALLENGE``  receiver -> sender, right after ``HELLO`` when the
+               receiver holds a shared secret: a random nonce the sender
+               must answer before any credit is granted.
+``AUTH``       sender -> receiver: ``HMAC-SHA256(secret, nonce +
+               stream_id)``.  A wrong or missing answer closes the
+               connection before a single DATA frame is accepted.
 
 Credits are counted in *messages*, not frames, so a sender low on credit
 can still make progress with a smaller DATA batch (adaptive framing under
@@ -55,8 +67,14 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro import chaos
 from repro.core.bag import Message
 from repro.core.binpipe import deserialize, serialize
+
+try:                                    # optional accelerated CRC32C
+    from crc32c import crc32c as _crc  # type: ignore[import-not-found]
+except ImportError:                     # stdlib fallback (CRC-32/ISO-HDLC)
+    from zlib import crc32 as _crc
 
 _FRAME_HDR = struct.Struct("<IB")    # body_len, frame_type
 _U32 = struct.Struct("<I")
@@ -67,6 +85,8 @@ T_CREDIT = 2
 T_DRAIN = 3
 T_DRAIN_ACK = 4
 T_CLOSE = 5
+T_CHALLENGE = 6
+T_AUTH = 7
 
 #: refuse to allocate for frames beyond this — a corrupt length prefix must
 #: fail loudly, not OOM the process
@@ -75,6 +95,12 @@ MAX_FRAME_BYTES = 256 << 20
 
 class WireError(ConnectionError):
     """Malformed frame or a connection that died mid-frame."""
+
+
+def frame_crc(ftype: int, body) -> int:
+    """The integrity trailer: CRC over the type byte then the body, so a
+    frame whose *type* was flipped fails exactly like a corrupt body."""
+    return _crc(body, _crc(bytes((ftype,)))) & 0xFFFFFFFF
 
 
 def encode_data(messages: Sequence[Message]) -> bytes:
@@ -220,19 +246,58 @@ class FrameSocket:
     single-consumer by construction (one reader thread per connection).
     A clean EOF *between* frames returns ``(None, b"")``; EOF *inside* a
     frame — the peer died mid-message — raises :class:`WireError`.
+
+    ``chaos_key`` names this socket at the ``wire_corrupt`` chaos seam
+    (see :mod:`repro.chaos`); the default empty key still matches the
+    ``"*"`` target, so untagged sockets are injectable too.
     """
 
-    def __init__(self, sock: socket.socket):
+    def __init__(self, sock: socket.socket, chaos_key: str = ""):
         self._sock = sock
         self._send_lock = threading.Lock()
         self.bytes_sent = 0
         self.bytes_received = 0
+        self.chaos_key = chaos_key
 
     def send_frame(self, ftype: int, body: bytes = b"") -> None:
-        frame = _FRAME_HDR.pack(len(body), ftype) + body
+        frame = b"".join((_FRAME_HDR.pack(len(body), ftype), body,
+                          _U32.pack(frame_crc(ftype, body))))
+        plan = chaos.active_plan()
+        if plan is not None:
+            fault = plan.probe("wire_corrupt", self.chaos_key)
+            if fault is not None:
+                self._send_tampered(frame, fault, plan)
+                return
         with self._send_lock:
             self._sock.sendall(frame)
             self.bytes_sent += len(frame)
+
+    def _send_tampered(self, frame: bytes, fault, plan) -> None:
+        """Apply a ``wire_corrupt`` fault: emit damaged bytes the receiver
+        must reject.  ``truncate`` sends a prefix then kills the socket (a
+        peer dying mid-frame — EOF inside a frame, never a hang); the
+        default ``bitflip`` flips one bit past the length prefix, so
+        framing survives and the CRC trailer catches it."""
+        rng = plan.rng("wire_corrupt", self.chaos_key)
+        with self._send_lock:
+            if fault.mode == "truncate":
+                keep = rng.randrange(1, len(frame))
+                try:
+                    self._sock.sendall(frame[:keep])
+                except OSError:
+                    pass
+                self.bytes_sent += keep
+            else:
+                dmg = bytearray(frame)
+                pos = rng.randrange(_U32.size, len(dmg))
+                dmg[pos] ^= 1 << rng.randrange(8)
+                try:
+                    self._sock.sendall(dmg)
+                except OSError:
+                    pass
+                self.bytes_sent += len(dmg)
+        if fault.mode == "truncate":
+            self.close()
 
     def _recv_exact(self, n: int, mid_frame: bool) -> Optional[bytearray]:
         buf = bytearray(n)
@@ -261,7 +326,12 @@ class FrameSocket:
             raise WireError(f"frame of {body_len} bytes exceeds "
                             f"MAX_FRAME_BYTES ({MAX_FRAME_BYTES})")
         body = self._recv_exact(body_len, mid_frame=True) if body_len else b""
-        self.bytes_received += _FRAME_HDR.size + body_len
+        trailer = self._recv_exact(_U32.size, mid_frame=True)
+        (crc,) = _U32.unpack(trailer)
+        if crc != frame_crc(ftype, body):
+            raise WireError(f"CRC mismatch on a type-{ftype} frame of "
+                            f"{body_len} bytes: corrupt on the wire")
+        self.bytes_received += _FRAME_HDR.size + body_len + _U32.size
         return ftype, body
 
     def close(self) -> None:

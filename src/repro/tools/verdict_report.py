@@ -28,7 +28,16 @@ and wall time to the median of all earlier runs):
                     poison the median and a hit can never *be* a wall-time
                     regression, so hits neither flag nor count as baseline
 
-``--strict`` exits 1 when any flag fires — the CI trip-wire shape.
+Scenarios whose *latest* record is an ERROR verdict (the degraded-suite
+outcome: a partition perma-failed, or an upstream exporter did) are
+reported in their own section with the cause lineage.  ERROR runs are
+excluded from checksum/count/walltime trending on both sides — an
+errored run produced nothing comparable, so it can neither flag drift
+nor serve as a baseline — but they DO trip ``--strict``: a degraded
+suite is a red build even though the run "completed".
+
+``--strict`` exits 1 when any flag fires or any scenario is currently
+ERROR — the CI trip-wire shape.
 ``--json out.json`` additionally writes the full analysis.
 """
 
@@ -70,14 +79,18 @@ def analyze(records: Sequence[dict],
             wall_factor: float = 1.5) -> dict:
     """Per-scenario trend analysis over a verdict history.
 
-    Returns ``{"scenarios": {name: {...}}, "flags": [...], "runs": N}``;
-    each flag is ``{"scenario", "flag", "detail"}``.  Records must be in
-    append order (what the JSONL log guarantees).
+    Returns ``{"scenarios": {name: {...}}, "flags": [...],
+    "errors": [...], "runs": N}``; each flag is
+    ``{"scenario", "flag", "detail"}``, each error
+    ``{"scenario", "error", "runs"}`` (scenarios whose latest record is
+    an ERROR verdict).  Records must be in append order (what the JSONL
+    log guarantees).
     """
     history: "OrderedDict[str, list[dict]]" = OrderedDict()
     for rec in records:
         history.setdefault(rec["scenario"], []).append(rec)
     flags: list[dict] = []
+    errors: list[dict] = []
     scenarios: dict[str, dict] = {}
 
     def flag(name: str, kind: str, detail: str) -> None:
@@ -92,6 +105,12 @@ def analyze(records: Sequence[dict],
             "checksums": last.get("checksums", {}),
         }
         scenarios[name] = entry
+        if last.get("status") == "ERROR":
+            # its own section, not a drift flag: an errored scenario
+            # produced nothing comparable, so there is nothing to trend
+            # — but --strict still trips on it below
+            errors.append({"scenario": name, "error": last.get("error"),
+                           "runs": len(runs)})
         if len(runs) < 2:
             continue
         prev = runs[-2]
@@ -118,11 +137,13 @@ def analyze(records: Sequence[dict],
                          f"{fld}: {prev[fld]} -> {last[fld]}")
         earlier = [r.get("wall_time_s") for r in runs[:-1]
                    if r.get("wall_time_s") is not None
-                   and r.get("cache") != "hit"]
+                   and r.get("cache") != "hit"
+                   and r.get("status") != "ERROR"]
         wall = last.get("wall_time_s")
-        if last.get("cache") == "hit":
-            # a cache hit skipped replay entirely; its ~0 wall time is
-            # neither a regression nor a usable baseline sample
+        if last.get("cache") == "hit" or last.get("status") == "ERROR":
+            # a cache hit skipped replay entirely and an errored run
+            # never finished one; neither wall time is a regression nor
+            # a usable baseline sample
             wall = None
         if earlier and wall is not None:
             baseline = max(_median(earlier), WALL_FLOOR_S)
@@ -131,7 +152,8 @@ def analyze(records: Sequence[dict],
                 flag(name, "WALLTIME",
                      f"{wall:.3f}s vs median {baseline:.3f}s "
                      f"(> {wall_factor:.2f}x)")
-    return {"scenarios": scenarios, "flags": flags, "runs": len(records)}
+    return {"scenarios": scenarios, "flags": flags, "errors": errors,
+            "runs": len(records)}
 
 
 def render(report: dict) -> str:
@@ -142,6 +164,10 @@ def render(report: dict) -> str:
         wall_s = f"{wall:.3f}s" if wall is not None else "n/a"
         lines.append(f"  {name}: {entry['status']} x{entry['runs']} runs, "
                      f"last wall {wall_s}")
+    if report.get("errors"):
+        lines.append(f"{len(report['errors'])} ERROR verdict(s):")
+        for e in report["errors"]:
+            lines.append(f"  [ERROR] {e['scenario']}: {e['error']}")
     if report["flags"]:
         lines.append(f"{len(report['flags'])} flag(s):")
         for f in report["flags"]:
@@ -164,7 +190,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     parser.add_argument("--json", dest="json_out", default=None,
                         help="also write the analysis as JSON")
     parser.add_argument("--strict", action="store_true",
-                        help="exit 1 when any flag fires (CI trip-wire)")
+                        help="exit 1 when any flag fires or any scenario "
+                             "is currently ERROR (CI trip-wire)")
     args = parser.parse_args(argv)
     report = analyze(load_records(args.log), wall_factor=args.wall_factor)
     print(render(report))
@@ -172,7 +199,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         with open(args.json_out, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)
             f.write("\n")
-    return 1 if (args.strict and report["flags"]) else 0
+    return 1 if (args.strict
+                 and (report["flags"] or report["errors"])) else 0
 
 
 if __name__ == "__main__":

@@ -1,0 +1,337 @@
+"""Chaos engineering + graceful degradation (fault injection PR).
+
+Covers: the seeded ChaosPlan mechanics (glob targets, at/count firing
+windows, the fired ledger, per-firing deterministic RNG), the
+install/uninstall registry, every injection seam that terminates in the
+scenario layer (worker crash tolerated, lane stall tolerated, poison
+user logic degrading), the suite's ``on_error="degrade"`` contract —
+exactly the poisoned scenarios (plus routing-DAG downstream with cause
+lineage) come back ERROR while every survivor stays bit-identical — the
+scheduler's quarantine mode and per-task deadlines, and the
+ProcessBackend shutdown escalation (a wedged worker cannot hang the
+driver's exit).
+"""
+
+import json
+import multiprocessing
+import time
+
+import numpy as np
+import pytest
+
+from repro import chaos
+from repro.core import Bag, Scenario, ScenarioSuite, Scheduler, WorkerError
+
+TOPICS = ("/camera", "/lidar")
+
+
+def _make_bag(path, n=240, payload=48, seed=0):
+    rng = np.random.RandomState(seed)
+    b = Bag.open_write(path, chunk_bytes=4096)
+    for i in range(n):
+        b.write(TOPICS[i % len(TOPICS)], i * 1000 + int(rng.randint(400)),
+                rng.bytes(payload))
+    b.close()
+    return path
+
+
+@pytest.fixture
+def bag_path(tmp_path):
+    return _make_bag(str(tmp_path / "drive.bag"))
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    """A test that forgets to uninstall must not poison its neighbours."""
+    yield
+    chaos.uninstall()
+
+
+def _logic(msg):
+    return ("/det" + msg.topic, msg.data[:8])
+
+
+def _prov_logic(msg):
+    return ("/fused", msg.data[:4])
+
+
+def _cons_logic(msg):
+    return ("/score", bytes(reversed(msg.data)))
+
+
+def _snap(verdicts):
+    return {n: (v.status, v.report.output_image,
+                {t: m.checksum for t, m in v.metrics.items()})
+            for n, v in verdicts.items()}
+
+
+# -- plan mechanics ---------------------------------------------------------
+
+
+def test_plan_target_glob_and_firing_window():
+    plan = chaos.ChaosPlan([
+        chaos.Fault("logic_raise", target="scn-*", at=1, count=2),
+    ])
+    # at=1, count=2: fires on matching probes 1 and 2, not 0 or 3+
+    assert plan.probe("logic_raise", "scn-a") is None
+    assert plan.probe("logic_raise", "other") is None   # no match, no burn
+    assert plan.probe("logic_raise", "scn-b") is not None
+    assert plan.probe("logic_raise", "scn-a") is not None
+    assert plan.probe("logic_raise", "scn-a") is None
+    assert plan.fired_count("logic_raise") == 2
+    assert [f.key for f in plan.fired] == ["scn-b", "scn-a"]
+
+
+def test_plan_counts_are_per_fault_and_seam_scoped():
+    plan = chaos.ChaosPlan([
+        chaos.Fault("worker_crash", target="w0", count=1),
+        chaos.Fault("lane_stall", target="*", count=1),
+    ])
+    assert plan.probe("worker_crash", "w1") is None
+    assert plan.probe("lane_stall", "logic") is not None
+    assert plan.probe("worker_crash", "w0") is not None
+    assert plan.probe("worker_crash", "w0") is None     # count exhausted
+    assert plan.fired_count() == 2
+    assert plan.fired_count("worker_crash") == 1
+
+
+def test_plan_rng_is_deterministic_per_firing():
+    def draws():
+        plan = chaos.ChaosPlan(
+            [chaos.Fault("wire_corrupt", count=None)], seed=42)
+        out = []
+        for _ in range(3):
+            assert plan.probe("wire_corrupt", "s1") is not None
+            out.append(plan.rng("wire_corrupt", "s1").randrange(1 << 30))
+        return out
+    a, b = draws(), draws()
+    assert a == b                       # same seed + history -> same draws
+    assert len(set(a)) == 3             # successive firings decorrelate
+
+
+def test_fault_validation():
+    with pytest.raises(ValueError):
+        chaos.Fault("nonsense_seam")
+    with pytest.raises(ValueError):
+        chaos.Fault("lane_stall", at=-1)
+    with pytest.raises(ValueError):
+        chaos.Fault("lane_stall", count=0)
+
+
+def test_install_registry():
+    assert chaos.active_plan() is None
+    assert chaos.probe("logic_raise", "x") is None      # no plan: never fires
+    plan = chaos.ChaosPlan([chaos.Fault("logic_raise", count=None)])
+    chaos.install(plan)
+    assert chaos.active_plan() is plan
+    assert chaos.probe("logic_raise", "x") is not None
+    chaos.uninstall()
+    assert chaos.active_plan() is None
+
+
+# -- suite degradation (the tentpole contract) ------------------------------
+
+
+def _suite(bag, **kw):
+    kw.setdefault("num_workers", 3)
+    kw.setdefault("on_error", "degrade")
+    kw.setdefault("scheduler_kwargs", {"max_attempts": 2})
+    return ScenarioSuite([
+        Scenario("clean-a", bag, _logic),
+        Scenario("victim", bag, _logic),
+        Scenario("clean-b", bag, _logic, drop_rate=0.25, seed=9),
+    ], **kw)
+
+
+def test_degrade_exact_error_set_and_bit_identical_survivors(bag_path,
+                                                             tmp_path):
+    clean = _snap(_suite(bag_path).run(timeout=60))
+    assert all(s[0] == "PASS" for s in clean.values())
+
+    chaos.install(chaos.ChaosPlan(
+        [chaos.Fault("logic_raise", target="victim", count=None)], seed=1))
+    log = str(tmp_path / "verdicts.jsonl")
+    try:
+        verdicts = _suite(bag_path).run(timeout=60, verdict_log=log)
+    finally:
+        chaos.uninstall()
+
+    assert verdicts["victim"].status == "ERROR"
+    assert not verdicts["victim"].passed          # ERROR is falsy like FAIL
+    assert "injected user-logic failure" in verdicts["victim"].error
+    hurt = _snap(verdicts)
+    for name in ("clean-a", "clean-b"):           # survivors untouched
+        assert hurt[name] == clean[name]
+
+    # the failure model is persisted: JSONL row + manifest status
+    recs = {json.loads(l)["scenario"]: json.loads(l) for l in open(log)}
+    assert recs["victim"]["status"] == "ERROR"
+    assert "injected user-logic failure" in recs["victim"]["error"]
+    assert recs["clean-a"]["error"] is None
+    man = json.load(open(log + ".manifest.json"))
+    assert man["scenarios"]["victim"]["status"] == "ERROR"
+    assert man["passed"] is False
+
+
+def test_degrade_cascades_through_routing_dag(bag_path):
+    scns = [
+        Scenario("provider", bag_path, _prov_logic, exports=("/fused",)),
+        Scenario("downstream", bag_path, _cons_logic, imports=("/fused",)),
+        Scenario("bystander", bag_path, _logic),
+    ]
+    chaos.install(chaos.ChaosPlan(
+        [chaos.Fault("logic_raise", target="provider", count=None)], seed=2))
+    try:
+        v = ScenarioSuite(scns, num_workers=3, on_error="degrade",
+                          scheduler_kwargs={"max_attempts": 2},
+                          ).run(timeout=60)
+    finally:
+        chaos.uninstall()
+    assert v["provider"].status == "ERROR"
+    assert v["downstream"].status == "ERROR"
+    assert "upstream scenario 'provider' errored" in v["downstream"].error
+    assert "injected user-logic failure" in v["downstream"].error
+    assert v["bystander"].status == "PASS"
+
+
+def test_on_error_raise_keeps_historical_semantics(bag_path):
+    chaos.install(chaos.ChaosPlan(
+        [chaos.Fault("logic_raise", target="victim", count=None)], seed=1))
+    try:
+        with pytest.raises(WorkerError):
+            _suite(bag_path, on_error="raise").run(timeout=60)
+    finally:
+        chaos.uninstall()
+
+
+def test_on_error_validated():
+    with pytest.raises(ValueError):
+        ScenarioSuite([], on_error="explode")
+
+
+def test_worker_crash_is_tolerated_not_degraded(bag_path):
+    """An injected node loss is the scheduler's bread and butter: the task
+    is recomputed elsewhere and every verdict stays green."""
+    clean = _snap(_suite(bag_path).run(timeout=60))
+    chaos.install(chaos.ChaosPlan(
+        [chaos.Fault("worker_crash", target="w0", count=1)], seed=3))
+    try:
+        suite = _suite(bag_path,
+                       scheduler_kwargs={"max_attempts": 3,
+                                         "heartbeat_timeout": 0.3})
+        verdicts = suite.run(timeout=60)
+        plan = chaos.active_plan()
+        assert plan.fired_count("worker_crash") == 1
+    finally:
+        chaos.uninstall()
+    assert _snap(verdicts) == clean
+    assert verdicts["clean-a"].report.scheduler_stats["worker_deaths"] >= 1
+
+
+def test_lane_stall_slows_but_never_moves_a_byte(bag_path):
+    # staged (queued-lane) replay: the sync shape has no lanes to stall
+    def suite():
+        return ScenarioSuite(
+            [Scenario("piped", bag_path, _logic, pipeline=True),
+             Scenario("piped-drop", bag_path, _logic, pipeline=True,
+                      drop_rate=0.25, seed=9)],
+            num_workers=2, on_error="degrade",
+            scheduler_kwargs={"max_attempts": 2})
+
+    clean = _snap(suite().run(timeout=60))
+    chaos.install(chaos.ChaosPlan(
+        [chaos.Fault("lane_stall", target="*", at=0, count=30,
+                     param=0.001)], seed=4))
+    try:
+        verdicts = suite().run(timeout=120)
+        assert chaos.active_plan().fired_count("lane_stall") > 0
+    finally:
+        chaos.uninstall()
+    assert _snap(verdicts) == clean
+
+
+# -- scheduler quarantine + deadlines ---------------------------------------
+
+
+def test_quarantine_surrenders_poison_keeps_job():
+    def poison():
+        raise ValueError("always fails")
+
+    failed = []
+    with Scheduler(num_workers=2, max_attempts=2, speculation=False,
+                   quarantine=True) as s:
+        bad = s.submit(poison)
+        good = [s.submit(lambda x: x * 2, i) for i in range(10)]
+        res = s.run(timeout=30,
+                    on_task_failed=lambda tid, e: failed.append((tid, e)))
+    assert sorted(res.keys()) == sorted(good)         # job completed
+    assert [tid for tid, _ in failed] == [bad]
+    assert "always fails" in str(failed[0][1])
+    assert s.stats["tasks_failed"] == 1
+
+
+def test_deadline_retries_wedged_attempt():
+    state = {"n": 0}
+
+    def wedged_once(x):
+        state["n"] += 1
+        if state["n"] == 1:
+            time.sleep(1.5)           # first attempt blows the deadline
+        return x
+
+    with Scheduler(num_workers=2, speculation=False,
+                   task_deadline_s=0.3) as s:
+        s.submit(wedged_once, 5)
+        res = s.run(timeout=30)
+    assert list(res.values()) == [5]
+    assert s.stats["deadline_retries"] >= 1
+
+
+def test_deadline_plus_quarantine_degrades_forever_wedged_task():
+    def forever(x):
+        time.sleep(30)
+        return x
+
+    failed = []
+    t0 = time.monotonic()
+    with Scheduler(num_workers=2, max_attempts=2, speculation=False,
+                   quarantine=True, task_deadline_s=0.2) as s:
+        s.submit(forever, 1)
+        ok = s.submit(lambda: "fine")
+        res = s.run(timeout=30,
+                    on_task_failed=lambda tid, e: failed.append(str(e)))
+    assert res[ok] == "fine"
+    assert len(failed) == 1 and "deadline" in failed[0]
+    # the driver loop converged on deadline sweeps, long before the 30 s
+    # sleeps would have unwound
+    assert time.monotonic() - t0 < 20
+
+
+# -- ProcessBackend shutdown escalation -------------------------------------
+
+
+def _stuck_task():
+    time.sleep(60)
+
+
+def test_process_shutdown_escalates_on_wedged_worker():
+    """A worker wedged inside user code ignores the sentinel; shutdown must
+    escalate (terminate, then kill) and return promptly instead of hanging
+    the driver for the full join timeout x workers."""
+    from repro.core import ProcessBackend
+
+    be = ProcessBackend()
+    s = Scheduler(num_workers=2, backend=be, speculation=False)
+    try:
+        s.submit(_stuck_task)
+        s.submit(_stuck_task)
+        time.sleep(1.0)               # let both workers enter the sleep
+    finally:
+        t0 = time.monotonic()
+        s.shutdown()
+        wall = time.monotonic() - t0
+    assert wall < 15.0, f"shutdown took {wall:.1f}s"
+    deadline = time.monotonic() + 5.0
+    while multiprocessing.active_children() and time.monotonic() < deadline:
+        time.sleep(0.05)
+    assert not multiprocessing.active_children()

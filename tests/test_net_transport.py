@@ -342,3 +342,220 @@ def test_close_without_drain_flushes_buffered_tail():
 def test_remote_bus_requires_bus_or_sink():
     with pytest.raises(ValueError):
         RemoteBus()
+
+
+# -- wire integrity: CRC trailer, auth, reconnect, chaos seams ---------------
+
+
+def _raw_frame(ftype, body):
+    from repro.net import wire
+    return (wire._FRAME_HDR.pack(len(body), ftype) + bytes(body)
+            + wire._U32.pack(wire.frame_crc(ftype, body)))
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_chaos_plan():
+    from repro import chaos
+    yield
+    chaos.uninstall()
+
+
+def test_crc_trailer_rejects_payload_bitflip():
+    body = bytes(encode_data(_messages(8)))
+    frame = bytearray(_raw_frame(T_DATA, body))
+    frame[9] ^= 0x10                            # one bit, inside the body
+    a, b = socket.socketpair()
+    fb = FrameSocket(b)
+    a.sendall(bytes(frame))
+    a.close()
+    with pytest.raises(WireError, match="CRC"):
+        fb.recv_frame()
+    fb.close()
+
+
+def test_crc_trailer_rejects_type_flip():
+    """The CRC covers the type byte: a frame whose *type* was flipped is
+    as corrupt as a mangled body (a CREDIT read as DATA must not parse)."""
+    body = bytes(encode_data(_messages(3)))
+    frame = bytearray(_raw_frame(T_DATA, body))
+    frame[4] ^= 0x01                            # the type byte
+    a, b = socket.socketpair()
+    fb = FrameSocket(b)
+    a.sendall(bytes(frame))
+    a.close()
+    with pytest.raises(WireError, match="CRC"):
+        fb.recv_frame()
+    fb.close()
+
+
+def test_fuzz_mutated_frames_reject_or_eof_never_deliver():
+    """Seeded fuzz over encoded DATA and HELLO frames: every bit flip or
+    truncation must surface as a WireError or a clean between-frames EOF —
+    never a hang (the closed writer bounds every read) and never a corrupt
+    payload handed to the caller as valid."""
+    import random as _random
+
+    from repro.net.wire import T_HELLO
+    rng = _random.Random(0xC0FFEE)
+    specimens = [(T_DATA, bytes(encode_data(_messages(12, payload=9)))),
+                 (T_HELLO, b"fuzz-stream")]
+    for trial in range(200):
+        ftype, body = specimens[trial % len(specimens)]
+        frame = bytearray(_raw_frame(ftype, body))
+        if rng.random() < 0.5:
+            frame = frame[:rng.randrange(len(frame))]       # truncate
+        else:
+            pos = rng.randrange(len(frame))
+            frame[pos] ^= 1 << rng.randrange(8)             # bit flip
+        a, b = socket.socketpair()
+        fb = FrameSocket(b)
+        a.sendall(bytes(frame))
+        a.close()
+        try:
+            got_type, got = fb.recv_frame()
+        except WireError:
+            pass
+        else:
+            # the only non-error outcome is a zero-byte truncation,
+            # which reads as a clean EOF between frames
+            assert got_type is None and got == b""
+        finally:
+            fb.close()
+
+
+def test_auth_accepts_matching_secret():
+    committed = {}
+    ep = RemoteBus(sink=lambda sid, msgs: committed.__setitem__(sid, msgs),
+                   secret="hunter2")
+    ep.start()
+    transport = LaneTransport.connect(ep.address, stream_id="s1",
+                                      flush_batch=4, secret="hunter2")
+    msgs = _messages(10)
+    for m in msgs:
+        transport.send_message(m)
+    transport.drain()
+    assert committed["s1"] == msgs
+    assert ep.auth_failures == 0
+    transport.close()
+    ep.stop()
+
+
+def test_auth_rejects_wrong_secret_fast():
+    """A peer with the wrong shared secret is refused before any DATA is
+    accepted: the sender surfaces a TransportError quickly (no hang, no
+    infinite reconnect loop) and the endpoint counts the rejection."""
+    committed = {}
+    ep = RemoteBus(sink=lambda sid, msgs: committed.__setitem__(sid, msgs),
+                   secret="right")
+    ep.start()
+    transport = LaneTransport.connect(ep.address, stream_id="s1",
+                                      flush_batch=1, timeout=0.5,
+                                      secret="wrong",
+                                      reconnect_backoff=0.01)
+    t0 = time.monotonic()
+    with pytest.raises(TransportError):
+        transport.send_message(Message("/t", 0, b"x"))
+        transport.drain()
+    assert time.monotonic() - t0 < 20.0
+    assert committed == {}                      # nothing ever committed
+    assert ep.auth_failures >= 1
+    transport.close()
+    ep.stop()
+
+
+def test_auth_rejects_secretless_client():
+    ep = RemoteBus(sink=lambda sid, msgs: None, secret="right")
+    ep.start()
+    transport = LaneTransport.connect(ep.address, stream_id="s1",
+                                      flush_batch=1, timeout=0.5,
+                                      reconnect_backoff=0.01)
+    with pytest.raises(TransportError):
+        transport.send_message(Message("/t", 0, b"x"))
+        transport.drain()
+    transport.close()
+    ep.stop()
+
+
+def test_reconnect_recovers_stream_without_dup_or_loss():
+    """Severing the server-side connection mid-stream must not lose or
+    duplicate a message: the sender redials with backoff, replays its
+    history, and the drain barrier commits the complete stream."""
+    committed = {}
+    ep = RemoteBus(sink=lambda sid, msgs: committed.__setitem__(sid, msgs))
+    ep.start()
+    transport = LaneTransport.connect(ep.address, stream_id="s1",
+                                      flush_batch=1,
+                                      reconnect_backoff=0.01)
+    msgs = _messages(16)
+    for m in msgs[:8]:
+        transport.send_message(m)
+    transport.flush()
+    deadline = time.monotonic() + 5.0
+    while ep.messages_received < 8 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    for fs in list(ep._conns):                  # sever: server drops us
+        fs.close()
+    for m in msgs[8:]:
+        transport.send_message(m)
+    transport.drain()
+    assert committed["s1"] == msgs              # complete, in order, once
+    assert transport.reconnects >= 1
+    transport.close()
+    ep.stop()
+
+
+@pytest.mark.parametrize("mode", ["bitflip", "truncate"])
+def test_wire_corrupt_chaos_is_rejected_then_recovered(mode):
+    """An injected corrupt frame must be *rejected at the wire* (CRC / EOF
+    mid-frame, recorded by the endpoint) and then *recovered* by the
+    sender's reconnect: the receiving bus still sees the exact stream,
+    exactly once."""
+    from repro import chaos
+
+    rx = MessageBus()
+    seen = []
+    rx.subscribe(None, seen.append)
+    ep = _endpoint(bus=rx)
+    chaos.install(chaos.ChaosPlan(
+        [chaos.Fault("wire_corrupt", target="s1", at=1, count=1,
+                     mode=mode)], seed=7))
+    try:
+        transport = LaneTransport.connect(ep.address, stream_id="s1",
+                                          flush_batch=4,
+                                          reconnect_backoff=0.01)
+        msgs = _messages(40)
+        for m in msgs:
+            transport.send_message(m)
+        transport.drain()
+        assert chaos.active_plan().fired_count("wire_corrupt") == 1
+    finally:
+        chaos.uninstall()
+    assert seen == msgs                         # nothing lost, nothing twice
+    assert transport.reconnects >= 1
+    transport.close()
+    ep.stop()
+
+
+def test_chaos_credit_starve_times_out_not_hangs():
+    """The credit_starve seam withholds every grant: the sender must fail
+    with a credit-timeout TransportError — starvation is backpressure
+    misbehaving, not a connection loss, so it must NOT trigger reconnect."""
+    from repro import chaos
+
+    ep = RemoteBus(sink=lambda sid, msgs: None)
+    ep.start()
+    chaos.install(chaos.ChaosPlan(
+        [chaos.Fault("credit_starve", target="s1", count=None)], seed=8))
+    try:
+        transport = LaneTransport.connect(ep.address, stream_id="s1",
+                                          flush_batch=1, timeout=0.4)
+        t0 = time.monotonic()
+        with pytest.raises(TransportError):
+            transport.send_message(Message("/t", 0, b"x"))
+            transport.flush()
+        assert 0.2 < time.monotonic() - t0 < 10.0
+        assert transport.reconnects == 0
+    finally:
+        chaos.uninstall()
+    transport.close()
+    ep.stop()

@@ -66,6 +66,40 @@ def test_single_run_never_flags():
     assert analyze([_rec("a")])["flags"] == []
 
 
+def test_error_verdicts_get_own_section_not_drift_flags():
+    recs = [_rec("a", checksums={"/x": 1}),
+            _rec("a", status="ERROR", passed=False, checksums={},
+                 wall=0.0) | {"error": "upstream scenario 'p' errored"}]
+    report = analyze(recs)
+    assert report["errors"] == [
+        {"scenario": "a", "error": "upstream scenario 'p' errored",
+         "runs": 2}]
+    # the ERROR surfaces as a STATUS-FLIP but never as checksum/count
+    # drift — an errored run produced nothing comparable
+    assert [f["flag"] for f in report["flags"]] == ["STATUS-FLIP"]
+
+
+def test_error_runs_excluded_from_walltime_trending():
+    # an ERROR run fails fast; its near-zero wall must not poison the
+    # baseline median for the next real run, nor flag itself
+    recs = [_rec("a", wall=0.2), _rec("a", wall=0.2),
+            _rec("a", status="ERROR", passed=False, wall=0.001),
+            _rec("a", wall=0.21)]
+    report = analyze(recs)
+    assert not any(f["flag"] == "WALLTIME" for f in report["flags"])
+    assert report["scenarios"]["a"]["wall_baseline_s"] == pytest.approx(0.2)
+
+
+def test_strict_trips_on_current_error_without_flags(tmp_path, capsys):
+    log = tmp_path / "verdicts.jsonl"
+    log.write_text(json.dumps(
+        _rec("a", status="ERROR", passed=False)
+        | {"error": "injected user-logic failure"}) + "\n")
+    assert main([str(log)]) == 0                # informational by default
+    assert main([str(log), "--strict"]) == 1    # a degraded suite is red
+    assert "[ERROR] a: injected user-logic failure" in capsys.readouterr().out
+
+
 def test_cli_strict_exit_codes(tmp_path, capsys):
     log = tmp_path / "verdicts.jsonl"
     stable = [_rec("a", checksums={"/x": 1})] * 2
