@@ -33,6 +33,13 @@ Prints ``name,us_per_call,derived`` CSV rows:
                          donated buffers; writes ``BENCH_perception.json``
                          (input checksums + suite verdicts asserted
                          bit-identical across all three consumers)
+    shm_*              — same-host zero-copy data plane: recycled
+                         segment-pool spill vs temp-file spill, shm ring
+                         vs loopback-TCP framing; writes
+                         ``BENCH_shm.json`` (``--check`` gates shm spill
+                         >= 1.5x file and ring >= 1.3x loopback, with
+                         verdicts bit-identical across carriers and
+                         backends and zero leaked segments)
     binpipe_*          — paper Fig 4 (BinPipedRDD stage throughput)
     chaos_*            — clean suite vs the same suite under a seeded
                          fault plan (worker crash, lane stall, poison
@@ -53,10 +60,10 @@ def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (aggregation, bag_cache, binpipe, chaos,
                             perception, pipeline, roofline_report,
-                            scalability, scenario_matrix, transport)
+                            scalability, scenario_matrix, shm, transport)
     failures = 0
     for mod in (bag_cache, scalability, scenario_matrix, aggregation,
-                pipeline, transport, perception, binpipe, chaos,
+                pipeline, transport, shm, perception, binpipe, chaos,
                 roofline_report):
         try:
             mod.main(csv=True)

@@ -1,0 +1,412 @@
+"""Same-host zero-copy data plane race — shm vs the incumbents
+(ISSUE 9 tentpole).
+
+The paper's platform pays its biggest tax moving simulation data
+between processes on one node.  This benchmark races both layers of the
+shm data plane against the paths they replace, then proves the carriers
+are semantically invisible:
+
+  * **spill race** — a driver-side arg-spill roundtrip (producer hands
+    an 8 MB blob to the carrier, consumer obtains a readable buffer,
+    carrier storage reclaimed) through the recycled
+    :class:`~repro.shm.SegmentPool` + zero-copy
+    :func:`~repro.shm.map_segment` view vs the temp-file path
+    (``mkstemp`` + write, open + read, unlink).  The pool is warmed
+    first: steady-state spill reuses parked segments (already-faulted
+    pages), which is exactly what a suite doing repeated spills sees.
+  * **ring race** — per-tick export flushes (DATA frames of
+    ``encode_data`` message batches) through a
+    :class:`~repro.shm.ring.ShmRing` vs a loopback-TCP
+    :class:`~repro.net.wire.FrameSocket`.  Send and recv alternate on
+    one thread — the SPSC pattern measured as pure per-frame carrier
+    cost, deterministic on a single-core host (no GIL-handoff noise).
+    Payload checksums are verified in separate untimed passes: a CRC
+    sweep inside the timed loop would dominate both carriers and hide
+    the difference being measured.
+  * **parity matrix** — a provider->consumer ScenarioSuite run on both
+    backends across ``export_transport`` inline/wire/shm, and a
+    spilling process-backend suite with shm spill on vs off: statuses,
+    merged output images and per-topic checksums must be bit-identical
+    everywhere (asserted).  The shm run must actually spill via shm
+    (``shm_spills > 0``) so the parity claim is not vacuous.
+
+Emits CSV rows plus machine-readable ``BENCH_shm.json``.  ``--check``
+re-reads the JSON and exits non-zero when the shm spill fell below
+``SPILL_MIN_RATIO``x the temp-file path, the ring below
+``RING_MIN_RATIO``x loopback TCP, any bit-parity assertion was not
+recorded, or the run leaked ``/dev/shm`` segments — the CI gate.
+
+    PYTHONPATH=src python -m benchmarks.shm [--check]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import socket
+import sys
+import tempfile
+import time
+import zlib
+from typing import Optional
+
+import numpy as np
+
+from repro.core import (Bag, Message, ProcessBackend, Scenario,
+                        ScenarioSuite)
+from repro.net.wire import FrameSocket, T_DATA, encode_data
+from repro.shm import SegmentPool, leaked_segments, map_segment
+from repro.shm.ring import ShmRing
+
+SPILL_BLOB_BYTES = 8 << 20          # one partition-image-sized blob
+SPILL_ROUNDS = 16                   # roundtrips per timed sample
+#: CI gate: recycled shm spill must beat the temp-file spill by this
+SPILL_MIN_RATIO = 1.5
+
+RING_FRAMES = 12000
+RING_MSGS_PER_FRAME = 16            # a per-tick export flush
+RING_PAYLOAD_BYTES = 64
+RING_DISTINCT_BODIES = 64           # cycled, so encode cost stays setup
+#: CI gate: the shm ring must beat loopback TCP by this per frame
+RING_MIN_RATIO = 1.3
+
+REPEATS = 3
+TOPICS = ("/camera", "/lidar")
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         os.pardir, "BENCH_shm.json")
+
+
+# -- spill race --------------------------------------------------------------
+
+def _make_blob() -> bytes:
+    return np.random.RandomState(7).bytes(SPILL_BLOB_BYTES)
+
+
+def _spill_shm(pool: SegmentPool, blob: bytes,
+               rounds: int = SPILL_ROUNDS) -> float:
+    """put -> zero-copy view -> release; the mapping *is* the consumer's
+    buffer, so the consume side touches it instead of copying it out."""
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        handle = pool.put(blob)
+        with map_segment(handle) as m:
+            assert m.view[0] is not None and m.view[-1] is not None
+        pool.release(handle)
+    return time.perf_counter() - t0
+
+
+def _spill_file(spill_dir: str, blob: bytes,
+                rounds: int = SPILL_ROUNDS) -> float:
+    """The incumbent: mkstemp + write out, open + read back, unlink."""
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        fd, path = tempfile.mkstemp(dir=spill_dir, prefix="spill-")
+        with os.fdopen(fd, "wb") as f:
+            f.write(blob)
+        with open(path, "rb") as f:
+            data = f.read()
+        assert data[0] is not None and data[-1] is not None
+        os.unlink(path)
+    return time.perf_counter() - t0
+
+
+def _spill_race(blob: bytes) -> dict:
+    pool = SegmentPool()
+    try:
+        # bit-parity first, untimed: both carriers hand back the blob
+        handle = pool.put(blob)
+        with map_segment(handle) as m:
+            shm_crc = zlib.crc32(m.view)
+        pool.release(handle)
+        with tempfile.TemporaryDirectory(prefix="repro-bench-spill-") as d:
+            fd, path = tempfile.mkstemp(dir=d)
+            with os.fdopen(fd, "wb") as f:
+                f.write(blob)
+            with open(path, "rb") as f:
+                file_crc = zlib.crc32(f.read())
+            os.unlink(path)
+            src_crc = zlib.crc32(blob)
+            assert shm_crc == file_crc == src_crc, \
+                "spill carrier changed payload bytes"
+
+            # warm both sides, then interleaved best-of
+            _spill_shm(pool, blob, rounds=2)
+            _spill_file(d, blob, rounds=2)
+            best_shm = best_file = None
+            for _ in range(REPEATS):
+                s = _spill_shm(pool, blob)
+                best_shm = s if best_shm is None else min(best_shm, s)
+                f = _spill_file(d, blob)
+                best_file = f if best_file is None else min(best_file, f)
+        recycled = pool.recycled
+    finally:
+        pool.shutdown()
+    return {"shm_s": best_shm, "file_s": best_file,
+            "ratio": best_file / best_shm, "recycled": recycled,
+            "crc": src_crc & 0xFFFFFFFF}
+
+
+# -- ring race ---------------------------------------------------------------
+
+def _make_bodies() -> list[bytes]:
+    rng = np.random.RandomState(11)
+    bodies = []
+    for b in range(RING_DISTINCT_BODIES):
+        msgs = [Message(TOPICS[i % len(TOPICS)],
+                        (b * RING_MSGS_PER_FRAME + i) * 1000,
+                        rng.bytes(RING_PAYLOAD_BYTES))
+                for i in range(RING_MSGS_PER_FRAME)]
+        bodies.append(encode_data(msgs))
+    return bodies
+
+
+def _run_ring(bodies: list[bytes], frames: int,
+              verify: bool = False) -> tuple[float, int]:
+    tx = ShmRing.create()
+    rx = ShmRing.attach(tx.name)
+    n = len(bodies)
+    crc = 0
+    t0 = time.perf_counter()
+    for i in range(frames):
+        tx.send_frame(T_DATA, bodies[i % n])
+        ftype, body = rx.recv_frame()
+        if verify:
+            assert ftype == T_DATA
+            crc = zlib.crc32(body, crc)
+    wall = time.perf_counter() - t0
+    rx.close(unlink=False)
+    tx.close()
+    return wall, crc & 0xFFFFFFFF
+
+
+def _run_wire(bodies: list[bytes], frames: int,
+              verify: bool = False) -> tuple[float, int]:
+    srv = socket.socket()
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+    c = socket.create_connection(srv.getsockname())
+    s, _ = srv.accept()
+    srv.close()
+    c.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    tx, rx = FrameSocket(c), FrameSocket(s)
+    n = len(bodies)
+    crc = 0
+    t0 = time.perf_counter()
+    for i in range(frames):
+        tx.send_frame(T_DATA, bodies[i % n])
+        ftype, body = rx.recv_frame()
+        if verify:
+            assert ftype == T_DATA
+            crc = zlib.crc32(body, crc)
+    wall = time.perf_counter() - t0
+    tx.close()
+    rx.close()
+    return wall, crc & 0xFFFFFFFF
+
+
+def _ring_race(bodies: list[bytes]) -> dict:
+    # bit-parity first, untimed: one full cycle of distinct bodies with
+    # a CRC sweep on both carriers must match the source exactly
+    n = len(bodies)
+    src_crc = 0
+    for b in bodies:
+        src_crc = zlib.crc32(b, src_crc)
+    src_crc &= 0xFFFFFFFF
+    _, ring_crc = _run_ring(bodies, n, verify=True)
+    _, wire_crc = _run_wire(bodies, n, verify=True)
+    assert ring_crc == wire_crc == src_crc, \
+        "frame carrier changed payload bytes"
+
+    best_ring = best_wire = None
+    for _ in range(REPEATS):
+        r, _ = _run_ring(bodies, RING_FRAMES)
+        best_ring = r if best_ring is None else min(best_ring, r)
+        w, _ = _run_wire(bodies, RING_FRAMES)
+        best_wire = w if best_wire is None else min(best_wire, w)
+    return {"shm_s": best_ring, "wire_s": best_wire,
+            "ratio": best_wire / best_ring,
+            "frame_bytes": len(bodies[0]), "crc": src_crc}
+
+
+# -- parity matrix -----------------------------------------------------------
+
+def _prov_logic(msg):
+    return ("/det" + msg.topic, msg.data[:24])
+
+
+def _cons_logic(msg):
+    return ("/score", bytes(reversed(msg.data)))
+
+
+def _make_bag(path: str, seed: int) -> str:
+    rng = np.random.RandomState(seed)
+    bag = Bag.open_write(path, chunk_bytes=32 * 1024)
+    for i in range(2000):
+        bag.write(TOPICS[i % len(TOPICS)], i * 1000, rng.bytes(128))
+    bag.close()
+    return path
+
+
+def _suite_fingerprint(bag_a: str, bag_b: str, backend,
+                       mode: str, capture: Optional[list] = None) -> dict:
+    suite = ScenarioSuite(
+        [Scenario("provider", bag_a, _prov_logic,
+                  exports=("/det/camera", "/det/lidar")),
+         Scenario("consumer", bag_b, _cons_logic,
+                  imports=("/det/camera", "/det/lidar"))],
+        num_workers=2, backend=backend, export_transport=mode,
+        on_scheduler=(capture.append if capture is not None else None))
+    verdicts = suite.run(timeout=300)
+    return {n: (v.status, v.report.output_image,
+                {t: m.checksum for t, m in v.metrics.items()})
+            for n, v in verdicts.items()}
+
+
+def _carrier_parity(bag_a: str, bag_b: str) -> bool:
+    """Verdicts, merged output images and checksums must be
+    bit-identical across both backends and all three export carriers."""
+    results = {}
+    for backend in ("thread", "process"):
+        for mode in ("inline", "wire", "shm"):
+            results[(backend, mode)] = _suite_fingerprint(
+                bag_a, bag_b, backend, mode)
+    baseline = results[("thread", "inline")]
+    for key, got in results.items():
+        assert got == baseline, f"export carrier changed results: {key}"
+    return True
+
+
+def _spill_parity(bag_a: str, bag_b: str) -> bool:
+    """A spilling process-backend suite with shm spill on vs off: same
+    bits out, and the shm run must actually have spilled via shm."""
+    results = {}
+    shm_spills = 0
+    for shm in (False, True):
+        captured: list = []
+        backend = ProcessBackend(spill_bytes=1024, shm=shm)
+        results[shm] = _suite_fingerprint(bag_a, bag_b, backend,
+                                          "inline", capture=captured)
+        if shm and captured:
+            shm_spills = captured[0].stats.get("shm_spills", 0)
+    assert results[False] == results[True], \
+        "shm spill carrier changed results"
+    assert shm_spills > 0, "shm parity run never spilled via shm"
+    return True
+
+
+# -- driver ------------------------------------------------------------------
+
+def run_race() -> dict:
+    spill = _spill_race(_make_blob())
+    ring = _ring_race(_make_bodies())
+    with tempfile.TemporaryDirectory(prefix="repro-bench-shm-") as d:
+        bag_a = _make_bag(os.path.join(d, "a.bag"), 5)
+        bag_b = _make_bag(os.path.join(d, "b.bag"), 6)
+        carriers_identical = _carrier_parity(bag_a, bag_b)
+        spills_identical = _spill_parity(bag_a, bag_b)
+    leaks = leaked_segments()
+    blob_mb = SPILL_BLOB_BYTES / 1e6
+    return {
+        "bench": "shm",
+        "spill_blob_bytes": SPILL_BLOB_BYTES,
+        "spill_rounds": SPILL_ROUNDS,
+        "spill_min_ratio": SPILL_MIN_RATIO,
+        "spill_shm_s": spill["shm_s"],
+        "spill_file_s": spill["file_s"],
+        "spill_shm_mb_per_s": SPILL_ROUNDS * blob_mb / spill["shm_s"],
+        "spill_file_mb_per_s": SPILL_ROUNDS * blob_mb / spill["file_s"],
+        "spill_shm_vs_file_ratio": spill["ratio"],
+        "spill_segments_recycled": spill["recycled"],
+        "ring_frames": RING_FRAMES,
+        "ring_frame_bytes": ring["frame_bytes"],
+        "ring_min_ratio": RING_MIN_RATIO,
+        "ring_shm_s": ring["shm_s"],
+        "ring_wire_s": ring["wire_s"],
+        "ring_shm_frames_per_s": RING_FRAMES / ring["shm_s"],
+        "ring_wire_frames_per_s": RING_FRAMES / ring["wire_s"],
+        "ring_shm_vs_wire_ratio": ring["ratio"],
+        "checksums_identical": True,
+        "carrier_verdicts_identical": carriers_identical,
+        "spill_verdicts_identical": spills_identical,
+        "shm_leaks": leaks,
+        "checksums": {"spill": spill["crc"], "ring": ring["crc"]},
+    }
+
+
+def main(csv: bool = True, json_path: str = JSON_PATH) -> list[tuple]:
+    payload = run_race()
+    rows = [
+        ("shm_spill", payload["spill_shm_s"] * 1e3 / SPILL_ROUNDS,
+         f"{payload['spill_shm_mb_per_s']:.0f} MB/s roundtrip "
+         f"(recycled pool + zero-copy view)"),
+        ("shm_spill_file", payload["spill_file_s"] * 1e3 / SPILL_ROUNDS,
+         f"{payload['spill_file_mb_per_s']:.0f} MB/s roundtrip "
+         "(temp-file spill)"),
+        ("shm_spill_vs_file_ratio", payload["spill_shm_vs_file_ratio"],
+         f"gate {SPILL_MIN_RATIO}x, payload bit-identical"),
+        ("shm_ring", payload["ring_shm_s"] * 1e6 / RING_FRAMES,
+         f"{payload['ring_shm_frames_per_s']:.0f} frames/s (shm ring)"),
+        ("shm_ring_wire", payload["ring_wire_s"] * 1e6 / RING_FRAMES,
+         f"{payload['ring_wire_frames_per_s']:.0f} frames/s "
+         "(loopback TCP)"),
+        ("shm_ring_vs_wire_ratio", payload["ring_shm_vs_wire_ratio"],
+         f"gate {RING_MIN_RATIO}x, verdicts bit-identical on both "
+         "backends"),
+    ]
+    if csv:
+        print(f"{rows[0][0]},{rows[0][1]:.2f}ms,{rows[0][2]}")
+        print(f"{rows[1][0]},{rows[1][1]:.2f}ms,{rows[1][2]}")
+        print(f"{rows[2][0]},{rows[2][1]:.2f}x,{rows[2][2]}")
+        print(f"{rows[3][0]},{rows[3][1]:.2f}us,{rows[3][2]}")
+        print(f"{rows[4][0]},{rows[4][1]:.2f}us,{rows[4][2]}")
+        print(f"{rows[5][0]},{rows[5][1]:.2f}x,{rows[5][2]}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+    return rows
+
+
+def check(json_path: str = JSON_PATH) -> int:
+    """CI gate: fail (exit 1) when either shm layer regressed below its
+    ratio gate, bit-parity was not upheld, or segments leaked."""
+    with open(json_path) as f:
+        payload = json.load(f)
+    spill_ratio = payload["spill_shm_vs_file_ratio"]
+    ring_ratio = payload["ring_shm_vs_wire_ratio"]
+    spill_gate = payload.get("spill_min_ratio", SPILL_MIN_RATIO)
+    ring_gate = payload.get("ring_min_ratio", RING_MIN_RATIO)
+    print(f"shm spill {payload['spill_shm_mb_per_s']:.0f} MB/s vs file "
+          f"{payload['spill_file_mb_per_s']:.0f} MB/s -> "
+          f"{spill_ratio:.2f}x (gate {spill_gate}x)")
+    print(f"shm ring {payload['ring_shm_frames_per_s']:.0f} frames/s vs "
+          f"wire {payload['ring_wire_frames_per_s']:.0f} frames/s -> "
+          f"{ring_ratio:.2f}x (gate {ring_gate}x)")
+    ok = True
+    if not (payload.get("checksums_identical")
+            and payload.get("carrier_verdicts_identical")
+            and payload.get("spill_verdicts_identical")):
+        print("FAIL: a shm carrier is not bit-identical to the path it "
+              "replaces", file=sys.stderr)
+        ok = False
+    if payload.get("shm_leaks"):
+        print(f"FAIL: leaked /dev/shm segments: {payload['shm_leaks']}",
+              file=sys.stderr)
+        ok = False
+    if spill_ratio < spill_gate:
+        print("FAIL: shm spill regressed below the temp-file gate",
+              file=sys.stderr)
+        ok = False
+    if ring_ratio < ring_gate:
+        print("FAIL: shm ring regressed below the loopback gate",
+              file=sys.stderr)
+        ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    if "--check" in sys.argv:
+        args = [a for a in sys.argv[1:] if a != "--check"]
+        sys.exit(check(args[0] if args else JSON_PATH))
+    main()

@@ -544,6 +544,14 @@ class Verdict:
     FAIL is honest — the string carries the cause lineage.  ERROR
     verdicts are falsy like FAIL, but report tooling keeps them out of
     checksum/walltime trending: there is nothing real to trend.
+
+    ``transport`` is export-carrier provenance for scenarios that feed
+    the routing DAG: ``"shm"`` (same-host shared-memory ring),
+    ``"wire"`` (TCP LaneTransport) or ``"inline"`` (rides task
+    results); ``None`` for scenarios that export nothing or
+    rehydrated from the result cache.  Verdicts are bit-identical
+    across carriers — this records which one actually ran, so a report
+    can flag a carrier shift between runs.
     """
     scenario: str
     passed: bool
@@ -554,6 +562,7 @@ class Verdict:
     report: Optional[Any] = None        # SimulationReport (layer above)
     cache: Optional[str] = None         # "hit" | "miss" | None (no cache)
     error: Optional[str] = None         # cause lineage; makes status ERROR
+    transport: Optional[str] = None     # "shm" | "wire" | "inline" | None
 
     @property
     def status(self) -> str:

@@ -28,6 +28,8 @@ import threading
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, Iterator, Optional, Sequence, Union
 
+from repro.shm import SegmentHandle, read_segment
+
 _MAGIC = b"REPROBAG"
 _VERSION = 2
 _HDR = struct.Struct("<IQ")          # record_count, payload_len
@@ -525,16 +527,20 @@ def bag_content_digest(source: "Bag | bytes | str") -> str:
             bag.close()
 
 
-BagSource = Union["Bag", bytes, bytearray, memoryview, str,
+BagSource = Union["Bag", bytes, bytearray, memoryview, str, SegmentHandle,
                   Iterable[Message], "Callable[[], object]"]
 
 
 def _open_source(source: BagSource) -> tuple[Bag, bool]:
     """Open a bag-backed merge source; returns (bag, owned).  Accepts an
-    already-open ``Bag``, a memory-bag image (``bytes``), or a disk path
-    (``str``)."""
+    already-open ``Bag``, a memory-bag image (``bytes``), a disk path
+    (``str``), or a shared-memory spill (:class:`~repro.shm.SegmentHandle`
+    — the segment stays linked for retries; its owner unlinks it)."""
     if isinstance(source, Bag):
         return source, False
+    if isinstance(source, SegmentHandle):
+        return Bag.open_read(backend="memory",
+                             image=read_segment(source)), True
     if isinstance(source, (bytes, bytearray, memoryview)):
         return Bag.open_read(backend="memory", image=bytes(source)), True
     return Bag.open_read(str(source), backend="disk"), True
@@ -554,7 +560,8 @@ def _iter_source(source: BagSource) -> Iterator[Message]:
     """
     if callable(source):
         source = source()
-    if isinstance(source, (Bag, bytes, bytearray, memoryview, str)):
+    if isinstance(source, (Bag, bytes, bytearray, memoryview, str,
+                           SegmentHandle)):
         bag, owned = _open_source(source)
         try:
             yield from iter_time_ordered(bag)

@@ -34,13 +34,23 @@ import multiprocessing.connection
 import os
 import pickle
 import queue
+import secrets
 import shutil
 import tempfile
 import threading
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Callable, List, Optional, Union
 
 from repro import chaos
+from repro.shm import (
+    SegmentHandle,
+    SegmentPool,
+    leaked_segments,
+    read_segment,
+    shm_available,
+    unlink_segment,
+    write_segment,
+)
 
 # payload shipped to a worker: (task_id, fn, args, attempt)
 TaskPayload = tuple[int, Callable[..., Any], tuple, int]
@@ -338,7 +348,8 @@ def _process_worker_main(worker_id: str, conn,
                          fail_after: Optional[int],
                          slow_factor: float,
                          spill_bytes: Optional[int] = None,
-                         spill_dir: Optional[str] = None) -> None:
+                         spill_dir: Optional[str] = None,
+                         shm_prefix: Optional[str] = None) -> None:
     """Worker-process loop: recv task, execute, report.
 
     A daemon beater thread heartbeats continuously — like a node's
@@ -348,10 +359,15 @@ def _process_worker_main(worker_id: str, conn,
     (beater included — heartbeats stop), like a segfaulted node.
 
     Results whose pickle exceeds ``spill_bytes`` (partition bag images,
-    merged scenario outputs) are routed through a temp-file spill: the
-    worker writes the pickle to disk and ships only the path, so bulk
-    payload bytes ride the filesystem cache instead of being copied
-    through the result pipe — the first bite of the shared-memory plan.
+    merged scenario outputs) are spilled out-of-band: with ``shm_prefix``
+    set the worker writes the pickle into a ``/dev/shm`` segment under
+    the driver's pool prefix and ships only the
+    :class:`~repro.shm.SegmentHandle` (one memcpy, no filesystem
+    round-trip); when shm is unavailable or full it falls back to a temp
+    file in ``spill_dir`` and ships the path.  Either way bulk payload
+    bytes stay out of the result pipe.  The spill dir is created lazily
+    on first file spill, so a suite that never file-spills leaves no
+    empty directory behind.
     """
     send_lock = threading.Lock()
 
@@ -402,11 +418,28 @@ def _process_worker_main(worker_id: str, conn,
                   RuntimeError(f"unpicklable task output: {e!r}")))
             continue
         if spill_bytes is not None and len(blob) > spill_bytes:
+            if shm_prefix is not None:
+                # fast path: one memcpy into a segment under the driver's
+                # pool prefix — a worker killed with the handle still in
+                # the pipe leaves an orphan the driver's shutdown sweep
+                # reaps by prefix
+                try:
+                    handle = write_segment(shm_prefix, blob)
+                except OSError:
+                    handle = None      # shm full/unavailable: temp file
+                if handle is not None:
+                    if send(("shm", worker_id, task_id, attempt, handle)):
+                        continue
+                    unlink_segment(handle)   # driver gone; don't leak
+                    return
             spill_path = None
             try:
                 # files live in the backend-owned spill dir, which the
                 # driver removes wholesale at shutdown — a worker killed
-                # with a spill message still in the pipe can't leak
+                # with a spill message still in the pipe can't leak.
+                # The dir itself is made lazily: reserved by the driver,
+                # created only once something actually file-spills
+                os.makedirs(spill_dir, mode=0o700, exist_ok=True)
                 fd, spill_path = tempfile.mkstemp(prefix="repro-spill-",
                                                   suffix=".pkl",
                                                   dir=spill_dir)
@@ -462,15 +495,22 @@ class ProcessBackend(ExecutorBackend):
     DEFAULT_SPILL_BYTES = 1 << 20
 
     def __init__(self, mp_context: Optional[str] = None,
-                 spill_bytes: Optional[int] = DEFAULT_SPILL_BYTES):
+                 spill_bytes: Optional[int] = DEFAULT_SPILL_BYTES,
+                 shm: Optional[bool] = None):
         try:
             self._ctx = multiprocessing.get_context(mp_context or "fork")
         except ValueError:             # platform without fork
             self._ctx = multiprocessing.get_context()
         self.spill_bytes = spill_bytes       # None disables spilling
-        self.spills = 0                      # results that rode a temp file
-        self.arg_spills = 0                  # task args parked on disk
+        self.shm = shm                       # None: auto-detect at first use
+        self.spills = 0                      # result spills, any carrier
+        self.arg_spills = 0                  # arg spills, any carrier
+        self.shm_spills = 0                  # spills that rode /dev/shm
+        self.shm_spill_bytes = 0
+        self._shm_pool: Optional[SegmentPool] = None
+        self._shm_last_prefix: Optional[str] = None
         self._spill_dir: Optional[str] = None
+        self._last_spill_dir: Optional[str] = None
         self._workers: dict[str, _ProcWorker] = {}
         self._pending: list[TaskPayload] = []
         self._send_failures: list[tuple[TaskPayload, BaseException]] = []
@@ -495,45 +535,114 @@ class ProcessBackend(ExecutorBackend):
 
     # -- argument spill ----------------------------------------------------
 
-    def spill_arg(self, data: bytes) -> str:
-        """Park a bulk task *argument* in the backend spill dir; returns
-        the file path to ship instead of the bytes.
+    def _shm_enabled(self) -> bool:
+        """Resolve the ``shm`` tri-state once (None = probe the host)."""
+        if self.shm is None:
+            self.shm = shm_available()
+        return self.shm
+
+    def _shm_prefix(self) -> Optional[str]:
+        """Lazily create the driver-owned segment pool; its prefix is
+        what workers stamp their result-spill segments with, so one
+        prefix sweep at shutdown reaps both sides' orphans."""
+        if not self._shm_enabled():
+            return None
+        if self._shm_pool is None:
+            self._shm_pool = SegmentPool()
+        return self._shm_pool.prefix
+
+    def _reserve_spill_dir(self) -> str:
+        """Reserve a spill-dir *path* without creating the directory:
+        whoever spills a file first (worker or driver) makedirs it, so a
+        suite that never file-spills leaves nothing on disk."""
+        if self._spill_dir is None:
+            self._spill_dir = os.path.join(
+                tempfile.gettempdir(),
+                f"repro-spill-{os.getpid()}-{secrets.token_hex(4)}")
+        return self._spill_dir
+
+    def spill_arg(self, data: bytes) -> Union[str, SegmentHandle]:
+        """Park a bulk task *argument* out-of-band; returns the reference
+        to ship instead of the bytes — a :class:`~repro.shm.SegmentHandle`
+        when the shared-memory pool is usable, else a temp-file path.
 
         The driver-side twin of the worker result spill: schedulers that
         would otherwise pickle MB-sized blobs (partition bag images bound
-        for an aggregate task) through a worker pipe write them here once
-        and pass the path — workers read them back as streaming disk
-        readers through the filesystem cache.  Files are written verbatim
-        (a memory-bag image *is* the on-disk bag format, so the spill file
-        doubles as an openable bag) and persist until :meth:`shutdown`
-        reaps the spill dir wholesale, which is what makes task retry and
-        speculation safe: a recomputed task re-reads the same path.
+        for an aggregate task) through a worker pipe park them once and
+        pass the reference.  On the shm path the blob is one memcpy into
+        a ref-counted pool segment; on the file path it is written
+        verbatim (a memory-bag image *is* the on-disk bag format, so the
+        spill file doubles as an openable bag).  Either way the spill
+        persists until :meth:`reclaim_spill` or the :meth:`shutdown`
+        sweep, which is what makes task retry and speculation safe: a
+        recomputed task re-reads the same reference.
         """
-        if self._spill_dir is None:
-            self._spill_dir = tempfile.mkdtemp(prefix="repro-spill-")
+        if self._shm_enabled():
+            if self._shm_pool is None:
+                self._shm_pool = SegmentPool()
+            try:
+                handle = self._shm_pool.put(data)
+            except OSError:
+                pass                   # shm full/gone: temp-file fallback
+            else:
+                self.arg_spills += 1
+                self.shm_spills += 1
+                self.shm_spill_bytes += handle.size
+                return handle
+        path_dir = self._reserve_spill_dir()
+        os.makedirs(path_dir, mode=0o700, exist_ok=True)
         fd, path = tempfile.mkstemp(prefix="repro-arg-", suffix=".bag",
-                                    dir=self._spill_dir)
+                                    dir=path_dir)
         with os.fdopen(fd, "wb") as f:
             f.write(data)
         self.arg_spills += 1
         return path
 
-    def reclaim_spill(self, path: str) -> None:
-        """Delete one spilled file once every consumer of it is done.
+    def reclaim_spill(self, ref: Union[str, SegmentHandle]) -> None:
+        """Release one spilled reference once every consumer is done.
 
-        The shutdown-time directory reap is the backstop; this is the
-        eager path the scenario suite calls per scenario (after its
-        aggregate/import task reports, and on the error path), so a long
-        suite's spill dir stays O(in-flight scenario) instead of growing
-        one file per spilled image until teardown.  Unlinking a path a
-        straggling speculative attempt still has open is safe (POSIX);
-        an attempt that opens *after* the unlink fails, and the scheduler
-        ignores failures of already-completed tasks.
+        The shutdown-time sweep is the backstop; this is the eager path
+        the scenario suite calls per scenario (after its aggregate/import
+        task reports, and on the error path), so a long suite's spill
+        footprint stays O(in-flight scenario) instead of growing one
+        artifact per spilled image until teardown.  Tolerant by design:
+        reclaiming an already-unlinked path or an unknown handle is a
+        no-op, and unlinking a reference a straggling speculative attempt
+        still has open is safe (POSIX) — an attempt that opens *after*
+        the unlink fails, and the scheduler ignores failures of
+        already-completed tasks.
         """
+        if isinstance(ref, SegmentHandle):
+            if self._shm_pool is not None:
+                self._shm_pool.release(ref)
+            else:
+                unlink_segment(ref)
+            return
         try:
-            os.unlink(path)
+            os.unlink(ref)
         except OSError:
             pass
+
+    def spill_leaks(self) -> List[str]:
+        """Spill artifacts still alive — the leak-check assertion hook;
+        after :meth:`shutdown` this must be empty (crash-safety
+        acceptance criterion), and mid-run it lists exactly the
+        in-flight spill set."""
+        leaks: List[str] = []
+        pool = self._shm_pool
+        prefix = pool.prefix if pool is not None else self._shm_last_prefix
+        if prefix is not None:
+            leaks += leaked_segments(prefix)
+        if pool is not None:
+            # free-list segments are pool-owned recycling capacity, not
+            # in-flight spills; shutdown reaps them
+            parked = set(pool.parked())
+            leaks = [n for n in leaks if n not in parked]
+        for d in (self._spill_dir, self._last_spill_dir):
+            if d is not None and os.path.isdir(d):
+                leaks += sorted(os.path.join(d, n) for n in os.listdir(d))
+                break
+        return leaks
 
     # -- dispatch ----------------------------------------------------------
 
@@ -600,6 +709,20 @@ class ProcessBackend(ExecutorBackend):
                 if msg[0] == "beat":
                     self._beat(msg[1])
                     continue
+                if msg[0] == "shm":
+                    # bulk result parked in a shared-memory segment by the
+                    # worker: copy out and unlink in one attach
+                    _, wid, task_id, attempt, handle = msg
+                    try:
+                        blob = read_segment(handle, unlink=True)
+                        msg = pickle.loads(blob)
+                        self.spills += 1
+                        self.shm_spills += 1
+                        self.shm_spill_bytes += len(blob)
+                    except Exception as e:     # gone/stale segment: retry
+                        msg = ("done", wid, task_id, attempt, None,
+                               RuntimeError(f"shm result spill unreadable: "
+                                            f"{e!r}"))
                 if msg[0] == "spill":
                     # bulk result parked in a temp file: load and unlink
                     _, wid, task_id, attempt, spill_path = msg
@@ -627,13 +750,15 @@ class ProcessBackend(ExecutorBackend):
 
     def add_worker(self, worker_id: str, fail_after: Optional[int] = None,
                    slow_factor: float = 1.0) -> None:
-        if self.spill_bytes is not None and self._spill_dir is None:
-            self._spill_dir = tempfile.mkdtemp(prefix="repro-spill-")
+        spill_dir = shm_prefix = None
+        if self.spill_bytes is not None:
+            spill_dir = self._reserve_spill_dir()   # path only, no mkdir
+            shm_prefix = self._shm_prefix()
         parent, child = self._ctx.Pipe(duplex=True)
         proc = self._ctx.Process(
             target=_process_worker_main,
             args=(worker_id, child, fail_after, slow_factor,
-                  self.spill_bytes, self._spill_dir),
+                  self.spill_bytes, spill_dir, shm_prefix),
             name=f"worker-{worker_id}", daemon=True)
         proc.start()
         child.close()
@@ -714,10 +839,19 @@ class ProcessBackend(ExecutorBackend):
                 w.conn.close()
             except OSError:
                 pass
+        # crash-safe spill reaping, after every worker is provably gone so
+        # no straggler re-creates an artifact behind the sweep.  Both arms
+        # are idempotent: a second shutdown() finds nothing to do.
+        pool, self._shm_pool = self._shm_pool, None
+        if pool is not None:
+            # unlinks registered segments *and* prefix-sweeps /dev/shm for
+            # orphans from workers killed with a handle still in the pipe
+            self._shm_last_prefix = pool.prefix
+            pool.shutdown()
         if self._spill_dir is not None:
             # reap spill files orphaned by killed workers / unread pipes
             shutil.rmtree(self._spill_dir, ignore_errors=True)
-            self._spill_dir = None
+            self._last_spill_dir, self._spill_dir = self._spill_dir, None
 
 
 def make_backend(backend: "str | ExecutorBackend") -> ExecutorBackend:

@@ -127,6 +127,17 @@ class Scheduler:
     def backend(self) -> ExecutorBackend:
         return self._backend
 
+    @property
+    def spill_stats(self) -> dict[str, int]:
+        """Out-of-band payload movement counters from the backend (zero
+        for backends that never spill): total result/arg spills plus how
+        many of those rode shared-memory segments and their byte volume.
+        Folded into :attr:`stats` when :meth:`run` returns."""
+        b = self._backend
+        return {k: getattr(b, k, 0)
+                for k in ("spills", "arg_spills",
+                          "shm_spills", "shm_spill_bytes")}
+
     # -- elastic membership --------------------------------------------------
 
     def add_worker(self, worker_id: str, **kw) -> None:
@@ -387,6 +398,7 @@ class Scheduler:
             self._check_stragglers()
             if not fresh and not fresh_failed:
                 time.sleep(0.005)   # idle tick; skip the nap mid-burst
+        self.stats.update(self.spill_stats)
         with self._lock:
             return {tid: t.result for tid, t in self._tasks.items()
                     if t.state == TaskState.DONE}

@@ -63,6 +63,7 @@ from dataclasses import dataclass, field, fields as dataclass_fields
 from typing import Callable, Optional, Sequence, Union
 
 from repro import chaos
+from repro.shm import SegmentHandle, read_segment, shm_available
 
 from .aggregation import Aggregator, MetricsTap, TopicMetrics, Verdict
 from .bag import Bag, Message, partition_bag
@@ -401,7 +402,12 @@ def _run_scenario_partition(scenario: Scenario, source: "str | bytes",
               else list(scenario.topics))
     t_start = None if is_import else scenario.start
     t_end = None if is_import else scenario.end
-    if isinstance(source, (bytes, bytearray)):
+    if isinstance(source, SegmentHandle):
+        # arg-spilled image parked in /dev/shm by the driver: one attach
+        # and copy-out; the driver's pool still owns the segment, so a
+        # retried or speculative attempt re-reads the same handle
+        src = Bag.open_read(backend="memory", image=read_segment(source))
+    elif isinstance(source, (bytes, bytearray)):
         src = Bag.open_read(backend="memory", image=bytes(source))
     else:
         src = Bag.open_read(source, backend="disk")
@@ -520,8 +526,12 @@ def _run_scenario_partition(scenario: Scenario, source: "str | bytes",
     export_topics = sorted(scenario.exports or ())
     if export_topics and export_to is not None:
         from repro.net.transport import LaneTransport
-        host, port, stream_id = export_to
-        transport = LaneTransport.connect((host, port), stream_id=stream_id)
+        # 4th element (use the same-host shm ring) is optional so older
+        # 3-tuple callers keep the pure-TCP shape
+        host, port, stream_id = export_to[:3]
+        use_shm = bool(export_to[3]) if len(export_to) > 3 else False
+        transport = LaneTransport.connect((host, port), stream_id=stream_id,
+                                          shm=use_shm)
         bridge = bus.bridge(export_topics, transport,
                             maxsize=scenario.queue_depth)
     elif export_topics and collect_exports:
@@ -669,10 +679,15 @@ class ScenarioSuite:
     ``"inline"`` rides exports on task results, ``"wire"`` streams them
     over :mod:`repro.net` LaneTransports to a backend-hosted
     :class:`~repro.net.transport.RemoteBus` collector (with credit-based
-    backpressure and drain barriers), and ``"auto"`` (default) picks wire
-    exactly where results would otherwise ride the process-backend pipe.
-    Outputs, checksums and verdicts are bit-identical across carriers and
-    backends — ``benchmarks/transport.py`` asserts it every run.
+    backpressure and drain barriers), ``"shm"`` is wire with the
+    same-host shared-memory ring negotiated per stream (frames bypass
+    the TCP stack; falls back to TCP framing when the handshake
+    declines), and ``"auto"`` (default) routes out-of-band exactly where
+    results would otherwise ride the process-backend pipe, preferring
+    shm > wire.  Outputs, checksums and verdicts are bit-identical
+    across carriers and backends — ``benchmarks/transport.py`` and
+    ``benchmarks/shm.py`` assert it every run; each verdict records
+    which carrier actually ran in ``Verdict.transport``.
 
     ``on_scheduler`` (if given) is called with the live Scheduler right
     after submission — the hook fault-injection harnesses use to kill
@@ -723,7 +738,7 @@ class ScenarioSuite:
         names = [s.name for s in scenarios]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate scenario names in {names}")
-        if export_transport not in ("auto", "wire", "inline"):
+        if export_transport not in ("auto", "shm", "wire", "inline"):
             raise ValueError(f"unknown export_transport {export_transport!r}")
         if on_error not in ("raise", "degrade"):
             raise ValueError(f"unknown on_error {on_error!r}")
@@ -790,13 +805,19 @@ class ScenarioSuite:
         return needs, consumers
 
     def _resolve_export_transport(self, backend_name: str) -> str:
-        """``"auto"`` routes exports over the wire exactly where they
-        would otherwise ride the task-result pipe (the process backend);
-        in-process thread workers hand the driver a reference instead.
-        Both shapes are bit-identical, so the choice is pure mechanics."""
+        """``"auto"`` routes exports out-of-band exactly where they would
+        otherwise ride the task-result pipe (the process backend),
+        preferring the same-host shm ring over loopback TCP when the host
+        supports it (shm > wire > inline); in-process thread workers hand
+        the driver a reference instead.  ``"shm"`` asks transports to
+        negotiate the ring but still degrades per-stream to TCP framing
+        when the handshake declines.  All shapes are bit-identical, so
+        the choice is pure mechanics."""
         if self.export_transport != "auto":
             return self.export_transport
-        return "wire" if backend_name == "process" else "inline"
+        if backend_name != "process":
+            return "inline"
+        return "shm" if shm_available() else "wire"
 
     def _plan_cache_keys(self, cache, needs: list[set]) -> list:
         """Per-scenario result-cache keys; ``None`` marks an uncacheable
@@ -925,6 +946,9 @@ class ScenarioSuite:
         counts = [[0, 0, 0] for _ in plans]      # in / out / dropped
         # degraded-mode failure ledger: cause string per errored scenario
         scn_error: list[Optional[str]] = [None] * len(plans)
+        # export-carrier provenance per scenario ("shm"/"wire"/"inline";
+        # None = exports nothing, or rehydrated from the result cache)
+        scn_transport: list[Optional[str]] = [None] * len(plans)
         degrade = self.on_error == "degrade"
         sched_kwargs = dict(self.scheduler_kwargs)
         if degrade:
@@ -935,10 +959,11 @@ class ScenarioSuite:
         replay_end = [0.0 for _ in plans]        # last replay-task finish
         agg_owner: dict[int, int] = {}           # aggregation tid -> i
         agg_out: dict[int, tuple[bytes, Verdict]] = {}
-        # every driver-side spill path still on disk; the finally sweep is
-        # the error-path cleanup, per-completion reclaims the eager one
-        tracked_spills: set[str] = set()
-        reclaim_holder: list[Callable[[str], None]] = []
+        # every driver-side spill reference still live (temp-file path or
+        # shm SegmentHandle); the finally sweep is the error-path cleanup,
+        # per-completion reclaims the eager one
+        tracked_spills: set = set()
+        reclaim_holder: list[Callable] = []
 
         try:
             with Scheduler(num_workers=self.num_workers,
@@ -969,16 +994,18 @@ class ScenarioSuite:
 
                 # spill-aware dispatch: on backends with an argument spill
                 # (process), large partition images / import streams are
-                # parked in the backend spill dir and tasks get paths —
-                # workers merge via streaming disk readers and the driver
-                # never pickles bulk bytes through the pipe
+                # parked out-of-band and tasks get references — a shm
+                # SegmentHandle (one memcpy each way) or a temp-file path
+                # (streaming disk readers) — so the driver never pickles
+                # bulk bytes through the pipe
                 spill_arg = getattr(sched.backend, "spill_arg", None)
                 spill_bytes = getattr(sched.backend, "spill_bytes", None)
                 reclaim = getattr(sched.backend, "reclaim_spill", None)
                 if reclaim is not None:
                     reclaim_holder.append(reclaim)
 
-                def spill_source(data: bytes) -> "bytes | str":
+                def spill_source(data: bytes
+                                 ) -> "bytes | str | SegmentHandle":
                     if (spill_arg is None or spill_bytes is None
                             or len(data) <= spill_bytes):
                         return data
@@ -993,8 +1020,11 @@ class ScenarioSuite:
                             reclaim(p)
 
                 # -- export routing state -------------------------------
-                wire = (self._resolve_export_transport(backend_name)
-                        == "wire" and any(consumers))
+                resolved_transport = \
+                    self._resolve_export_transport(backend_name)
+                wire = (resolved_transport in ("wire", "shm")
+                        and any(consumers))
+                use_shm = resolved_transport == "shm"
                 collect_lock = threading.Lock()
                 # (scenario i, partition key) -> committed export stream
                 collected: dict[tuple[int, tuple[int, int]],
@@ -1012,6 +1042,9 @@ class ScenarioSuite:
                         with collect_lock:
                             collected[stream_key[stream_id]] = list(msgs)
                     ep_addr = sched.backend.host_endpoint(sink=export_sink)
+                    # the endpoint just hosted: its stream_carriers map is
+                    # the transport-provenance source of truth per stream
+                    ep_obj = sched.backend.endpoints[-1]
                 # scenario i -> partition keys expected to export
                 export_keys: dict[int, list[tuple[int, int]]] = {}
                 exports_inline: dict[tuple[int, tuple[int, int]],
@@ -1037,7 +1070,7 @@ class ScenarioSuite:
                         return None, True
                     sid = f"{plans[i][0].name}#{key[0]}#{key[1]}"
                     stream_key[sid] = (i, key)
-                    return (ep_addr[0], ep_addr[1], sid), False
+                    return (ep_addr[0], ep_addr[1], sid, use_shm), False
 
                 def submit_aggregate(i: int) -> None:
                     sc = plans[i][0]
@@ -1047,7 +1080,7 @@ class ScenarioSuite:
                                for k in ordered]
                     partials = [rows[k][1] for k in ordered]
                     agg_spills[i] = [s for s in sources
-                                     if isinstance(s, str)]
+                                     if isinstance(s, (str, SegmentHandle))]
                     tid = sched.submit(
                         _run_scenario_aggregate, pool_agg, sc.name,
                         sources, partials, sc.golden_bag_path,
@@ -1110,7 +1143,7 @@ class ScenarioSuite:
                         lineage=("scenario", sc.name, -1, "<imports>",
                                  0, 0))
                     owner[tid] = (i, key)
-                    if isinstance(source, str):
+                    if isinstance(source, (str, SegmentHandle)):
                         spill_by_tid[tid] = [source]
                     # release provider streams every importer has now
                     # consumed — driver residency stays O(in-flight
@@ -1240,6 +1273,26 @@ class ScenarioSuite:
                           on_task_failed=(on_task_failed if degrade
                                           else None))
                 stats = dict(sched.stats)
+                # transport provenance, read before the endpoint stops:
+                # a wire-mode exporter's streams each negotiated a
+                # carrier at HELLO ("shm" only after a ring switch), and
+                # a scenario is "shm" only if every stream made the
+                # switch — a mixed outcome is reported as the weaker
+                # carrier rather than overstated
+                for i in range(len(plans)):
+                    if not consumers[i] or cached[i] is not None:
+                        continue
+                    if not wire:
+                        scn_transport[i] = "inline"
+                        continue
+                    got = [c for c in (
+                        ep_obj.stream_carriers.get(
+                            f"{plans[i][0].name}#{k[0]}#{k[1]}")
+                        for k in export_keys.get(i, ())) if c is not None]
+                    if got:
+                        scn_transport[i] = ("shm" if all(c == "shm"
+                                                         for c in got)
+                                            else "wire")
         finally:
             # error-path spill cleanup: a failed suite must not leave
             # parked images/import streams behind (the backend's
@@ -1297,6 +1350,7 @@ class ScenarioSuite:
                 n_in, n_out, n_drop = counts[i]
                 n_parts = total_tasks[i]
                 wall = (replay_end[i] - t0) if replay_end[i] else 0.0
+            verdict.transport = scn_transport[i]
             report = SimulationReport(
                 messages_in=n_in,
                 messages_out=n_out,
@@ -1369,6 +1423,7 @@ class ScenarioSuite:
                 "shards": r.shards,
                 "backend": backend_name,
                 "cache": v.cache,
+                "transport": v.transport,
                 "error": v.error,
                 "unix_time": now,
             })
@@ -1384,7 +1439,8 @@ class ScenarioSuite:
                 r["scenario"]: {"golden": r["golden"],
                                 "status": r["status"],
                                 "passed": r["passed"],
-                                "cache": r["cache"]}
+                                "cache": r["cache"],
+                                "transport": r["transport"]}
                 for r in records
             },
         }

@@ -51,6 +51,24 @@ connection.  Bus-mode republish stays exactly-once for named streams via
 a per-stream delivered-count (resent prefixes are skipped); credit
 starvation is *not* a reconnect trigger — a stalled peer is alive, just
 slow, and redialing it would only duplicate pressure.
+
+**Same-host shm fast path** (opt-in: ``LaneTransport(shm=True)``) — right
+after HELLO the sender offers a shared-memory upgrade: a ``SHM_OFFER``
+carrying its kernel boot id plus the name of a probe segment holding a
+random token.  The receiver accepts only if the boot id matches *and* it
+can read the token back out of the probe (both ends demonstrably share
+one ``/dev/shm`` namespace); it then creates an SPSC ring segment
+(:class:`repro.shm.ring.ShmRing`) and answers ``SHM_ACK`` with its name.
+The sender's next frame is ``SHM_SWITCH`` — the last sender->receiver
+TCP frame — after which every DATA/DRAIN/CLOSE frame rides the ring with
+the identical frame grammar (CRC trailer included), zero syscalls and
+zero kernel copies; CREDIT/DRAIN_ACK/CHALLENGE keep to TCP, which also
+serves as the receiver's liveness check on the ring.  Any failure at any
+step (other host, no shm, tiny ``/dev/shm``, stale ring) just declines
+and the stream stays on TCP — the fallback is always the proven path.
+Reconnects renegotiate from scratch on the fresh connection; chaos
+``wire_corrupt`` faults tamper ring frames exactly as they would TCP
+frames, and the receiver's CRC check drops the connection identically.
 """
 
 from __future__ import annotations
@@ -66,10 +84,15 @@ from typing import Callable, Optional, Sequence
 
 from repro import chaos
 from repro.core.bag import Message
+from repro.core.binpipe import deserialize, serialize
+from repro.shm import (SegmentHandle, new_prefix, read_segment, shm_available,
+                       unlink_segment, write_segment)
+from repro.shm.ring import RING_BYTES, ShmRing, boot_id
 
 from .wire import (T_AUTH, T_CHALLENGE, T_CLOSE, T_CREDIT, T_DATA, T_DRAIN,
-                   T_DRAIN_ACK, T_HELLO, FrameSocket, WireError, decode_data,
-                   decode_u32, encode_data, encode_u32)
+                   T_DRAIN_ACK, T_HELLO, T_SHM_ACK, T_SHM_OFFER, T_SHM_SWITCH,
+                   FrameSocket, WireError, decode_data, decode_u32,
+                   encode_data, encode_u32)
 
 
 class TransportError(ConnectionError):
@@ -185,7 +208,8 @@ class LaneTransport:
                  secret: "str | bytes | None" = None,
                  address: Optional[tuple[str, int]] = None,
                  reconnect_attempts: int = 4,
-                 reconnect_backoff: float = 0.05):
+                 reconnect_backoff: float = 0.05,
+                 shm: bool = False):
         if flush_batch < 1:
             raise ValueError("flush_batch must be >= 1")
         self.stream_id = stream_id
@@ -195,6 +219,12 @@ class LaneTransport:
         self._address = address
         self._reconnect_attempts = reconnect_attempts
         self._reconnect_backoff = reconnect_backoff
+        self._shm_wanted = shm
+        self._ring: Optional[ShmRing] = None
+        self._pending_ring: Optional[ShmRing] = None
+        self._probe: Optional[SegmentHandle] = None
+        self._frame_target = self.FRAME_BYTES_TARGET
+        self.shm_switches = 0
         self._buffer: list[Message] = []
         self._send_lock = threading.Lock()   # buffer + frame-write order
         self._state_lock = threading.Lock()  # _gen / _conn_lost / _error
@@ -220,13 +250,14 @@ class LaneTransport:
                 flush_batch: int = 128, timeout: float = 30.0,
                 secret: "str | bytes | None" = None,
                 reconnect_attempts: int = 4,
-                reconnect_backoff: float = 0.05) -> "LaneTransport":
+                reconnect_backoff: float = 0.05,
+                shm: bool = False) -> "LaneTransport":
         sock = socket.create_connection(address, timeout=timeout)
         sock.settimeout(None)
         return cls(sock, stream_id=stream_id, flush_batch=flush_batch,
                    timeout=timeout, secret=secret, address=address,
                    reconnect_attempts=reconnect_attempts,
-                   reconnect_backoff=reconnect_backoff)
+                   reconnect_backoff=reconnect_backoff, shm=shm)
 
     def _attach(self, sock: socket.socket) -> None:
         """Adopt ``sock`` as the live connection: fresh framer, fresh
@@ -242,6 +273,7 @@ class LaneTransport:
             self._bytes_prior += old.bytes_sent
         else:
             self._bytes_prior = 0
+        self._teardown_shm()            # a reconnect renegotiates the ring
         with self._state_lock:
             self._gen += 1
             gen = self._gen
@@ -249,18 +281,93 @@ class LaneTransport:
             self._credits = gate
             self._conn_lost = None
         fs.send_frame(T_HELLO, self.stream_id.encode("utf-8"))
+        # the ack event gates the first post-HELLO frame: the receiver
+        # always answers an offer (accept or decline), so waiting for it
+        # makes the carrier deterministic even for one-message streams —
+        # conn loss and wait timeout also release it (TCP always works)
+        self._shm_ack_evt = threading.Event()
+        if not (self._shm_wanted and self._offer_shm(fs)):
+            self._shm_ack_evt.set()
         self._reader = threading.Thread(
             target=self._read_loop, args=(fs, gate, gen),
             name=f"transport-rx-{self.stream_id or id(self)}", daemon=True)
         self._reader.start()
 
+    def _teardown_shm(self) -> None:
+        """Drop every shm artifact of the previous connection: active and
+        pending rings (receiver owns/unlinks the segments) plus our probe
+        if the peer never consumed it."""
+        with self._state_lock:
+            ring, self._ring = self._ring, None
+            pending, self._pending_ring = self._pending_ring, None
+            probe, self._probe = self._probe, None
+        self._frame_target = self.FRAME_BYTES_TARGET
+        for r in (ring, pending):
+            if r is not None:
+                r.close(unlink=False)
+        if probe is not None:
+            unlink_segment(probe)
+
+    def _offer_shm(self, fs: FrameSocket) -> bool:
+        """Propose the same-host upgrade: write a random token into a
+        probe segment and name it (plus our boot id) in a SHM_OFFER.  Any
+        local shm trouble silently skips the offer — TCP always works."""
+        if not shm_available():
+            return False
+        token = os.urandom(16)
+        try:
+            probe = write_segment(new_prefix("q"), token)
+        except OSError:
+            return False
+        self._probe = probe
+        fs.send_frame(T_SHM_OFFER, serialize([
+            boot_id().encode("utf-8"), probe.name.encode("utf-8"), token]))
+        return True
+
+    def _on_shm_ack(self, body, gen: int) -> None:
+        """(Reader thread.)  The peer answered our offer: attach the ring
+        it named and stage it; the *sending* side performs the actual
+        switch at the next frame boundary so total order is preserved."""
+        probe, self._probe = self._probe, None
+        if probe is not None:           # peer normally unlinks it; be sure
+            unlink_segment(probe)
+        try:
+            names = deserialize(bytes(body))
+        except Exception:
+            return
+        if not names or not names[0]:
+            return                      # declined: stay on TCP
+        try:
+            ring = ShmRing.attach(names[0].decode("utf-8"),
+                                  chaos_key=self.stream_id)
+        except (WireError, OSError):
+            return
+        with self._state_lock:
+            if gen != self._gen or self._closed:
+                ring.close(unlink=False)
+                return
+            self._pending_ring = ring
+
+    def _on_shm_ack_done(self, gen: int) -> None:
+        with self._state_lock:
+            if gen == self._gen:
+                self._shm_ack_evt.set()
+
     @property
     def bytes_sent(self) -> int:
-        return self._bytes_prior + self._fs.bytes_sent
+        ring = self._ring
+        return (self._bytes_prior + self._fs.bytes_sent
+                + (ring.bytes_sent if ring is not None else 0))
 
     @property
     def credit_stalls(self) -> int:
         return self._credits.stalls
+
+    @property
+    def carrier(self) -> str:
+        """What DATA frames currently ride: ``"shm"`` once switched,
+        else ``"wire"``."""
+        return "shm" if self._ring is not None else "wire"
 
     # -- receive side (reader thread) --------------------------------------
 
@@ -289,6 +396,11 @@ class LaneTransport:
                             "transport has no shared secret")
                     fs.send_frame(
                         T_AUTH, _auth_mac(self._secret, body, self.stream_id))
+                elif ftype == T_SHM_ACK:
+                    try:
+                        self._on_shm_ack(body, gen)
+                    finally:
+                        self._on_shm_ack_done(gen)
         except (WireError, OSError) as e:
             err = e
         finally:
@@ -300,6 +412,7 @@ class LaneTransport:
             # from acquire, drain waiters re-check the loss and reconnect
             gate.abort(err)
             if not stale:
+                self._shm_ack_evt.set()     # never gate sends on a dead conn
                 with self._ack_cond:
                     self._ack_cond.notify_all()
 
@@ -361,6 +474,39 @@ class LaneTransport:
                 self._error = err
         raise err
 
+    def _send_frame(self, ftype: int, body: bytes = b"") -> None:
+        """(Holding ``_send_lock``.)  Emit one sender->receiver frame on
+        the active carrier.  A staged ring becomes active *here*: the
+        SHM_SWITCH marker is the last TCP frame in this direction, so the
+        receiver observes one totally-ordered frame sequence across the
+        carrier change.  Raises ``OSError`` on either carrier's death —
+        the caller's reconnect handling is carrier-agnostic."""
+        ring = self._ring
+        if ring is None:
+            if not self._shm_ack_evt.is_set():
+                # an offer is outstanding: give the answer a moment so
+                # even a one-frame stream gets its negotiated carrier
+                self._shm_ack_evt.wait(min(self._timeout, 5.0))
+                self._shm_ack_evt.set()
+            with self._state_lock:
+                pending, self._pending_ring = self._pending_ring, None
+            if pending is not None:
+                try:
+                    self._fs.send_frame(T_SHM_SWITCH)
+                except OSError:
+                    pending.close(unlink=False)
+                    raise
+                self._ring = ring = pending
+                # ring frames must fit max_frame; shrink the flush cut so
+                # a one-message overshoot still has headroom
+                self._frame_target = min(self.FRAME_BYTES_TARGET,
+                                         ring.max_frame // 2)
+                self.shm_switches += 1
+        if ring is not None:
+            ring.send_frame(ftype, body, timeout=self._timeout)
+        else:
+            self._fs.send_frame(ftype, body)
+
     def _resend_history_locked(self) -> None:
         """Replay every previously-sent message on the fresh connection
         (credit-gated).  The receiver's snapshot sink needs the complete
@@ -372,7 +518,7 @@ class LaneTransport:
             n = self._credits.acquire_up_to(min(left, self._flush_batch),
                                             self._timeout)
             batch = self._history[pos:pos + n]
-            self._fs.send_frame(T_DATA, encode_data(batch))
+            self._send_frame(T_DATA, encode_data(batch))
             self.frames_sent += 1
             pos += n
 
@@ -406,7 +552,7 @@ class LaneTransport:
             size = 0
             for i in range(n):          # byte-bound the frame as well
                 size += len(self._buffer[i].data)
-                if size >= self.FRAME_BYTES_TARGET:
+                if size >= self._frame_target:
                     unused = n - (i + 1)
                     if unused:          # return the credits we won't use
                         self._credits.grant(unused)
@@ -418,7 +564,7 @@ class LaneTransport:
                 # wire the reconnect resend already covers this batch
                 self._history.extend(batch)
             try:
-                self._fs.send_frame(T_DATA, encode_data(batch))
+                self._send_frame(T_DATA, encode_data(batch))
             except OSError as e:
                 if self._history is not None:
                     self._note_conn_lost(e)
@@ -446,7 +592,7 @@ class LaneTransport:
             with self._send_lock:
                 self._flush_locked()
                 try:
-                    self._fs.send_frame(T_DRAIN, encode_u32(token))
+                    self._send_frame(T_DRAIN, encode_u32(token))
                 except OSError as e:
                     if self._history is not None \
                             and retries <= self._reconnect_attempts:
@@ -496,13 +642,17 @@ class LaneTransport:
                     self._flush_locked()
                 with self._state_lock:
                     self._closed = True
-                self._fs.send_frame(T_CLOSE)
+                self._send_frame(T_CLOSE)
         except (TransportError, OSError):
             pass
         finally:
             self._closed = True
+        ring = self._ring
+        if ring is not None:
+            ring.close_write()          # reader drains, then clean EOF
         self._fs.close()
         self._reader.join(timeout=5.0)
+        self._teardown_shm()
 
 
 class RemoteBus:
@@ -533,7 +683,8 @@ class RemoteBus:
     def __init__(self, bus=None, sink: Optional[Callable[[str, list[Message]],
                                                          None]] = None,
                  host: str = "127.0.0.1", port: int = 0, window: int = 256,
-                 secret: "str | bytes | None" = None):
+                 secret: "str | bytes | None" = None, shm: bool = True,
+                 shm_ring_bytes: int = RING_BYTES):
         if bus is None and sink is None:
             raise ValueError("RemoteBus needs a bus and/or a sink")
         if window < 1:
@@ -544,15 +695,21 @@ class RemoteBus:
         self._port = port
         self._window = window
         self._secret = _as_secret(secret)
+        self._shm = shm
+        self._shm_ring_bytes = shm_ring_bytes
         self._listener: Optional[socket.socket] = None
         self._accept_thread: Optional[threading.Thread] = None
         self._conns: list[FrameSocket] = []
         self._threads: list[threading.Thread] = []
+        self._rings: list[ShmRing] = []        # live, receiver-owned
         self._lock = threading.Lock()
         self._stopped = False
         self._delivered: dict[str, int] = {}   # per named stream, bus-mode
+        #: per named stream: what its DATA frames last rode ("wire"/"shm")
+        self.stream_carriers: dict[str, str] = {}
         self.messages_received = 0
         self.frames_received = 0
+        self.shm_streams = 0
         self.auth_failures = 0
         self.errors: list[BaseException] = []
 
@@ -600,6 +757,12 @@ class RemoteBus:
             t.join(timeout=5.0)
         if self._accept_thread is not None:
             self._accept_thread.join(timeout=5.0)
+        # handlers unlink their rings on exit; reap any a wedged handler
+        # (join timeout above) left behind — stop() must never leak shm
+        with self._lock:
+            rings, self._rings = self._rings, []
+        for r in rings:
+            r.close(unlink=True)
 
     def __enter__(self) -> "RemoteBus":
         self.start()
@@ -643,25 +806,82 @@ class RemoteBus:
             return
         fs.send_frame(T_CREDIT, encode_u32(n))
 
-    def _authenticate(self, fs: FrameSocket, stream_id: str) -> bool:
-        """Challenge the fresh connection; ``True`` iff it may proceed."""
+    def _authenticate(self, fs: FrameSocket,
+                      stream_id: str) -> tuple[bool, Optional[bytes]]:
+        """Challenge the fresh connection; ``(ok, stashed_offer)``.  The
+        sender fires its SHM_OFFER right after HELLO — before it can see
+        our challenge — so an offer arriving while we await AUTH is
+        stashed and processed after a *successful* handshake (an
+        unauthenticated peer gets no ring, same as no credit)."""
         if self._secret is None:
-            return True
+            return True, None
         nonce = os.urandom(16)
         fs.send_frame(T_CHALLENGE, nonce)
-        ftype, body = fs.recv_frame()
+        offer: Optional[bytes] = None
+        while True:
+            ftype, body = fs.recv_frame()
+            if ftype == T_SHM_OFFER and offer is None:
+                offer = bytes(body)
+                continue
+            break
         if ftype != T_AUTH or not hmac.compare_digest(
                 bytes(body), _auth_mac(self._secret, nonce, stream_id)):
             self.auth_failures += 1
             self.errors.append(WireError(
                 f"authentication failed for stream {stream_id!r}"))
-            return False
-        return True
+            return False, None
+        return True, offer
+
+    def _shm_accept(self, fs: FrameSocket, stream_id: str,
+                    body) -> Optional[ShmRing]:
+        """Answer a SHM_OFFER.  Accept only with same-host *proof* — the
+        peer's boot id equals ours and its probe segment is attachable
+        with the advertised token inside — then create the ring, register
+        it for reaping, and SHM_ACK its name.  Every failure path ACKs a
+        decline: the stream just stays on TCP."""
+        ring: Optional[ShmRing] = None
+        try:
+            if self._shm and shm_available():
+                peer_boot, probe_name, token = deserialize(bytes(body))[:3]
+                local = boot_id()
+                if local and peer_boot.decode("utf-8") == local:
+                    probe = SegmentHandle(probe_name.decode("utf-8"), 0,
+                                          len(token))
+                    if read_segment(probe, unlink=True) == token:
+                        ring = ShmRing.create(
+                            new_prefix("r"), capacity=self._shm_ring_bytes,
+                            chaos_key=stream_id)
+        except (WireError, OSError, ValueError, IndexError):
+            ring = None
+        if ring is not None:
+            with self._lock:
+                if self._stopped:
+                    ring.close(unlink=True)
+                    ring = None
+                else:
+                    self._rings.append(ring)
+        try:
+            fs.send_frame(T_SHM_ACK, serialize(
+                [ring.name.encode("utf-8")] if ring is not None else []))
+        except OSError:
+            self._drop_ring(ring)
+            raise
+        return ring
+
+    def _drop_ring(self, ring: Optional[ShmRing]) -> None:
+        if ring is None:
+            return
+        with self._lock:
+            if ring in self._rings:
+                self._rings.remove(ring)
+        ring.close(unlink=True)
 
     def _handle(self, fs: FrameSocket) -> None:
         stream_id = ""
         stream: list[Message] = []
         seen = 0                 # messages received on THIS connection
+        ring: Optional[ShmRing] = None          # active shm carrier
+        staged: Optional[ShmRing] = None        # ack'd, awaiting SWITCH
         try:
             ftype, body = fs.recv_frame()
             if ftype is None:
@@ -670,17 +890,35 @@ class RemoteBus:
                 raise WireError(f"expected HELLO, got frame type {ftype}")
             stream_id = body.decode("utf-8")
             fs.chaos_key = stream_id or fs.chaos_key
-            if not self._authenticate(fs, stream_id):
+            ok, offer = self._authenticate(fs, stream_id)
+            if not ok:
                 return          # finally: closes before any DATA/credit
             with self._lock:
                 already = self._delivered.get(stream_id, 0) \
                     if stream_id else 0
+                if stream_id:
+                    self.stream_carriers[stream_id] = "wire"
             self._grant(fs, stream_id, self._window)
+            if offer is not None:
+                staged = self._shm_accept(fs, stream_id, offer)
             while True:
-                ftype, body = fs.recv_frame()
+                if ring is not None:
+                    ftype, body = ring.recv_frame(eof_check=fs.eof_seen)
+                else:
+                    ftype, body = fs.recv_frame()
                 if ftype is None or ftype == T_CLOSE:
                     return
-                if ftype == T_DATA:
+                if ftype == T_SHM_OFFER:
+                    staged = self._shm_accept(fs, stream_id, body)
+                elif ftype == T_SHM_SWITCH:
+                    if staged is None:
+                        raise WireError("SHM_SWITCH without an ack'd ring")
+                    ring, staged = staged, None
+                    self.shm_streams += 1
+                    with self._lock:
+                        if stream_id:
+                            self.stream_carriers[stream_id] = "shm"
+                elif ftype == T_DATA:
                     msgs = decode_data(body)
                     self.frames_received += 1
                     self.messages_received += len(msgs)
@@ -727,3 +965,5 @@ class RemoteBus:
             self.errors.append(e)
         finally:
             fs.close()
+            self._drop_ring(ring)
+            self._drop_ring(staged)

@@ -51,6 +51,25 @@ Frame types (the whole protocol):
 ``AUTH``       sender -> receiver: ``HMAC-SHA256(secret, nonce +
                stream_id)``.  A wrong or missing answer closes the
                connection before a single DATA frame is accepted.
+``SHM_OFFER``  sender -> receiver, right after ``HELLO``: proposes the
+               same-host shm fast path.  Body is ``binpipe.serialize``
+               of ``[boot_id, probe_segment_name, probe_token]`` — the
+               receiver accepts only if the boot id matches its own
+               *and* it can attach the probe segment and read back the
+               token (proof both ends share one shm namespace, not
+               just one kernel image behind NAT).
+``SHM_ACK``    receiver -> sender: ``serialize([ring_name])`` naming a
+               freshly created SPSC ring segment, or ``serialize([])``
+               to decline (different host, shm unavailable, ring
+               creation failed, or shm disabled).  Declining keeps the
+               stream on TCP — the fallback is always correct.
+``SHM_SWITCH`` sender -> receiver, over TCP: the *last* TCP frame in
+               the sender->receiver direction.  Every subsequent
+               sender frame (DATA, DRAIN, CLOSE) rides the shm ring,
+               preserving total order across the switch; CREDIT /
+               DRAIN_ACK / CHALLENGE keep flowing receiver -> sender
+               over TCP, which doubles as the liveness channel for the
+               ring reader.
 
 Credits are counted in *messages*, not frames, so a sender low on credit
 can still make progress with a smaller DATA batch (adaptive framing under
@@ -60,6 +79,7 @@ batch size.
 
 from __future__ import annotations
 
+import select
 import socket
 import struct
 import threading
@@ -87,6 +107,9 @@ T_DRAIN_ACK = 4
 T_CLOSE = 5
 T_CHALLENGE = 6
 T_AUTH = 7
+T_SHM_OFFER = 8
+T_SHM_ACK = 9
+T_SHM_SWITCH = 10
 
 #: refuse to allocate for frames beyond this — a corrupt length prefix must
 #: fail loudly, not OOM the process
@@ -136,8 +159,10 @@ def decode_data(body: bytes) -> list[Message]:
     (n,) = _U32.unpack_from(body, 0)
     (head_len,) = _U32.unpack_from(body, 4)
     pos = 8
+    # bytes() so a zero-copy body (a memoryview into the shm ring) works:
+    # deserialize slices its input, and only bytes slices can .decode()
     topics = [t.decode("utf-8")
-              for t in deserialize(body[pos:pos + head_len])]
+              for t in deserialize(bytes(body[pos:pos + head_len]))]
     pos += head_len
     idx = np.frombuffer(body, np.uint32, n, pos).tolist()
     pos += 4 * n
@@ -333,6 +358,20 @@ class FrameSocket:
                             f"{body_len} bytes: corrupt on the wire")
         self.bytes_received += _FRAME_HDR.size + body_len + _U32.size
         return ftype, body
+
+    def eof_seen(self) -> bool:
+        """Non-blocking liveness poll: has the peer closed (or reset)
+        this socket?  After a shm SWITCH the sender goes silent on TCP,
+        so a readable socket that peeks zero bytes *is* EOF — the ring
+        reader polls this to unblock when the peer dies without setting
+        the ring's closed flag."""
+        try:
+            r, _, _ = select.select([self._sock], [], [], 0)
+            if not r:
+                return False
+            return not self._sock.recv(1, socket.MSG_PEEK)
+        except (OSError, ValueError):
+            return True
 
     def close(self) -> None:
         # shutdown() first: close() alone does not wake a thread blocked

@@ -1,0 +1,39 @@
+"""Same-host zero-copy data plane (ARCHITECTURE.md §11).
+
+Two layers share this package:
+
+* :mod:`repro.shm.segments` — the ref-counted shared-memory segment
+  pool behind ``ProcessBackend`` arg/result spill (blobs above
+  ``spill_bytes`` ride ``/dev/shm`` segments instead of temp files,
+  with a temp-file fallback when shm is unavailable).
+* :mod:`repro.shm.ring` — the SPSC frame ring the net layer switches
+  DATA traffic onto after a successful same-host HELLO negotiation.
+
+Only the segment API is re-exported here: ``repro.core`` imports this
+package, and the ring pulls in the wire codec, so it is imported
+lazily by ``repro.net.transport`` instead.
+"""
+
+from repro.shm.segments import (  # noqa: F401
+    SHM_PREFIX_BASE,
+    MappedSegment,
+    SegmentError,
+    SegmentHandle,
+    SegmentPool,
+    attach_segment,
+    leaked_segments,
+    map_segment,
+    new_prefix,
+    read_segment,
+    shm_available,
+    sweep_segments,
+    unlink_segment,
+    write_segment,
+)
+
+__all__ = [
+    "SHM_PREFIX_BASE", "MappedSegment", "SegmentError", "SegmentHandle",
+    "SegmentPool", "attach_segment", "leaked_segments", "map_segment",
+    "new_prefix", "read_segment", "shm_available", "sweep_segments",
+    "unlink_segment", "write_segment",
+]

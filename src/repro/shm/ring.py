@@ -1,0 +1,394 @@
+"""Single-producer / single-consumer shared-memory frame ring.
+
+The same-host fast path of the net layer: once a ``LaneTransport`` /
+``RemoteBus`` pair has proven (boot-id + probe segment, see
+``net/transport.py``) that both ends share one shm namespace, every
+sender->receiver frame rides this ring instead of the loopback TCP
+socket — same frame grammar as :class:`repro.net.wire.FrameSocket`
+(``[u32 body_len][u8 type][body][u32 crc]``, CRC trailer over
+type + body), so corruption detection, DRAIN barriers and CLOSE
+semantics carry over unchanged, minus the syscall + kernel copy per
+frame.
+
+Layout (one shm segment)::
+
+    [8s magic "RPRORING"][u32 version][u32 generation][u64 capacity]
+    [u64 head][u64 tail][u32 closed][pad -> 64]
+    [data region: ``capacity`` bytes]
+
+``head``/``tail`` are *monotonic* byte counters (never wrapped), each
+written by exactly one side: the writer owns ``head`` and the
+``closed`` flag, the reader owns ``tail``.  8-byte-aligned
+``struct.pack_into`` stores on a shared mmap are single stores under
+CPython's GIL, which is all the atomicity an SPSC ring needs on one
+host.
+
+**Frames never wrap.**  A frame that would cross the wrap boundary is
+preceded by a skip: the writer stamps a ``0xFFFFFFFF`` marker (an
+impossible ``body_len`` — it exceeds ``MAX_FRAME_BYTES``) at the write
+offset and advances to offset 0; when fewer than 4 contiguous bytes
+remain, both sides skip them implicitly.  Non-wrapping frames are what
+make the zero-copy read possible: ``recv_frame`` returns the body as a
+:class:`memoryview` *into the ring* — ``frame_to_batch`` /
+``decode_data`` consume it without a copy — valid until the next
+``recv_frame`` call, which releases it and only then advances ``tail``
+(the writer cannot overwrite a frame the reader still holds).
+
+To guarantee progress, one frame may use at most half the data region
+(``max_frame``); the transport layer bounds its flush batches to fit.
+
+The chaos ``wire_corrupt`` seam is honored exactly like the TCP path:
+``bitflip`` damages one bit past the length prefix (framing survives,
+the CRC trailer catches it at the reader), ``truncate`` publishes a
+frame prefix and closes the ring (the reader dies mid-frame with a
+:class:`~repro.net.wire.WireError`, never hangs).
+"""
+
+from __future__ import annotations
+
+import struct
+import time
+from multiprocessing import shared_memory
+from typing import Callable, Optional, Tuple
+
+from repro import chaos
+from repro.net.wire import MAX_FRAME_BYTES, WireError, frame_crc
+from repro.shm.segments import _shm_unlink, _untrack, new_prefix
+
+__all__ = ["ShmRing", "RING_BYTES", "boot_id"]
+
+_MAGIC = b"RPRORING"
+_VERSION = 1
+_STATIC = struct.Struct("<8sIIQ")       # magic, version, generation, capacity
+_U32 = struct.Struct("<I")
+_U64 = struct.Struct("<Q")
+_FRAME_HDR = struct.Struct("<IB")       # body_len, ftype — the wire grammar
+_HEAD_OFF = 24
+_TAIL_OFF = 32
+_CLOSED_OFF = 40
+DATA_OFF = 64
+_SKIP = 0xFFFFFFFF                      # impossible body_len: wrap marker
+
+#: default data-region size; creation failure (tiny /dev/shm) simply
+#: declines the shm fast path and the stream stays on TCP
+RING_BYTES = 32 << 20
+
+_SPIN = 200                             # cooperative yields before sleeping
+_IDLE_SLEEP = 0.0002
+_EOF_CHECK_PERIOD = 0.005
+
+
+def boot_id() -> str:
+    """Kernel boot id: equal on both ends only if they share a host
+    (first gate of the same-host negotiation)."""
+    try:
+        with open("/proc/sys/kernel/random/boot_id") as fh:
+            return fh.read().strip()
+    except OSError:
+        return ""
+
+
+class ShmRing:
+    """One direction of a negotiated same-host stream.
+
+    Exactly one process calls ``send_frame`` and one calls
+    ``recv_frame``; the creator (the receiving ``RemoteBus`` handler)
+    owns the segment and unlinks it.
+    """
+
+    def __init__(self, seg: shared_memory.SharedMemory, capacity: int,
+                 owner: bool, chaos_key: str = ""):
+        self._seg = seg
+        self._buf = seg.buf                     # skip the property per access
+        self.capacity = capacity
+        self.owner = owner
+        self.chaos_key = chaos_key
+        self.max_frame = capacity // 2 - 16
+        self._head = self._load(_HEAD_OFF)      # writer-local cache
+        self._tail = self._load(_TAIL_OFF)      # reader-local cache
+        self._pending = 0                       # bytes held by the last view
+        self._pending_view: Optional[memoryview] = None
+        self._local_closed = False
+        self.frames_sent = 0
+        self.bytes_sent = 0
+        self.frames_received = 0
+        self.bytes_received = 0
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def create(cls, prefix: Optional[str] = None,
+               capacity: int = RING_BYTES, generation: int = 0,
+               chaos_key: str = "") -> "ShmRing":
+        name = (prefix or new_prefix("r")) + "ring"
+        seg = shared_memory.SharedMemory(name=name, create=True,
+                                         size=DATA_OFF + capacity)
+        _untrack(seg)
+        _STATIC.pack_into(seg.buf, 0, _MAGIC, _VERSION,
+                          generation & 0xFFFFFFFF, capacity)
+        _U64.pack_into(seg.buf, _HEAD_OFF, 0)
+        _U64.pack_into(seg.buf, _TAIL_OFF, 0)
+        _U32.pack_into(seg.buf, _CLOSED_OFF, 0)
+        return cls(seg, capacity, owner=True, chaos_key=chaos_key)
+
+    @classmethod
+    def attach(cls, name: str, chaos_key: str = "") -> "ShmRing":
+        seg = shared_memory.SharedMemory(name=name)
+        _untrack(seg)
+        magic, version, _gen, capacity = _STATIC.unpack_from(seg.buf, 0)
+        if magic != _MAGIC or version != _VERSION:
+            seg.close()
+            raise WireError(f"shm segment {name!r} is not a v{_VERSION} "
+                            f"ring (magic={magic!r})")
+        return cls(seg, capacity, owner=False, chaos_key=chaos_key)
+
+    @property
+    def name(self) -> str:
+        return self._seg.name
+
+    # -- shared-counter access ----------------------------------------------
+
+    def _load(self, off: int) -> int:
+        return _U64.unpack_from(self._seg.buf, off)[0]
+
+    def _publish_head(self) -> None:
+        _U64.pack_into(self._seg.buf, _HEAD_OFF, self._head)
+
+    def _publish_tail(self) -> None:
+        _U64.pack_into(self._seg.buf, _TAIL_OFF, self._tail)
+
+    def _closed(self) -> bool:
+        return _U32.unpack_from(self._seg.buf, _CLOSED_OFF)[0] != 0
+
+    # -- writer side --------------------------------------------------------
+
+    def send_frame(self, ftype: int, body=b"",
+                   timeout: Optional[float] = 30.0) -> None:
+        """Publish one frame; blocks while the ring is full.  Raises
+        ``OSError`` if the ring is closed or the reader stops draining
+        (the transport's reconnect path treats it like a dead socket).
+
+        Unlike the socket path there is no joined frame allocation:
+        header, body and CRC trailer are placed straight into the ring
+        region (the chaos seam still materialises full frame bytes — it
+        has to damage them)."""
+        if not isinstance(body, (bytes, bytearray, memoryview)):
+            body = bytes(body)
+        plan = chaos.active_plan()
+        if plan is not None:
+            fault = plan.probe("wire_corrupt", self.chaos_key)
+            if fault is not None:
+                body = bytes(body)
+                frame = b"".join((_FRAME_HDR.pack(len(body), ftype), body,
+                                  _U32.pack(frame_crc(ftype, body))))
+                self._send_tampered(frame, fault, plan, timeout)
+                return
+        body_len = len(body)
+        need = _FRAME_HDR.size + body_len + _U32.size
+        w = self._reserve(need, timeout)
+        buf = self._buf
+        base = DATA_OFF + w
+        _FRAME_HDR.pack_into(buf, base, body_len, ftype)
+        payload_off = base + _FRAME_HDR.size
+        if body_len:
+            buf[payload_off:payload_off + body_len] = body
+        _U32.pack_into(buf, payload_off + body_len, frame_crc(ftype, body))
+        self._head += need
+        _U64.pack_into(buf, _HEAD_OFF, self._head)
+        self.frames_sent += 1
+        self.bytes_sent += need
+
+    def _send_tampered(self, frame: bytes, fault, plan,
+                       timeout: Optional[float]) -> None:
+        """Mirror of ``FrameSocket._send_tampered`` on the ring:
+        ``truncate`` publishes a prefix then closes the ring (the peer
+        errors mid-frame), default ``bitflip`` flips one bit past the
+        length prefix so the CRC trailer catches it."""
+        rng = plan.rng("wire_corrupt", self.chaos_key)
+        if getattr(fault, "mode", None) == "truncate":
+            keep = rng.randrange(1, len(frame))
+            try:
+                self._write(frame[:keep], timeout, allow_partial=True)
+            except OSError:
+                pass
+            self.close_write()
+        else:
+            dmg = bytearray(frame)
+            pos = rng.randrange(_U32.size, len(dmg))
+            dmg[pos] ^= 1 << rng.randrange(8)
+            self._write(bytes(dmg), timeout)
+
+    def _reserve(self, need: int, timeout: Optional[float],
+                 allow_partial: bool = False) -> int:
+        """Wait for ``need`` contiguous bytes (inserting a wrap skip when
+        required) and return the write offset; the caller places the
+        frame and publishes ``head``."""
+        if need > self.max_frame and not allow_partial:
+            raise WireError(
+                f"frame of {need} bytes exceeds the shm ring's max_frame "
+                f"({self.max_frame}); bound flush batches below it")
+        buf = self._buf
+        if self._local_closed or buf[_CLOSED_OFF]:
+            raise OSError("shm ring is closed")
+        cap = self.capacity
+        w = self._head % cap
+        cont = cap - w
+        pad = cont if need > cont else 0
+        deadline = None if timeout is None else time.monotonic() + timeout
+        spins = 0
+        unpack_u64 = _U64.unpack_from
+        while cap - (self._head - unpack_u64(buf, _TAIL_OFF)[0]) < pad + need:
+            if self._local_closed:
+                raise OSError("shm ring is closed")
+            if deadline is not None and time.monotonic() > deadline:
+                raise OSError(
+                    f"shm ring send timed out after {timeout}s: reader "
+                    f"is not draining")
+            spins += 1
+            time.sleep(0 if spins < _SPIN else _IDLE_SLEEP)
+        if pad:
+            if cont >= _U32.size:
+                _U32.pack_into(buf, DATA_OFF + w, _SKIP)
+            # fewer than 4 contiguous bytes: both sides skip implicitly
+            self._head += pad
+            w = 0
+        return w
+
+    def _write(self, frame: bytes, timeout: Optional[float],
+               allow_partial: bool = False) -> None:
+        """Place pre-built frame bytes (the chaos tamper path)."""
+        need = len(frame)
+        w = self._reserve(need, timeout, allow_partial)
+        buf = self._buf
+        buf[DATA_OFF + w:DATA_OFF + w + need] = frame
+        self._head += need
+        _U64.pack_into(buf, _HEAD_OFF, self._head)
+
+    def close_write(self) -> None:
+        """Orderly writer shutdown: the reader drains what was published,
+        then sees clean EOF (``(None, b'')``)."""
+        self._local_closed = True
+        if self._seg is None:
+            return
+        try:
+            _U32.pack_into(self._seg.buf, _CLOSED_OFF, 1)
+        except (ValueError, OSError):
+            pass                        # already unmapped by the owner
+
+    # -- reader side --------------------------------------------------------
+
+    def recv_frame(self, eof_check: Optional[Callable[[], bool]] = None,
+                   timeout: Optional[float] = None
+                   ) -> Tuple[Optional[int], memoryview]:
+        """Next frame as ``(ftype, body-view)``; the view aliases the
+        ring and is valid until the next ``recv_frame``/``close`` call.
+        Clean writer close between frames returns ``(None, b"")``; a
+        writer gone mid-frame raises :class:`WireError`.  ``eof_check``
+        is polled while idle so a dead TCP control channel unblocks the
+        reader even if the writer never set the closed flag."""
+        buf = self._buf
+        view = self._pending_view
+        if view is not None:            # retire the previous frame's view
+            try:
+                view.release()
+            except BufferError:
+                pass                    # caller still exports it; its bytes
+            self._pending_view = None   # are stale after this point anyway
+        if self._pending:
+            self._tail += self._pending
+            self._pending = 0
+            _U64.pack_into(buf, _TAIL_OFF, self._tail)
+        cap = self.capacity
+        unpack_u64 = _U64.unpack_from
+        unpack_u32 = _U32.unpack_from
+        hdr_size = _FRAME_HDR.size
+        deadline = None if timeout is None else time.monotonic() + timeout
+        spins = 0
+        last_eof_check = 0.0
+        while True:
+            (head,) = unpack_u64(buf, _HEAD_OFF)
+            avail = head - self._tail
+            if avail:
+                r = self._tail % cap
+                cont = cap - r
+                if cont < 4:
+                    self._tail += cont          # implicit skip
+                    _U64.pack_into(buf, _TAIL_OFF, self._tail)
+                    continue
+                (first,) = unpack_u32(buf, DATA_OFF + r)
+                if first == _SKIP:
+                    if avail >= cont:           # marker published with frame
+                        self._tail += cont
+                        _U64.pack_into(buf, _TAIL_OFF, self._tail)
+                        continue
+                elif first > MAX_FRAME_BYTES:
+                    raise WireError(f"shm ring advertises a {first}-byte "
+                                    f"frame beyond MAX_FRAME_BYTES "
+                                    f"({MAX_FRAME_BYTES})")
+                elif avail >= hdr_size:
+                    body_len = first
+                    need = hdr_size + body_len + 4
+                    if avail >= need:
+                        ftype = buf[DATA_OFF + r + 4]
+                        start = DATA_OFF + r + hdr_size
+                        body = buf[start:start + body_len]
+                        (crc,) = unpack_u32(buf, start + body_len)
+                        if crc != frame_crc(ftype, body):
+                            body.release()
+                            raise WireError(
+                                f"CRC mismatch on a type-{ftype} frame of "
+                                f"{body_len} bytes: corrupt on the ring")
+                        self._pending = need
+                        self._pending_view = body
+                        self.frames_received += 1
+                        self.bytes_received += need
+                        return ftype, body
+            # no complete frame yet: closed flag, dead peer, then wait
+            if buf[_CLOSED_OFF]:
+                if self._load(_HEAD_OFF) == self._tail:
+                    return None, b""
+                if self._load(_HEAD_OFF) == head:
+                    raise WireError("shm ring writer closed mid-frame")
+                continue                        # more arrived; reparse
+            now = time.monotonic()
+            if (eof_check is not None
+                    and now - last_eof_check >= _EOF_CHECK_PERIOD):
+                last_eof_check = now
+                if eof_check():
+                    if self._load(_HEAD_OFF) == self._tail:
+                        return None, b""
+                    if self._load(_HEAD_OFF) == head:
+                        raise WireError(
+                            "shm ring writer died mid-frame (control "
+                            "channel EOF)")
+                    continue
+            if deadline is not None and now > deadline:
+                raise WireError(f"shm ring recv timed out after {timeout}s")
+            spins += 1
+            time.sleep(0 if spins < _SPIN else _IDLE_SLEEP)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def close(self, unlink: Optional[bool] = None) -> None:
+        """Detach (and unlink when owner).  Idempotent."""
+        if self._seg is None:
+            return
+        if self._pending_view is not None:
+            try:
+                self._pending_view.release()
+            except BufferError:
+                pass
+            self._pending_view = None
+        seg, self._seg = self._seg, None
+        try:
+            seg.close()
+        except BufferError:             # a caller still exports ring memory;
+            pass                        # leak the mapping, not the segment
+        if unlink if unlink is not None else self.owner:
+            _shm_unlink(seg.name)
+
+    def __del__(self):  # pragma: no cover - backstop only
+        try:
+            self.close(unlink=False)
+        except Exception:
+            pass

@@ -1,0 +1,483 @@
+"""Shared-memory segment pool: the same-host zero-copy spill carrier.
+
+``ProcessBackend`` arg/result spill historically rode temp files — two
+full kernel copies (write-out, read-back) plus filesystem metadata per
+blob.  This module replaces that with POSIX shared memory
+(``multiprocessing.shared_memory``): a blob is one memcpy into a
+``/dev/shm`` segment on the producing side and a zero-syscall view on
+the consuming side.
+
+Layout of every segment::
+
+    [8s magic "RPROSEG\\0"][u32 version][u32 generation][u64 payload_len]
+    [payload ...]
+
+The 24-byte header makes a segment self-describing: an attacher
+validates magic + generation + length before trusting a byte, so a
+stale :class:`SegmentHandle` (a name reused after release by an
+unrelated writer) or a half-written segment fails loudly instead of
+feeding garbage downstream — the same fail-at-the-boundary contract as
+the wire CRC trailer.
+
+Ownership model:
+
+* The **driver** owns a :class:`SegmentPool`: it creates arg-spill
+  segments (``put``), adopts worker-created result segments into its
+  registry, ref-counts multi-consumer handles, and unlinks at zero.
+* **Workers** use the stateless helpers (:func:`write_segment` /
+  :func:`read_segment`): a worker never unlinks what the driver may
+  still need.
+* Every name this process family creates starts with a per-pool prefix
+  under :data:`SHM_PREFIX_BASE`, so crash-safe reaping is a prefix
+  sweep of ``/dev/shm`` — a worker that died mid-transfer (the chaos
+  ``worker_crash`` seam) cannot leak segments past
+  ``SegmentPool.shutdown()``, and test sessions can assert
+  :func:`leaked_segments` is empty.
+
+Python 3.10 pitfall handled here once: ``SharedMemory`` registers every
+segment — attach *and* create — with ``multiprocessing.resource_tracker``,
+which both spams "leaked shared_memory" warnings at exit and may unlink
+segments the driver still owns when a worker exits.  ``_untrack``
+deregisters after every open; lifecycle is managed explicitly by this
+module instead.
+"""
+
+from __future__ import annotations
+
+import errno
+import os
+import secrets
+import struct
+import threading
+from dataclasses import dataclass
+from multiprocessing import shared_memory
+from typing import Dict, List, Optional, Union
+
+__all__ = [
+    "SHM_PREFIX_BASE", "SegmentError", "SegmentHandle", "MappedSegment",
+    "SegmentPool", "shm_available", "new_prefix", "write_segment",
+    "read_segment", "map_segment", "attach_segment", "unlink_segment",
+    "leaked_segments", "sweep_segments",
+]
+
+#: every segment name this codebase creates starts with this, so a
+#: directory sweep can tell ours from the rest of the machine's
+SHM_PREFIX_BASE = "reproshm-"
+
+_MAGIC = b"RPROSEG\x00"
+_VERSION = 1
+_HEADER = struct.Struct("<8sIIQ")          # magic, version, generation, len
+HEADER_BYTES = _HEADER.size
+
+_SHM_DIR = "/dev/shm"                      # POSIX tmpfs backing (Linux)
+
+
+class SegmentError(OSError):
+    """A segment that is missing, stale, or fails header validation."""
+
+
+@dataclass(frozen=True)
+class SegmentHandle:
+    """A picklable, hashable reference to one shared-memory segment.
+
+    ``generation`` must match the segment header on attach: it stamps
+    *which* write this handle refers to, so a name recycled by a later
+    writer is rejected instead of silently read.
+    """
+
+    name: str
+    generation: int
+    size: int
+
+
+def _untrack(shm: shared_memory.SharedMemory) -> None:
+    """Undo resource_tracker registration (see module docstring)."""
+    try:
+        from multiprocessing import resource_tracker
+        resource_tracker.unregister(shm._name, "shared_memory")
+    except Exception:
+        pass
+
+
+try:
+    import _posixshmem  # the module shared_memory itself uses on POSIX
+except ImportError:                     # pragma: no cover - non-POSIX
+    _posixshmem = None
+
+
+def _shm_unlink(name: str) -> None:
+    """Unlink by name without touching the resource tracker —
+    ``SharedMemory.unlink()`` would unregister a name we already
+    untracked, which the tracker process logs as a KeyError."""
+    if _posixshmem is not None:
+        try:
+            _posixshmem.shm_unlink(name if name.startswith("/")
+                                   else "/" + name)
+        except OSError:
+            pass
+        return
+    try:                                # pragma: no cover - non-POSIX
+        seg = shared_memory.SharedMemory(name=name)
+    except Exception:
+        return
+    seg.close()
+    try:
+        seg.unlink()
+    except OSError:
+        pass
+
+
+def new_prefix(kind: str = "p") -> str:
+    """A fresh per-owner segment-name prefix (pool ``p``, ring ``r``,
+    probe ``q``), unique per process + random token."""
+    return f"{SHM_PREFIX_BASE}{kind}{os.getpid():x}-{secrets.token_hex(4)}-"
+
+
+_AVAILABLE: Optional[bool] = None
+_AVAILABLE_LOCK = threading.Lock()
+
+
+def shm_available() -> bool:
+    """Probe (once) whether POSIX shared memory actually works here —
+    some sandboxes mount no ``/dev/shm`` or forbid ``shm_open``."""
+    global _AVAILABLE
+    if _AVAILABLE is None:
+        with _AVAILABLE_LOCK:
+            if _AVAILABLE is None:
+                name = new_prefix("t") + "probe"
+                try:
+                    seg = shared_memory.SharedMemory(
+                        name=name, create=True, size=HEADER_BYTES)
+                    _untrack(seg)
+                    seg.close()
+                    _shm_unlink(name)
+                    _AVAILABLE = True
+                except Exception:
+                    _AVAILABLE = False
+    return _AVAILABLE
+
+
+def write_segment(prefix: str, data, generation: int = 0,
+                  name: Optional[str] = None) -> SegmentHandle:
+    """Create a segment under ``prefix`` holding ``data``; returns its
+    handle.  Raises ``OSError`` when shm is unavailable or full — the
+    caller falls back to the temp-file spill path."""
+    data = memoryview(data)
+    size = len(data)
+    if name is None:
+        name = f"{prefix}{secrets.token_hex(6)}"
+    seg = shared_memory.SharedMemory(name=name, create=True,
+                                     size=HEADER_BYTES + size)
+    _untrack(seg)
+    try:
+        _HEADER.pack_into(seg.buf, 0, _MAGIC, _VERSION,
+                          generation & 0xFFFFFFFF, size)
+        if size:
+            seg.buf[HEADER_BYTES:HEADER_BYTES + size] = data
+    except BaseException:
+        seg.close()
+        _shm_unlink(name)
+        raise
+    seg.close()
+    return SegmentHandle(name=name, generation=generation & 0xFFFFFFFF,
+                         size=size)
+
+
+def attach_segment(handle: SegmentHandle) -> shared_memory.SharedMemory:
+    """Attach and validate; caller must ``close()`` (and maybe
+    ``unlink()``) the returned mapping."""
+    try:
+        seg = shared_memory.SharedMemory(name=handle.name)
+    except FileNotFoundError:
+        raise SegmentError(errno.ENOENT,
+                           f"shm segment {handle.name!r} is gone")
+    _untrack(seg)
+    try:
+        magic, version, gen, size = _HEADER.unpack_from(seg.buf, 0)
+        if magic != _MAGIC or version != _VERSION:
+            raise SegmentError(
+                errno.EINVAL, f"shm segment {handle.name!r} has a foreign "
+                f"header (magic={magic!r} version={version})")
+        if gen != handle.generation or size != handle.size:
+            raise SegmentError(
+                errno.ESTALE, f"stale shm handle for {handle.name!r}: "
+                f"header gen={gen}/len={size}, handle "
+                f"gen={handle.generation}/len={handle.size}")
+    except SegmentError:
+        seg.close()
+        raise
+    except Exception as exc:
+        seg.close()
+        raise SegmentError(errno.EINVAL,
+                           f"unreadable shm header on {handle.name!r}: "
+                           f"{exc!r}")
+    return seg
+
+
+def read_segment(handle: SegmentHandle, unlink: bool = False) -> bytes:
+    """Copy a segment's payload out; with ``unlink`` the segment is
+    reclaimed in the same call (single-consumer hand-off)."""
+    seg = attach_segment(handle)
+    try:
+        return bytes(seg.buf[HEADER_BYTES:HEADER_BYTES + handle.size])
+    finally:
+        seg.close()
+        if unlink:
+            _shm_unlink(handle.name)
+
+
+class MappedSegment:
+    """A zero-copy window onto a segment's payload.
+
+    ``view`` is a memoryview straight into the shared mapping — no bytes
+    are copied out of ``/dev/shm``; :meth:`close` releases the view and
+    the mapping (without unlinking).  Usable as a context manager.  The
+    consumer-side half of the zero-copy story: a spilled bag image can
+    be checksummed/parsed in place instead of being re-materialised.
+    """
+
+    __slots__ = ("_seg", "view")
+
+    def __init__(self, seg: shared_memory.SharedMemory, size: int):
+        self._seg = seg
+        self.view = seg.buf[HEADER_BYTES:HEADER_BYTES + size]
+
+    def close(self) -> None:
+        if self._seg is None:
+            return
+        try:
+            self.view.release()
+        except BufferError:
+            pass
+        seg, self._seg = self._seg, None
+        try:
+            seg.close()
+        except BufferError:     # an export escaped: leak the mapping,
+            pass                # never block the caller
+
+    def __enter__(self) -> "MappedSegment":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):          # backstop; explicit close is the contract
+        self.close()
+
+
+def map_segment(handle: SegmentHandle) -> MappedSegment:
+    """Attach a segment for zero-copy payload access; the caller closes
+    the returned :class:`MappedSegment` when done with the view."""
+    return MappedSegment(attach_segment(handle), handle.size)
+
+
+def unlink_segment(ref: Union[str, SegmentHandle]) -> None:
+    """Best-effort unlink by handle or raw name (idempotent)."""
+    _shm_unlink(ref.name if isinstance(ref, SegmentHandle) else ref)
+
+
+def leaked_segments(prefix: str = SHM_PREFIX_BASE) -> List[str]:
+    """Names still present under ``/dev/shm`` with our prefix — the
+    leak-check assertion hook tests run after every suite/session."""
+    try:
+        names = os.listdir(_SHM_DIR)
+    except OSError:
+        return []
+    return sorted(n for n in names if n.startswith(prefix))
+
+
+def sweep_segments(prefix: str) -> int:
+    """Unlink every segment under ``prefix``; returns how many were
+    reaped.  The crash-safety backstop: a worker killed mid-transfer
+    left its segment on disk with our prefix, nothing else."""
+    if not prefix or not prefix.startswith(SHM_PREFIX_BASE):
+        raise ValueError(f"refusing to sweep non-repro prefix {prefix!r}")
+    reaped = 0
+    for name in leaked_segments(prefix):
+        unlink_segment(name)
+        reaped += 1
+    return reaped
+
+
+#: recycling caps: a released put-segment keeps its mapping (pages
+#: already faulted) on a small free-list so the next ``put`` is a pure
+#: memcpy instead of a zero-page fault storm — faulting fresh tmpfs
+#: pages costs more than the copy itself for multi-MB blobs
+_RECYCLE_MAX_SEGS = 4
+_RECYCLE_MAX_BYTES = 64 << 20
+#: reuse a parked segment only when the payload fits without hoarding:
+#: capacity must be <= max(this multiple of the payload, 1 MiB)
+_RECYCLE_SLACK = 4
+_RECYCLE_MIN_CAP = 1 << 20
+
+
+class SegmentPool:
+    """Driver-owned registry of live segments with ref-counts.
+
+    ``put`` creates (refs default 1), ``adopt`` registers a
+    worker-created segment under driver ownership, ``release``
+    decrements and unlinks at zero, ``read`` copies a payload out
+    (optionally releasing in the same call).  ``shutdown`` unlinks
+    everything still registered *and* prefix-sweeps ``/dev/shm`` for
+    orphans from crashed workers; it is idempotent.
+
+    Segments created by ``put`` are **recycled**: the pool keeps their
+    mappings open, and ``release`` at refcount zero parks the segment on
+    a bounded free-list instead of unlinking, so a subsequent ``put``
+    of a similar-sized blob reuses the already-faulted pages (memcpy
+    speed, no page faults).  Every reuse stamps a fresh generation into
+    the header, so a stale handle attaching a recycled name fails with
+    ``ESTALE`` instead of reading the new occupant.  The generation is
+    written *before* the payload: an attacher racing the overwrite
+    either sees the new generation (rejected) or attached before the
+    bump — a window that only exists after the driver dropped the last
+    ref, i.e. after the scheduler stopped caring about that consumer's
+    result.  Adopted (worker-created) segments are never recycled; the
+    driver holds no mapping for them.
+    """
+
+    def __init__(self, prefix: Optional[str] = None):
+        self.prefix = prefix or new_prefix("p")
+        self._lock = threading.Lock()
+        self._refs: Dict[SegmentHandle, int] = {}
+        #: open mappings for put-created segments, keyed by name
+        self._open: Dict[str, shared_memory.SharedMemory] = {}
+        self._free: List[shared_memory.SharedMemory] = []
+        self._free_bytes = 0
+        self._gen = 0
+        self._closed = False
+        self.puts = 0
+        self.bytes_in = 0
+        self.recycled = 0
+
+    def _pop_free(self, size: int) -> Optional[shared_memory.SharedMemory]:
+        """Smallest parked segment that fits ``size`` without hoarding
+        (caller holds the lock)."""
+        limit = max(size * _RECYCLE_SLACK, _RECYCLE_MIN_CAP)
+        best = None
+        for i, seg in enumerate(self._free):
+            cap = seg.size - HEADER_BYTES
+            if size <= cap <= limit and (
+                    best is None
+                    or cap < self._free[best].size - HEADER_BYTES):
+                best = i
+        if best is None:
+            return None
+        seg = self._free.pop(best)
+        self._free_bytes -= seg.size
+        self.recycled += 1
+        return seg
+
+    def put(self, data, refs: int = 1) -> SegmentHandle:
+        data = memoryview(data)
+        size = len(data)
+        with self._lock:
+            if self._closed:
+                raise SegmentError(errno.ESHUTDOWN, "segment pool is closed")
+            self._gen += 1
+            gen = self._gen & 0xFFFFFFFF
+            seg = self._pop_free(size)
+        if seg is None:
+            seg = shared_memory.SharedMemory(
+                name=f"{self.prefix}{secrets.token_hex(6)}",
+                create=True, size=HEADER_BYTES + size)
+            _untrack(seg)
+        try:
+            # generation lands before the payload (see class docstring)
+            _HEADER.pack_into(seg.buf, 0, _MAGIC, _VERSION, gen, size)
+            if size:
+                seg.buf[HEADER_BYTES:HEADER_BYTES + size] = data
+        except BaseException:
+            seg.close()
+            _shm_unlink(seg.name)
+            raise
+        handle = SegmentHandle(name=seg.name, generation=gen, size=size)
+        with self._lock:
+            if self._closed:            # racing a shutdown: don't leak
+                closing = True
+            else:
+                closing = False
+                self._refs[handle] = max(1, refs)
+                self._open[handle.name] = seg
+                self.puts += 1
+                self.bytes_in += size
+        if closing:
+            seg.close()
+            unlink_segment(handle)
+            raise SegmentError(errno.ESHUTDOWN, "segment pool is closed")
+        return handle
+
+    def adopt(self, handle: SegmentHandle, refs: int = 1) -> SegmentHandle:
+        with self._lock:
+            if self._closed:
+                unlink_segment(handle)
+                raise SegmentError(errno.ESHUTDOWN, "segment pool is closed")
+            self._refs[handle] = self._refs.get(handle, 0) + refs
+        return handle
+
+    def read(self, handle: SegmentHandle, release: bool = False) -> bytes:
+        data = read_segment(handle)
+        if release:
+            self.release(handle)
+        return data
+
+    def release(self, handle: SegmentHandle) -> None:
+        """Tolerant like ``reclaim_spill``: releasing an unknown or
+        already-released handle is a no-op, not an error — and never
+        unlinks a name that was recycled and is live under a newer
+        generation."""
+        seg = None
+        with self._lock:
+            n = self._refs.get(handle)
+            if n is not None and n > 1:
+                self._refs[handle] = n - 1
+                return
+            known = handle in self._refs
+            self._refs.pop(handle, None)
+            if not known:
+                # a stale/double release must not touch the name if the
+                # pool still tracks it (recycled under a new generation)
+                if (handle.name in self._open
+                        or any(s.name == handle.name for s in self._free)):
+                    return
+            else:
+                seg = self._open.pop(handle.name, None)
+                if (seg is not None and not self._closed
+                        and len(self._free) < _RECYCLE_MAX_SEGS
+                        and self._free_bytes + seg.size
+                        <= _RECYCLE_MAX_BYTES):
+                    self._free.append(seg)
+                    self._free_bytes += seg.size
+                    return
+        if seg is not None:
+            seg.close()
+        unlink_segment(handle)
+
+    def live(self) -> List[SegmentHandle]:
+        with self._lock:
+            return list(self._refs)
+
+    def parked(self) -> List[str]:
+        """Names held on the recycling free-list: pool-owned capacity
+        awaiting reuse, not leaks (``shutdown`` reaps them)."""
+        with self._lock:
+            return [seg.name for seg in self._free]
+
+    def shutdown(self) -> int:
+        with self._lock:
+            self._closed = True
+            handles = list(self._refs)
+            self._refs.clear()
+            mappings = list(self._open.values()) + self._free
+            self._open.clear()
+            self._free = []
+            self._free_bytes = 0
+        for seg in mappings:
+            try:
+                seg.close()
+            except BufferError:         # pragma: no cover - escaped view
+                pass
+            _shm_unlink(seg.name)
+        for h in handles:
+            unlink_segment(h)
+        return len(handles) + sweep_segments(self.prefix)

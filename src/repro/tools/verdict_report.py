@@ -27,6 +27,14 @@ and wall time to the median of all earlier runs):
                     excluded on both sides: a hit's near-zero wall would
                     poison the median and a hit can never *be* a wall-time
                     regression, so hits neither flag nor count as baseline
+``CARRIER-SHIFT``   the export transport changed between the last two
+                    runs that recorded one (e.g. ``shm`` -> ``wire``:
+                    the same-host ring stopped negotiating — bit-exact
+                    results, but the fast path silently degraded; also
+                    fires on deliberate ``wire`` -> ``shm`` upgrades so
+                    the change is on the record).  Not a correctness
+                    flag — carriers are bit-identical by contract — but
+                    a performance-provenance one
 
 Scenarios whose *latest* record is an ERROR verdict (the degraded-suite
 outcome: a partition perma-failed, or an upstream exporter did) are
@@ -103,6 +111,7 @@ def analyze(records: Sequence[dict],
             "status": last.get("status"),
             "wall_time_s": last.get("wall_time_s"),
             "checksums": last.get("checksums", {}),
+            "transport": last.get("transport"),
         }
         scenarios[name] = entry
         if last.get("status") == "ERROR":
@@ -117,6 +126,13 @@ def analyze(records: Sequence[dict],
         if last.get("status") != prev.get("status"):
             flag(name, "STATUS-FLIP",
                  f"{prev.get('status')} -> {last.get('status')}")
+        # carrier provenance: compare the last two runs that recorded a
+        # transport at all (old logs predate the field; exporters only)
+        carried = [r.get("transport") for r in runs
+                   if r.get("transport") is not None]
+        if len(carried) >= 2 and carried[-1] != carried[-2]:
+            flag(name, "CARRIER-SHIFT",
+                 f"export transport {carried[-2]} -> {carried[-1]}")
         if last.get("passed") and prev.get("passed"):
             a, b = prev.get("checksums", {}), last.get("checksums", {})
             for topic in sorted(set(a) | set(b)):
@@ -162,8 +178,10 @@ def render(report: dict) -> str:
     for name, entry in report["scenarios"].items():
         wall = entry.get("wall_time_s")
         wall_s = f"{wall:.3f}s" if wall is not None else "n/a"
+        carrier = (f", export via {entry['transport']}"
+                   if entry.get("transport") else "")
         lines.append(f"  {name}: {entry['status']} x{entry['runs']} runs, "
-                     f"last wall {wall_s}")
+                     f"last wall {wall_s}{carrier}")
     if report.get("errors"):
         lines.append(f"{len(report['errors'])} ERROR verdict(s):")
         for e in report["errors"]:

@@ -1,0 +1,19 @@
+"""Shared test fixtures.
+
+The session-scoped autouse fixture below is the data-plane acceptance
+trip-wire: zero leaked ``/dev/shm`` segments after every test session,
+including injected worker-crash and degraded-suite paths.  Only names
+under our ``reproshm-`` prefix count — foreign segments on the host are
+not ours to judge.
+"""
+
+import pytest
+
+from repro.shm import leaked_segments
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _no_leaked_shm_segments():
+    yield
+    leaks = leaked_segments()
+    assert not leaks, f"test session leaked /dev/shm segments: {leaks}"

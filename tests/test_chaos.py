@@ -335,3 +335,82 @@ def test_process_shutdown_escalates_on_wedged_worker():
     while multiprocessing.active_children() and time.monotonic() < deadline:
         time.sleep(0.05)
     assert not multiprocessing.active_children()
+
+
+# -- shm data-plane crash safety --------------------------------------------
+
+
+def test_worker_crash_mid_transfer_leaves_no_shm_orphans(bag_path):
+    """A worker killed while shm result-spill segments are in flight
+    cannot leak /dev/shm past the backend's shutdown sweep — the chaos
+    seam of the zero-copy data plane's crash-safety contract."""
+    from repro.core import ProcessBackend
+    from repro.shm import leaked_segments, shm_available
+    if not shm_available():
+        pytest.skip("no usable POSIX shared memory here")
+    backend = ProcessBackend(spill_bytes=512)
+    chaos.install(chaos.ChaosPlan(
+        [chaos.Fault("worker_crash", target="w0", count=1)], seed=7))
+    try:
+        v = ScenarioSuite(
+            [Scenario("a", bag_path, "tests.test_chaos:_logic"),
+             Scenario("b", bag_path, "tests.test_chaos:_logic",
+                      drop_rate=0.25, seed=9)],
+            num_workers=2, backend=backend,
+            # the crashed process is caught immediately via is_alive();
+            # a short beat window would misread a starved-but-healthy
+            # sibling as dead under loaded single-core CI
+            scheduler_kwargs={"max_attempts": 3,
+                              "heartbeat_timeout": 30.0}).run(timeout=120)
+    finally:
+        chaos.uninstall()
+    assert all(vv.passed for vv in v.values())
+    # the fork inherited the plan, so the firing ledger lives (and dies)
+    # in the crashed child; the driver sees the death itself
+    assert v["a"].report.scheduler_stats["worker_deaths"] >= 1
+    assert backend.spill_leaks() == []
+    assert leaked_segments() == []
+
+
+def test_degrade_reclaims_shm_spills_like_files(bag_path):
+    """``on_error="degrade"`` reclaims shm arg-spills on the error path
+    exactly like temp files: every spilled SegmentHandle is released and
+    nothing survives shutdown."""
+    from repro.core import ProcessBackend
+    from repro.shm import SegmentHandle, leaked_segments, shm_available
+    if not shm_available():
+        pytest.skip("no usable POSIX shared memory here")
+    backend = ProcessBackend(spill_bytes=512)
+    spilled, reclaimed = [], []
+    orig_spill, orig_reclaim = backend.spill_arg, backend.reclaim_spill
+
+    def spill_arg(data):
+        ref = orig_spill(data)
+        spilled.append(ref)
+        return ref
+
+    def reclaim_spill(ref):
+        reclaimed.append(ref)
+        orig_reclaim(ref)
+
+    backend.spill_arg = spill_arg
+    backend.reclaim_spill = reclaim_spill
+    chaos.install(chaos.ChaosPlan(
+        [chaos.Fault("logic_raise", target="victim", count=None)], seed=5))
+    try:
+        v = ScenarioSuite(
+            [Scenario("victim", bag_path, "tests.test_chaos:_logic"),
+             Scenario("clean", bag_path, "tests.test_chaos:_logic")],
+            num_workers=2, backend=backend, on_error="degrade",
+            scheduler_kwargs={"max_attempts": 2,
+                              "heartbeat_timeout": 30.0}).run(timeout=120)
+    finally:
+        chaos.uninstall()
+    assert v["victim"].status == "ERROR"
+    assert v["clean"].status == "PASS"
+    assert spilled, "expected shm arg spills with a 512-byte threshold"
+    assert all(isinstance(r, SegmentHandle) for r in spilled)
+    key = lambda h: (h.name, h.generation)  # noqa: E731
+    assert sorted(reclaimed, key=key) == sorted(spilled, key=key)
+    assert backend.spill_leaks() == []
+    assert leaked_segments() == []

@@ -238,7 +238,9 @@ def test_pruned_exporter_yields_empty_import_stream(bags):
 
 
 def _tracking_backend(spill_bytes=512):
-    backend = ProcessBackend(spill_bytes=spill_bytes)
+    # shm=False pins the temp-file carrier: these tests assert str paths
+    # and os.path.exists; the shm carrier has its own tests/test_shm.py
+    backend = ProcessBackend(spill_bytes=spill_bytes, shm=False)
     spilled, reclaimed = [], []
     orig_spill, orig_reclaim = backend.spill_arg, backend.reclaim_spill
 
@@ -294,7 +296,7 @@ def test_spills_reclaimed_on_error_path(bags):
 
 
 def test_reclaim_spill_roundtrip_and_tolerance():
-    backend = ProcessBackend(spill_bytes=64)
+    backend = ProcessBackend(spill_bytes=64, shm=False)
     path = backend.spill_arg(b"y" * 256)
     assert os.path.exists(path)
     backend.reclaim_spill(path)

@@ -1,0 +1,328 @@
+"""Same-host zero-copy data plane (shm PR): segment pool mechanics,
+recycling + generation staleness, the SPSC frame ring, HELLO ring
+negotiation, and the ProcessBackend shm spill integration.
+
+Crash-safety under injected faults lives in tests/test_chaos.py; the
+session-wide zero-leak assertion lives in tests/conftest.py.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (Bag, Message, MessageBus, ProcessBackend,
+                        RosRecord, Scenario, ScenarioSuite, Scheduler)
+from repro.net import LaneTransport, RemoteBus
+from repro.net.wire import T_DATA, WireError
+from repro.shm import (SegmentError, SegmentHandle, SegmentPool,
+                       attach_segment, leaked_segments, map_segment,
+                       new_prefix, read_segment, shm_available,
+                       sweep_segments, unlink_segment, write_segment)
+from repro.shm.ring import ShmRing
+
+pytestmark = pytest.mark.skipif(
+    not shm_available(), reason="no usable POSIX shared memory here")
+
+TOPICS = ("/camera", "/lidar")
+
+
+# -- stateless segment helpers ----------------------------------------------
+
+
+def test_write_read_roundtrip_and_unlink():
+    prefix = new_prefix("t")
+    handle = write_segment(prefix, b"payload-bytes", generation=7)
+    assert isinstance(handle, SegmentHandle)
+    assert handle.generation == 7 and handle.size == 13
+    assert read_segment(handle) == b"payload-bytes"
+    assert leaked_segments(prefix) == [handle.name]
+    assert read_segment(handle, unlink=True) == b"payload-bytes"
+    assert leaked_segments(prefix) == []
+    unlink_segment(handle)                  # idempotent on a gone name
+
+
+def test_attach_validates_generation_and_absence():
+    prefix = new_prefix("t")
+    handle = write_segment(prefix, b"x" * 64, generation=3)
+    stale = SegmentHandle(handle.name, generation=2, size=64)
+    with pytest.raises(SegmentError):
+        attach_segment(stale)               # ESTALE: wrong generation
+    wrong_len = SegmentHandle(handle.name, generation=3, size=63)
+    with pytest.raises(SegmentError):
+        attach_segment(wrong_len)
+    unlink_segment(handle)
+    with pytest.raises(SegmentError):
+        attach_segment(handle)              # ENOENT: segment gone
+
+
+def test_map_segment_is_a_zero_copy_view():
+    prefix = new_prefix("t")
+    handle = write_segment(prefix, bytes(range(256)))
+    with map_segment(handle) as m:
+        assert isinstance(m.view, memoryview)
+        assert len(m.view) == 256 and m.view[255] == 255
+        assert bytes(m.view[:4]) == bytes(range(4))
+    unlink_segment(handle)
+
+
+def test_sweep_refuses_foreign_prefix_and_reaps_ours():
+    with pytest.raises(ValueError):
+        sweep_segments("psm_")              # not ours to judge
+    prefix = new_prefix("t")
+    handles = [write_segment(prefix, bytes(16)) for _ in range(3)]
+    assert len(leaked_segments(prefix)) == 3
+    assert sweep_segments(prefix) == 3
+    assert leaked_segments(prefix) == []
+    for h in handles:
+        with pytest.raises(SegmentError):
+            read_segment(h)
+
+
+# -- segment pool ------------------------------------------------------------
+
+
+def test_pool_refcounts_and_shutdown():
+    pool = SegmentPool()
+    solo = pool.put(b"a" * 128)
+    shared = pool.put(b"b" * 128, refs=2)
+    assert pool.read(shared) == b"b" * 128
+    pool.release(shared)
+    assert shared in pool.live()            # one ref still out
+    pool.release(shared)
+    assert shared not in pool.live()
+    assert pool.read(solo, release=True) == b"a" * 128
+    assert pool.live() == []
+    pool.shutdown()
+    assert leaked_segments(pool.prefix) == []
+    pool.shutdown()                         # idempotent
+    with pytest.raises(SegmentError):
+        pool.put(b"closed")
+
+
+def test_pool_recycles_released_segments_with_fresh_generation():
+    pool = SegmentPool()
+    first = pool.put(b"x" * (2 << 20))
+    pool.release(first)
+    # the mapping parks on the free-list; same-size re-put reuses it
+    second = pool.put(b"y" * (2 << 20))
+    assert second.name == first.name
+    assert second.generation != first.generation
+    assert pool.recycled == 1
+    # the stale handle is rejected, the new one reads the new payload
+    with pytest.raises(SegmentError):
+        read_segment(first)
+    assert read_segment(second)[:1] == b"y"
+    # a stale double-release must not unlink the live recycled segment
+    pool.release(first)
+    assert read_segment(second)[:1] == b"y"
+    pool.shutdown()
+    assert leaked_segments(pool.prefix) == []
+
+
+def test_pool_does_not_hoard_oversized_segments():
+    pool = SegmentPool()
+    big = pool.put(b"x" * (2 << 20))
+    pool.release(big)
+    tiny = pool.put(b"y" * 64)              # 2 MB cap >> 4x payload: no reuse
+    assert tiny.name != big.name
+    assert pool.recycled == 0
+    pool.shutdown()
+    assert leaked_segments(pool.prefix) == []
+
+
+def test_pool_adopts_worker_segments():
+    pool = SegmentPool()
+    handle = write_segment(pool.prefix, b"worker-made", generation=0)
+    pool.adopt(handle)
+    assert handle in pool.live()
+    pool.release(handle)                    # adopted: unlinked, not parked
+    with pytest.raises(SegmentError):
+        read_segment(handle)
+    pool.shutdown()
+
+
+def test_pool_shutdown_sweeps_crash_orphans():
+    pool = SegmentPool()
+    # a worker died with its result segment unreported: nothing adopted
+    orphan = write_segment(pool.prefix, b"orphaned-result")
+    assert leaked_segments(pool.prefix) == [orphan.name]
+    assert pool.shutdown() >= 1
+    assert leaked_segments(pool.prefix) == []
+
+
+# -- SPSC frame ring ---------------------------------------------------------
+
+
+def test_ring_roundtrip_and_zero_copy_view():
+    tx = ShmRing.create()
+    rx = ShmRing.attach(tx.name)
+    tx.send_frame(T_DATA, b"frame-zero")
+    ftype, body = rx.recv_frame()
+    assert ftype == T_DATA and isinstance(body, memoryview)
+    assert bytes(body) == b"frame-zero"
+    tx.close_write()
+    assert rx.recv_frame() == (None, b"")   # clean EOF after drain
+    rx.close(unlink=False)
+    tx.close()
+    assert leaked_segments() == []
+
+
+def test_ring_wraps_without_corrupting_frames():
+    tx = ShmRing.create(capacity=1 << 16)
+    rx = ShmRing.attach(tx.name)
+    for i in range(300):                    # many laps around a 64 KB ring
+        payload = bytes([i & 0xFF]) * (900 + (i % 7))
+        tx.send_frame(T_DATA, payload)
+        ftype, body = rx.recv_frame()
+        assert ftype == T_DATA and bytes(body) == payload
+    rx.close(unlink=False)
+    tx.close()
+
+
+def test_ring_rejects_oversized_frames():
+    tx = ShmRing.create(capacity=1 << 16)
+    with pytest.raises(WireError):
+        tx.send_frame(T_DATA, b"x" * (1 << 15))   # > capacity/2 - 16
+    tx.close()
+
+
+def test_ring_send_into_closed_ring_raises():
+    tx = ShmRing.create()
+    rx = ShmRing.attach(tx.name)
+    tx.close_write()
+    with pytest.raises(OSError):
+        tx.send_frame(T_DATA, b"late")
+    rx.close(unlink=False)
+    tx.close()
+
+
+# -- HELLO ring negotiation --------------------------------------------------
+
+
+def _bridged_roundtrip(shm: bool) -> tuple[str, int]:
+    rx = MessageBus()
+    out = Bag.open_write(backend="memory")
+    rec = RosRecord(rx, out, topics=None, batch=True, mode="queued")
+    rec.start()
+    ep = RemoteBus(bus=rx, window=512)
+    addr = ep.start()
+    tx = MessageBus()
+    transport = LaneTransport.connect(addr, stream_id="t", flush_batch=32,
+                                      shm=shm)
+    bridge = tx.bridge(list(TOPICS), transport, batch=True)
+    rng = np.random.RandomState(3)
+    msgs = [Message(TOPICS[i % 2], i * 1000, rng.bytes(96))
+            for i in range(400)]
+    for lo in range(0, len(msgs), 50):
+        tx.publish_batch(msgs[lo:lo + 50])
+    tx.drain()
+    bridge.drain()
+    rec.stop()
+    carrier = transport.carrier
+    recorded = rec.messages_recorded
+    bridge.close()
+    ep.stop()
+    tx.close()
+    rx.close()
+    out.close()
+    return carrier, recorded
+
+
+def test_lane_transport_negotiates_shm_carrier():
+    carrier, recorded = _bridged_roundtrip(shm=True)
+    assert carrier == "shm" and recorded == 400
+    assert leaked_segments() == []          # rings reaped on stop
+
+
+def test_lane_transport_stays_on_wire_when_asked():
+    carrier, recorded = _bridged_roundtrip(shm=False)
+    assert carrier == "wire" and recorded == 400
+
+
+# -- ProcessBackend spill integration ----------------------------------------
+
+
+def _big_result(n):
+    return os.urandom(1) * 0 + bytes(n)     # n zero bytes, picklable
+
+
+def test_process_backend_result_spill_rides_shm():
+    with Scheduler(num_workers=2, backend=ProcessBackend(
+            spill_bytes=4096), speculation=False) as sched:
+        for _ in range(4):
+            sched.submit(_big_result, 64 * 1024)
+        results = sched.run(timeout=120)
+    assert all(len(v) == 64 * 1024 for v in results.values())
+    assert sched.stats["shm_spills"] >= 4
+    assert sched.stats["shm_spill_bytes"] > 4 * 64 * 1024
+    assert sched.backend.spill_leaks() == []
+
+
+def test_process_backend_arg_spill_returns_handle_and_reclaims():
+    backend = ProcessBackend(spill_bytes=1024)
+    try:
+        ref = backend.spill_arg(b"z" * 8192)
+        assert isinstance(ref, SegmentHandle)
+        assert read_segment(ref) == b"z" * 8192
+        backend.reclaim_spill(ref)
+        backend.reclaim_spill(ref)          # double reclaim tolerated
+        assert backend.spill_leaks() == []
+    finally:
+        backend.shutdown()
+    assert backend.spill_leaks() == []
+
+
+def test_shm_disabled_backend_never_touches_dev_shm(tmp_path):
+    backend = ProcessBackend(spill_bytes=64, shm=False)
+    try:
+        ref = backend.spill_arg(b"q" * 256)
+        assert isinstance(ref, str) and os.path.exists(ref)
+        assert backend.spill_leaks() == [ref]
+        backend.reclaim_spill(ref)
+        assert backend.spill_leaks() == []
+    finally:
+        backend.shutdown()
+
+
+def test_spill_dir_not_created_when_nothing_spills():
+    backend = ProcessBackend(spill_bytes=1 << 30, shm=False)
+    try:
+        with Scheduler(num_workers=1, backend=backend,
+                       speculation=False) as sched:
+            sched.submit(_big_result, 128)
+            sched.run(timeout=60)
+    finally:
+        backend.shutdown()                  # second shutdown: idempotent
+    assert backend.spill_leaks() == []
+
+
+def test_suite_on_process_backend_prefers_shm_transport(tmp_path):
+    rng = np.random.RandomState(5)
+    bag = Bag.open_write(str(tmp_path / "a.bag"), chunk_bytes=4096)
+    for i in range(240):
+        bag.write(TOPICS[i % 2], i * 1000, rng.bytes(64))
+    bag.close()
+    verdicts = ScenarioSuite(
+        [Scenario("prov", str(tmp_path / "a.bag"),
+                  "tests.test_shm:_prov_logic", exports=("/det/camera",)),
+         Scenario("cons", str(tmp_path / "a.bag"),
+                  "tests.test_shm:_cons_logic", imports=("/det/camera",))],
+        num_workers=2, backend="process", export_transport="auto",
+        # jit warm-up in freshly forked workers can hold the GIL past the
+        # default beat window on a loaded single-core box; crashes are
+        # still caught immediately via is_alive()
+        scheduler_kwargs={"heartbeat_timeout": 30.0}).run(timeout=300)
+    assert all(v.passed for v in verdicts.values())
+    assert verdicts["prov"].transport == "shm"
+    assert leaked_segments() == []
+
+
+def _prov_logic(msg):
+    if msg.topic == "/camera":
+        return ("/det/camera", msg.data[:16])
+    return None
+
+
+def _cons_logic(msg):
+    return ("/score", bytes(reversed(msg.data)))
