@@ -19,9 +19,20 @@ optimisation, not a semantic change.  A second phase runs a small
 ``ScenarioSuite`` in both modes and asserts the *verdicts* (and their
 metric checksums) are bit-identical too.
 
+A third phase prices the observability layer (ISSUE 10 satellite): the
+same staged replay races untraced vs traced (``repro.obs.trace``
+enabled, spans flowing at every seam), and a microbench prices the
+disabled-tracer probe (``TRACER`` read + ``None`` check) directly.  A
+small traced suite run also writes ``TRACE_pipeline.json`` (a
+Perfetto-loadable flight recording) and ``METRICS_pipeline.json`` (the
+suite metrics snapshot) — the CI benchmark artifacts.
+
 Emits CSV rows plus machine-readable ``BENCH_pipeline.json``.
 ``--check`` re-reads the JSON and exits non-zero if staged replay
-regressed below the synchronous baseline — the CI gate.
+regressed below the synchronous baseline, if enabled tracing costs
+more than ``TRACE_ENABLED_BUDGET`` (5%) of replay throughput, or if
+the disabled probe prices above ``TRACE_DISABLED_BUDGET`` (0.5%) —
+the CI gate.
 
     PYTHONPATH=src python -m benchmarks.pipeline [--check]
 """
@@ -38,6 +49,8 @@ import numpy as np
 
 from repro.core import (Aggregator, Bag, Message, MessageBus, RosPlay,
                         RosRecord, Scenario, ScenarioSuite)
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as otrace
 
 N_MSGS = 4000
 PAYLOAD_BYTES = 256
@@ -48,8 +61,18 @@ MONITOR_SLEEP_S = 0.003      # the deliberately slow subscriber, per batch
 REPEATS = 3
 QUEUE_DEPTH = 8
 
-JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                         os.pardir, "BENCH_pipeline.json")
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir)
+JSON_PATH = os.path.join(_ROOT, "BENCH_pipeline.json")
+TRACE_PATH = os.path.join(_ROOT, "TRACE_pipeline.json")
+METRICS_PATH = os.path.join(_ROOT, "METRICS_pipeline.json")
+
+#: enabled tracing may cost at most this fraction of replay throughput
+TRACE_ENABLED_BUDGET = 0.05
+#: the disabled probe may cost at most this fraction of replay time
+TRACE_DISABLED_BUDGET = 0.005
+#: hot-path probes per replayed message (read + lane put/get + logic
+#: tick + record + publish checks) — deliberately a high-side estimate
+PROBES_PER_MSG = 10
 
 
 def _make_bag(path: str) -> str:
@@ -151,6 +174,52 @@ def _suite_parity(bag_path: str) -> bool:
     return True
 
 
+def _traced_replay(bag_path: str):
+    """The staged replay with the tracer live — every seam emitting."""
+    otrace.enable(root_name="bench")
+    try:
+        return _replay(bag_path, staged=True)
+    finally:
+        otrace.disable()
+
+
+def _disabled_probe_ns(n: int = 1_000_000) -> float:
+    """Price of ONE disabled-tracer probe (module attr read + ``None``
+    check — the exact hot-path idiom), loop overhead subtracted."""
+    assert otrace.TRACER is None
+    t0 = time.perf_counter()
+    for _ in range(n):
+        tr = otrace.TRACER
+        if tr is not None:
+            raise AssertionError
+    probed = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(n):
+        pass
+    empty = time.perf_counter() - t0
+    return max(probed - empty, 0.0) * 1e9 / n
+
+
+def _flight_record(bag_path: str) -> int:
+    """One traced suite run writing the CI artifacts: the Perfetto
+    flight recording and the suite metrics snapshot.  Returns the span
+    count (sanity floor for the gate)."""
+    scenarios = [
+        Scenario("per-msg", bag_path, _det_logic, pipeline=True,
+                 latency_model_s=0.0001),
+        Scenario("batched", bag_path, _det_batch_logic, batch_size=BATCH,
+                 pipeline=True, latency_model_s=0.0005),
+    ]
+    ScenarioSuite(scenarios, num_workers=2).run(timeout=300,
+                                                trace=TRACE_PATH)
+    with open(METRICS_PATH, "w") as f:
+        json.dump(obs_metrics.snapshot(), f, indent=2, sort_keys=True)
+        f.write("\n")
+    with open(TRACE_PATH) as f:
+        return sum(1 for e in json.load(f)["traceEvents"]
+                   if e.get("ph") == "X")
+
+
 def run_race() -> dict:
     with tempfile.TemporaryDirectory(prefix="repro-bench-") as d:
         bag_path = _make_bag(os.path.join(d, "drive.bag"))
@@ -167,6 +236,23 @@ def run_race() -> dict:
         assert sync_counts == staged_counts
         verdicts_identical = _suite_parity(bag_path)
 
+        # observability pricing: untraced vs traced staged replay
+        # (interleaved best-of, same discipline as the main race), and
+        # tracing must not move a byte either
+        (plain_s, plain_sums, _), (traced_s, traced_sums, _) = \
+            _best_of_pair(lambda: _replay(bag_path, staged=True),
+                          lambda: _traced_replay(bag_path))
+        assert plain_sums == traced_sums, "tracing changed checksums"
+        probe_ns = _disabled_probe_ns()
+        trace_spans = _flight_record(bag_path)
+
+    # overhead fractions the gate prices: enabled = wall inflation of
+    # the traced run; disabled = measured probe cost x probes/message
+    # over the untraced per-message budget
+    enabled_overhead = traced_s / plain_s - 1.0
+    disabled_overhead = (probe_ns * PROBES_PER_MSG) \
+        / (plain_s * 1e9 / N_MSGS)
+
     return {
         "bench": "pipeline",
         "messages": N_MSGS, "payload_bytes": PAYLOAD_BYTES,
@@ -179,6 +265,12 @@ def run_race() -> dict:
         "checksums_identical": True,
         "suite_verdicts_identical": verdicts_identical,
         "checksums": {t: int(c) for t, c in staged_sums.items()},
+        "untraced_wall_s": plain_s, "traced_wall_s": traced_s,
+        "trace_enabled_overhead": enabled_overhead,
+        "trace_disabled_probe_ns": probe_ns,
+        "trace_disabled_overhead": disabled_overhead,
+        "trace_checksums_identical": True,
+        "trace_spans": trace_spans,
     }
 
 
@@ -193,9 +285,18 @@ def main(csv: bool = True, json_path: str = JSON_PATH) -> list[tuple]:
         ("pipeline_staged_vs_sync_speedup",
          payload["staged_vs_sync_speedup"],
          "checksums + suite verdicts bit-identical"),
+        ("pipeline_trace_enabled_overhead",
+         payload["trace_enabled_overhead"] * 100,
+         f"% wall inflation with spans live ({payload['trace_spans']} "
+         "spans in TRACE_pipeline.json)"),
+        ("pipeline_trace_disabled_probe",
+         payload["trace_disabled_probe_ns"],
+         f"ns/probe -> {payload['trace_disabled_overhead'] * 100:.4f}% "
+         "of replay at "
+         f"{PROBES_PER_MSG} probes/msg"),
     ]
     if csv:
-        for name, val, derived in rows[:2]:
+        for name, val, derived in (rows[0], rows[1], rows[3], rows[4]):
             print(f"{name},{val:.2f},{derived}")
         print(f"{rows[2][0]},{rows[2][1]:.2f}x,{rows[2][2]}")
     if json_path:
@@ -222,6 +323,32 @@ def check(json_path: str = JSON_PATH) -> int:
         print("FAIL: staged replay regressed below the synchronous "
               "baseline", file=sys.stderr)
         return 1
+    enabled = payload.get("trace_enabled_overhead")
+    disabled = payload.get("trace_disabled_overhead")
+    if enabled is not None:
+        print(f"tracing: enabled {enabled * 100:+.2f}% wall, disabled "
+              f"probe {payload['trace_disabled_probe_ns']:.1f} ns "
+              f"({disabled * 100:.4f}% of replay), "
+              f"{payload.get('trace_spans', 0)} spans recorded")
+        if not payload.get("trace_checksums_identical"):
+            print("FAIL: traced replay is not bit-identical to untraced",
+                  file=sys.stderr)
+            return 1
+        if enabled > TRACE_ENABLED_BUDGET:
+            print(f"FAIL: enabled tracing costs {enabled * 100:.2f}% "
+                  f"(> {TRACE_ENABLED_BUDGET * 100:.0f}%) of replay "
+                  "throughput", file=sys.stderr)
+            return 1
+        if disabled > TRACE_DISABLED_BUDGET:
+            print(f"FAIL: disabled-tracer probe costs "
+                  f"{disabled * 100:.4f}% "
+                  f"(> {TRACE_DISABLED_BUDGET * 100:.1f}%) of replay",
+                  file=sys.stderr)
+            return 1
+        if not payload.get("trace_spans"):
+            print("FAIL: traced suite run recorded no spans",
+                  file=sys.stderr)
+            return 1
     return 0
 
 

@@ -41,6 +41,8 @@ import numpy as np
 
 from repro.core.aggregation import Diff, TopicMetrics
 from repro.core.bag import Bag, Message, bag_content_digest
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as otrace
 
 from .store import CacheStore
 
@@ -155,11 +157,30 @@ class ResultCache:
                       else CacheStore(store))
         self.logic_version = (logic_version if logic_version is not None
                               else os.environ.get(LOGIC_VERSION_ENV, "0"))
-        self.hits = 0
-        self.misses = 0
-        self.puts = 0
-        self.put_errors = 0
+        # counters live in the repro.obs.metrics registry; the attribute
+        # names below stay readable as deprecated property shims
+        self._metrics = obs_metrics.scope("cache")
+        self._m_hits = self._metrics.counter("hits")
+        self._m_misses = self._metrics.counter("misses")
+        self._m_puts = self._metrics.counter("puts")
+        self._m_put_errors = self._metrics.counter("put_errors")
         self._digest_memo: dict[tuple, str] = {}
+
+    @property
+    def hits(self) -> int:
+        return self._m_hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._m_misses.value
+
+    @property
+    def puts(self) -> int:
+        return self._m_puts.value
+
+    @property
+    def put_errors(self) -> int:
+        return self._m_put_errors.value
 
     # -- key derivation ------------------------------------------------------
 
@@ -201,9 +222,21 @@ class ResultCache:
         entry recorded *without* a committed export stream as a miss —
         the shape a suite needs when this scenario's exports are routed
         to importers this run but weren't when the entry was written."""
+        tr = otrace.TRACER
+        if tr is None:
+            return self._load_impl(key, require_exports)
+        slot = tr.begin("cache.load", "cache")
+        out = self._load_impl(key, require_exports)
+        otrace.Tracer.set_attrs(slot, {"key": key[:12],
+                                       "hit": out is not None})
+        otrace.Tracer.end(slot)
+        return out
+
+    def _load_impl(self, key: str,
+                   require_exports: bool = False) -> Optional[CachedResult]:
         got = self.store.get(key)
         if got is None:
-            self.misses += 1
+            self._m_misses.inc()
             return None
         meta, blobs = got
         try:
@@ -224,12 +257,12 @@ class ResultCache:
             )
         except (KeyError, TypeError, ValueError):
             # codec mismatch reads as a miss, exactly like corruption
-            self.misses += 1
+            self._m_misses.inc()
             return None
         if require_exports and result.export_image is None:
-            self.misses += 1
+            self._m_misses.inc()
             return None
-        self.hits += 1
+        self._m_hits.inc()
         return result
 
     def put(self, key: str, result: CachedResult) -> bool:
@@ -252,12 +285,20 @@ class ResultCache:
             "shards": result.shards,
             "wall_time_s": result.wall_time_s,
         }
+        tr = otrace.TRACER
+        slot = tr.begin("cache.put", "cache") if tr is not None else None
         try:
             self.store.put(key, meta, blobs)
         except (OSError, ValueError):
-            self.put_errors += 1
+            self._m_put_errors.inc()
+            if slot is not None:
+                otrace.Tracer.set_attrs(slot, {"key": key[:12], "ok": False})
+                otrace.Tracer.end(slot)
             return False
-        self.puts += 1
+        self._m_puts.inc()
+        if slot is not None:
+            otrace.Tracer.set_attrs(slot, {"key": key[:12], "ok": True})
+            otrace.Tracer.end(slot)
         return True
 
     @property

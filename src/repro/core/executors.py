@@ -42,6 +42,8 @@ import time
 from typing import Any, Callable, List, Optional, Union
 
 from repro import chaos
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as otrace
 from repro.shm import (
     SegmentHandle,
     SegmentPool,
@@ -52,8 +54,10 @@ from repro.shm import (
     write_segment,
 )
 
-# payload shipped to a worker: (task_id, fn, args, attempt)
-TaskPayload = tuple[int, Callable[..., Any], tuple, int]
+# payload shipped to a worker: (task_id, fn, args, attempt, trace_ctx)
+# — trace_ctx is the driver-side dispatch span id (0 = tracing off);
+# workers tolerate legacy 4-tuples
+TaskPayload = tuple[int, Callable[..., Any], tuple, int, int]
 # report(worker_id, task_id, attempt, result, error)
 ReportFn = Callable[[str, int, int, Any, Optional[BaseException]], None]
 # heartbeat(worker_id)
@@ -206,7 +210,8 @@ class Worker(threading.Thread):
                 continue
             if item is None:          # shutdown sentinel
                 return
-            task_id, fn, args, attempt = item
+            task_id, fn, args, attempt = item[:4]
+            ctx = item[4] if len(item) > 4 else 0
             self.current = (task_id, attempt)
             if not self._alive:
                 # died between get() and here: this one task is lost
@@ -224,11 +229,21 @@ class Worker(threading.Thread):
             if self.slow_factor > 1.0:
                 # stragglers burn extra wall time before doing the work
                 time.sleep(0.001 * (self.slow_factor - 1.0))
+            # ``task.run`` span brackets user logic; in a thread worker the
+            # records land directly in the driver tracer (task_end ships
+            # nothing)
+            slot = otrace.task_begin(
+                ctx, attrs={"task": task_id,
+                            "worker": self.worker_id}) if ctx else None
             try:
                 result = _execute(fn, args, self.worker_id)
+                if slot is not None:
+                    otrace.task_end(slot)
                 self.current = None
                 self._report(self.worker_id, task_id, attempt, result, None)
             except BaseException as e:   # noqa: BLE001 - report any failure
+                if slot is not None:
+                    otrace.task_end(slot)
                 self.current = None
                 self._report(self.worker_id, task_id, attempt, None, e)
 
@@ -384,6 +399,11 @@ def _process_worker_main(worker_id: str, conn,
             time.sleep(_POLL_S)
 
     threading.Thread(target=beater, daemon=True).start()
+    # a forked worker inherits the driver's tracer and metric values;
+    # both belong to the driver timeline — drop them so this process
+    # ships only its own spans and deltas
+    otrace.disable()
+    obs_metrics.snapshot(reset=True)
     executed = 0
     while True:
         try:
@@ -394,7 +414,8 @@ def _process_worker_main(worker_id: str, conn,
             return                     # driver went away
         if msg is None:                # shutdown sentinel
             return
-        task_id, fn, args, attempt = msg
+        task_id, fn, args, attempt = msg[:4]
+        ctx = msg[4] if len(msg) > 4 else 0
         executed += 1
         # a forked worker inherits the driver's installed chaos plan, so
         # process-backend crash injection is deterministic per worker too
@@ -406,11 +427,19 @@ def _process_worker_main(worker_id: str, conn,
             os._exit(13)               # crash: no report, pipe goes EOF
         if slow_factor > 1.0:
             time.sleep(0.001 * (slow_factor - 1.0))
+        slot = otrace.task_begin(
+            ctx, attrs={"task": task_id, "worker": worker_id}) if ctx else None
         try:
             result = _execute(fn, args, worker_id)
-            out = ("done", worker_id, task_id, attempt, result, None)
+            error: Optional[BaseException] = None
         except BaseException as e:     # noqa: BLE001 - report any failure
-            out = ("done", worker_id, task_id, attempt, None, e)
+            result, error = None, e
+        # worker spans and metric deltas ride home with the result (and
+        # through the spill path when the payload is bulky)
+        records = otrace.task_end(slot) if slot is not None else []
+        mdelta = obs_metrics.snapshot(reset=True)
+        out = ("done", worker_id, task_id, attempt, result, error,
+               records, mdelta)
         try:
             blob = pickle.dumps(out)
         except Exception as e:         # unpicklable result/exception
@@ -740,7 +769,12 @@ class ProcessBackend(ExecutorBackend):
                         except OSError:
                             pass
                 if msg[0] == "done":
-                    _, wid, task_id, attempt, result, error = msg
+                    wid, task_id, attempt, result, error = msg[1:6]
+                    if len(msg) > 6:
+                        # stitch worker spans into the driver timeline and
+                        # fold the worker's metric delta into the registry
+                        otrace.ingest(msg[6])
+                        obs_metrics.absorb(msg[7])
                     with self._lock:
                         w.outstanding.pop((task_id, attempt), None)
                     self._report(wid, task_id, attempt, result, error)

@@ -59,6 +59,8 @@ from collections import defaultdict
 from typing import Callable, Iterable, NamedTuple, Optional, Sequence
 
 from repro import chaos
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as otrace
 
 from .bag import Bag, Message, iter_time_ordered
 
@@ -67,6 +69,16 @@ BatchCallback = Callable[[list[Message]], None]
 
 #: per-message prefetch depth ``RosPlay.run(prefetch=True)`` defaults to
 MESSAGE_PREFETCH = 256
+
+#: messages per ``play.read`` trace span in per-message replay — spans are
+#: chunked so tracing stays off the per-message hot path
+TRACE_CHUNK = 256
+
+# process-wide lane metrics (adaptive growth, producer stalls), folded
+# into the repro.obs.metrics registry snapshot
+_LANE_METRICS = obs_metrics.scope("lane")
+_M_LANE_GROWN = _LANE_METRICS.counter("grown")
+_M_LANE_STALLS = _LANE_METRICS.counter("enqueue_stalls")
 
 
 class Publisher:
@@ -173,6 +185,7 @@ class _Lane:
             if 0 < q.maxsize < cap:
                 q.maxsize = min(q.maxsize * 2, cap)
                 self.grown += 1
+                _M_LANE_GROWN.inc()
                 q.not_full.notify_all()
 
     def _record_error(self, e: BaseException) -> None:
@@ -194,7 +207,17 @@ class _Lane:
             # blocking (up to the caps; beyond them this is plain
             # backpressure)
             self._deepen(item)
-        self.queue.put((callback, item))        # blocks when full
+        tr = otrace.TRACER
+        if tr is not None and self.queue.full():
+            # the producer is about to block — bill the stall to a span
+            # (only probed under tracing: full() takes the queue mutex)
+            _M_LANE_STALLS.inc()
+            t0 = time.perf_counter_ns()
+            self.queue.put((callback, item))    # blocks when full
+            tr.emit("lane.enqueue_stall", "lane", t0, time.perf_counter_ns(),
+                    attrs={"lane": self.key})
+        else:
+            self.queue.put((callback, item))    # blocks when full
         if self.closed and not self._thread.is_alive():
             # shutdown raced the enqueue and the worker is already gone —
             # sweep so the item is never stranded.  (While the worker is
@@ -204,10 +227,23 @@ class _Lane:
             self._sweep(record=False)
 
     def _run(self) -> None:
+        # tracing is burst-granular: one ``lane.deliver`` span covers a
+        # contiguous drain burst (first get after idle -> queue empty), so
+        # the per-message cost is one global read + two cheap checks
+        slot: Optional[list] = None
+        n_burst = 0
         while True:
             callback, item = self.queue.get()
+            tr = otrace.TRACER
+            if tr is not None and slot is None and callback is not None:
+                slot = tr.begin("lane.deliver", "lane")
+                n_burst = 0
             try:
                 if callback is None:            # stop sentinel
+                    if slot is not None:
+                        otrace.Tracer.set_attrs(
+                            slot, {"lane": self.key, "n": n_burst})
+                        otrace.Tracer.end(slot)
                     return
                 plan = chaos.active_plan()
                 if plan is not None:
@@ -221,6 +257,13 @@ class _Lane:
                 self._record_error(e)
             finally:
                 self.queue.task_done()
+            if slot is not None:
+                n_burst += 1
+                if self.queue.empty():
+                    otrace.Tracer.set_attrs(
+                        slot, {"lane": self.key, "n": n_burst})
+                    otrace.Tracer.end(slot)
+                    slot = None
 
     def _sweep(self, record: bool) -> None:
         """Deliver (inline) anything still queued after the worker exited.
@@ -672,8 +715,15 @@ class RosPlay:
         pubs: dict[str, Publisher] = {}
         t0_msg: Optional[int] = None
         t0_wall = time.monotonic()
+        # tracing is chunk-granular: one ``play.read`` span per
+        # TRACE_CHUNK messages covers read+decode+publish of the chunk
+        tr = otrace.TRACER
+        slot: Optional[list] = None
+        chunk = 0
         try:
             for msg in it:
+                if tr is not None and slot is None:
+                    slot = tr.begin("play.read", "play")
                 if self._rate is not None:
                     if t0_msg is None:
                         t0_msg = msg.timestamp
@@ -686,7 +736,17 @@ class RosPlay:
                     pub = pubs[msg.topic] = self._bus.advertise(msg.topic)
                 pub.publish_message(msg)
                 self.messages_played += 1
+                if slot is not None:
+                    chunk += 1
+                    if chunk >= TRACE_CHUNK:
+                        otrace.Tracer.set_attrs(slot, {"n": chunk})
+                        otrace.Tracer.end(slot)
+                        slot = None
+                        chunk = 0
         finally:
+            if slot is not None:
+                otrace.Tracer.set_attrs(slot, {"n": chunk})
+                otrace.Tracer.end(slot)
             close = getattr(it, "close", None)
             if close is not None:       # stop an abandoned reader thread
                 close()
@@ -710,8 +770,21 @@ class RosPlay:
         t0_wall = time.monotonic()
         it = iter_message_batches(self._time_ordered(), batch_size,
                                   prefetch=prefetch)
+        tr = otrace.TRACER
         try:
-            for batch in it:
+            it_ = iter(it)
+            while True:
+                # traced at batch granularity: ``play.read`` bills framing
+                # (bag read + decode + heap ordering), ``play.publish``
+                # bills bus dispatch — the two halves of the replay stage
+                if tr is not None:
+                    r_slot = tr.begin("play.read", "play")
+                    batch = next(it_, None)
+                    otrace.Tracer.end(r_slot)
+                else:
+                    batch = next(it_, None)
+                if batch is None:
+                    break
                 if self._rate is not None:
                     if t0_msg is None:
                         t0_msg = batch[0].timestamp
@@ -719,7 +792,13 @@ class RosPlay:
                     delay = target - (time.monotonic() - t0_wall)
                     if delay > 0:
                         time.sleep(delay)
-                self.messages_played += self._bus.publish_batch(batch)
+                if tr is not None:
+                    p_slot = tr.begin("play.publish", "play",
+                                      attrs={"n": len(batch)})
+                    self.messages_played += self._bus.publish_batch(batch)
+                    otrace.Tracer.end(p_slot)
+                else:
+                    self.messages_played += self._bus.publish_batch(batch)
         finally:
             close = getattr(it, "close", None)
             if close is not None:       # stop an abandoned reader thread
@@ -777,10 +856,16 @@ class RosRecord:
                 kept = [m for m in msgs if m.topic not in self._exclude]
                 if not kept:
                     return
+                tr = otrace.TRACER
+                slot = (tr.begin("record.write", "record",
+                                 attrs={"n": len(kept)})
+                        if tr is not None else None)
                 with self._lock:
                     for m in kept:
                         self._bag.write_message(m)
                     self.messages_recorded += len(kept)
+                if slot is not None:
+                    otrace.Tracer.end(slot)
             if self._topics is None:
                 self._bus.subscribe_batch(None, bcb, **none_kw)
                 self._batch_cbs.append((None, bcb))

@@ -51,6 +51,9 @@ from dataclasses import dataclass, field
 from enum import Enum
 from typing import Any, Callable, Optional, Union
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as otrace
+
 from .executors import (ExecutorBackend, ProcessBackend, TaskPayload,
                         ThreadBackend, Worker, make_backend)
 
@@ -115,9 +118,16 @@ class Scheduler:
         self._newly_done: list[int] = []     # completions not yet notified
         self._newly_failed: list[int] = []   # quarantined, not yet notified
         self._failed_job: Optional[BaseException] = None
-        self.stats = {"retries": 0, "speculative_launches": 0,
-                      "worker_deaths": 0, "tasks_done": 0,
-                      "tasks_failed": 0, "deadline_retries": 0}
+        # counters live in the repro.obs.metrics registry; the ``stats``
+        # property below is the deprecated dict-shaped view
+        self._metrics = obs_metrics.scope("scheduler")
+        self._m = {k: self._metrics.counter(k)
+                   for k in ("retries", "speculative_launches",
+                             "worker_deaths", "tasks_done", "tasks_failed",
+                             "deadline_retries")}
+        self._extra_stats: dict[str, int] = {}
+        # open ``sched.task`` dispatch spans keyed by (task_id, attempt)
+        self._trace_slots: dict[tuple[int, int], list] = {}
         self._backend = make_backend(backend)
         self._backend.start(self._on_report, self._on_beat)
         for i in range(num_workers):
@@ -126,6 +136,15 @@ class Scheduler:
     @property
     def backend(self) -> ExecutorBackend:
         return self._backend
+
+    @property
+    def stats(self) -> dict:
+        """Deprecated dict view over the scheduler's registry counters
+        (use ``repro.obs.metrics``).  Read-only in effect: mutating the
+        returned dict does not touch the underlying metrics."""
+        out = {k: c.value for k, c in self._m.items()}
+        out.update(self._extra_stats)
+        return out
 
     @property
     def spill_stats(self) -> dict[str, int]:
@@ -186,7 +205,20 @@ class Scheduler:
     def _dispatch(self, task: Task) -> None:
         task.state = TaskState.RUNNING
         task.started_at[task.attempt] = time.monotonic()
-        payload: TaskPayload = (task.task_id, task.fn, task.args, task.attempt)
+        ctx = 0
+        tr = otrace.TRACER
+        if tr is not None:
+            # the dispatch span covers queue wait + execution (closed at
+            # report/retry); its id is the trace context the worker-side
+            # ``task.run`` span parents under
+            attrs = {"task": task.task_id, "attempt": task.attempt}
+            if task.lineage:
+                attrs["stage"] = list(task.lineage[:2])
+            slot = tr.begin("sched.task", "sched", attrs=attrs)
+            self._trace_slots[(task.task_id, task.attempt)] = slot
+            ctx = otrace.Tracer.span_id(slot)
+        payload: TaskPayload = (task.task_id, task.fn, task.args,
+                                task.attempt, ctx)
         self._backend.submit(payload)
 
     @staticmethod
@@ -207,6 +239,9 @@ class Scheduler:
                    result: Any, error: Optional[BaseException]) -> None:
         with self._lock:
             self._last_beat[worker_id] = time.monotonic()
+            slot = self._trace_slots.pop((task_id, attempt), None)
+            if slot is not None:
+                otrace.Tracer.end(slot)
             task = self._tasks.get(task_id)
             if task is None or task.state != TaskState.RUNNING:
                 return      # a speculative copy already won, or job failed
@@ -221,7 +256,7 @@ class Scheduler:
                         self._stage_key(task.lineage), []).append(
                             task.finished_at - start)
                 self._outstanding -= 1
-                self.stats["tasks_done"] += 1
+                self._m["tasks_done"].inc()
                 self._newly_done.append(task_id)
             elif attempt == task.attempt:
                 self._retry_locked(task, error)
@@ -230,8 +265,18 @@ class Scheduler:
             # burn a retry on it
 
     def _retry_locked(self, task: Task, error: BaseException) -> None:
+        slot = self._trace_slots.pop((task.task_id, task.attempt), None)
+        if slot is not None:
+            otrace.Tracer.end(slot)         # lost/expired attempt's span
+        tr = otrace.TRACER
+        if tr is not None:
+            tr.instant("sched.retry", "sched",
+                       attrs={"task": task.task_id,
+                              "attempt": task.attempt,
+                              "err": f"{type(error).__name__}: "
+                                     f"{error}"[:120]})
         task.attempt += 1
-        self.stats["retries"] += 1
+        self._m["retries"].inc()
         if task.attempt >= self._max_attempts:
             task.state = TaskState.FAILED
             task.error = error
@@ -239,7 +284,7 @@ class Scheduler:
             if self._quarantine:
                 # surrender the poison task, keep the job: the failure is
                 # delivered through on_task_failed, never re-dispatched
-                self.stats["tasks_failed"] += 1
+                self._m["tasks_failed"].inc()
                 self._newly_failed.append(task.task_id)
             else:
                 self._failed_job = error
@@ -261,7 +306,11 @@ class Scheduler:
             lost.extend(self._backend.lost_assignments(wid))
             with self._lock:
                 self._last_beat.pop(wid, None)
-                self.stats["worker_deaths"] += 1
+                self._m["worker_deaths"].inc()
+            tr = otrace.TRACER
+            if tr is not None:
+                tr.instant("sched.worker_death", "sched",
+                           attrs={"worker": wid})
         # recompute payloads that died with their worker (lineage makes
         # this safe): only if no newer attempt is already in flight
         self._requeue_lost(lost)
@@ -293,7 +342,7 @@ class Scheduler:
                 started = task.started_at.get(task.attempt)
                 if started is not None \
                         and now - started > self._task_deadline:
-                    self.stats["deadline_retries"] += 1
+                    self._m["deadline_retries"].inc()
                     self._retry_locked(task, WorkerError(
                         f"task {task.task_id} attempt {task.attempt} "
                         f"exceeded the {self._task_deadline}s deadline"))
@@ -315,6 +364,7 @@ class Scheduler:
             if not thresholds:
                 return
             now = time.monotonic()
+            tr = otrace.TRACER
             backups: list[TaskPayload] = []
             for task in self._tasks.values():
                 if task.state != TaskState.RUNNING or task.speculated:
@@ -330,9 +380,17 @@ class Scheduler:
                     task.speculated = True
                     task.attempt += 1
                     task.started_at[task.attempt] = now
-                    self.stats["speculative_launches"] += 1
+                    self._m["speculative_launches"].inc()
+                    ctx = 0
+                    if tr is not None:
+                        slot = tr.begin("sched.task", "sched",
+                                        attrs={"task": task.task_id,
+                                               "attempt": task.attempt,
+                                               "speculative": True})
+                        self._trace_slots[(task.task_id, task.attempt)] = slot
+                        ctx = otrace.Tracer.span_id(slot)
                     backups.append((task.task_id, task.fn, task.args,
-                                    task.attempt))
+                                    task.attempt, ctx))
         for payload in backups:
             self._backend.submit(payload)
 
@@ -398,7 +456,10 @@ class Scheduler:
             self._check_stragglers()
             if not fresh and not fresh_failed:
                 time.sleep(0.005)   # idle tick; skip the nap mid-burst
-        self.stats.update(self.spill_stats)
+        spill = self.spill_stats
+        self._extra_stats.update(spill)
+        for k, v in spill.items():
+            self._metrics.gauge(k).set(v)
         with self._lock:
             return {tid: t.result for tid, t in self._tasks.items()
                     if t.state == TaskState.DONE}

@@ -56,6 +56,7 @@ import importlib
 import json
 import os
 import random
+import sys
 import threading
 import time
 import zlib
@@ -63,13 +64,16 @@ from dataclasses import dataclass, field, fields as dataclass_fields
 from typing import Callable, Optional, Sequence, Union
 
 from repro import chaos
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as otrace
 from repro.shm import SegmentHandle, read_segment, shm_available
 
 from .aggregation import Aggregator, MetricsTap, TopicMetrics, Verdict
 from .bag import Bag, Message, partition_bag
 from .binpipe import BinaryPartition, encode
 from .executors import ExecutorBackend
-from .playback import MESSAGE_PREFETCH, MessageBus, RosPlay, RosRecord
+from .playback import (MESSAGE_PREFETCH, TRACE_CHUNK, MessageBus, RosPlay,
+                       RosRecord)
 from .scheduler import Scheduler
 
 UserLogic = Callable[[Message], Optional[tuple[str, bytes]]]
@@ -470,23 +474,51 @@ def _run_scenario_partition(scenario: Scenario, source: "str | bytes",
     logic_kw = dict(mode=mode, maxsize=depth, group="logic")
     sink_kw = dict(mode=mode, maxsize=depth, group="metrics",
                    exclude_topics=src.topics)
+    # logic-stage tracing: one span per micro-batch in batched mode;
+    # per-message mode emits one chunk-level ``logic.step`` span per
+    # TRACE_CHUNK callbacks (two clock reads per message when enabled,
+    # zero when disabled) so the hot path never pays per-message spans
+    _ls = [0, 0, 0]                      # chunk t0, callbacks, busy ns
+
+    def _flush_logic(now: int) -> None:
+        tr = otrace.TRACER
+        if tr is not None and _ls[1]:
+            tr.emit("logic.step", "logic", _ls[0], now,
+                    attrs={"n": _ls[1], "busy_ns": _ls[2]})
+        _ls[0] = _ls[1] = _ls[2] = 0
+
+    def _logic_tick(t0: int) -> None:
+        now = time.perf_counter_ns()
+        if _ls[0] == 0:
+            _ls[0] = t0
+        _ls[1] += 1
+        _ls[2] += now - t0
+        if _ls[1] >= TRACE_CHUNK:
+            _flush_logic(now)
+
     if scenario.batch_size is None:
         def on_msg(msg: Message) -> None:
             nonlocal n_out, n_drop
-            if drop and rng.random() < drop:
-                n_drop += 1
-                return
-            if scenario.latency_model_s:
-                time.sleep(scenario.latency_model_s)  # simulated perception
-            if chaos_plan is not None and chaos_plan.probe(
-                    "logic_raise", scenario.name) is not None:
-                raise chaos.ChaosFault(
-                    f"injected user-logic failure in {scenario.name!r}")
-            out = logic(msg)
-            if out is not None:
-                topic, data = out
-                bus.advertise(topic).publish(msg.timestamp, data)
-                n_out += 1
+            t0 = (time.perf_counter_ns()
+                  if otrace.TRACER is not None else 0)
+            try:
+                if drop and rng.random() < drop:
+                    n_drop += 1
+                    return
+                if scenario.latency_model_s:
+                    time.sleep(scenario.latency_model_s)  # simulated model
+                if chaos_plan is not None and chaos_plan.probe(
+                        "logic_raise", scenario.name) is not None:
+                    raise chaos.ChaosFault(
+                        f"injected user-logic failure in {scenario.name!r}")
+                out = logic(msg)
+                if out is not None:
+                    topic, data = out
+                    bus.advertise(topic).publish(msg.timestamp, data)
+                    n_out += 1
+            finally:
+                if t0:
+                    _logic_tick(t0)
 
         for t in input_topics:
             bus.subscribe(t, on_msg, **logic_kw)
@@ -494,23 +526,30 @@ def _run_scenario_partition(scenario: Scenario, source: "str | bytes",
     else:
         def on_batch(msgs: list[Message]) -> None:
             nonlocal n_out, n_drop
-            if drop:
-                kept = [m for m in msgs if rng.random() >= drop]
-                n_drop += len(msgs) - len(kept)
-                msgs = kept
-                if not msgs:
-                    return
-            if scenario.latency_model_s:
-                time.sleep(scenario.latency_model_s)  # one model step/batch
-            if chaos_plan is not None and chaos_plan.probe(
-                    "logic_raise", scenario.name) is not None:
-                raise chaos.ChaosFault(
-                    f"injected user-logic failure in {scenario.name!r}")
-            outs = logic(msgs)
-            if outs:
-                out_msgs = [Message(t, ts, d) for t, ts, d in outs]
-                bus.publish_batch(out_msgs)
-                n_out += len(out_msgs)
+            tr = otrace.TRACER
+            slot = (tr.begin("logic.step", "logic", attrs={"n": len(msgs)})
+                    if tr is not None else None)
+            try:
+                if drop:
+                    kept = [m for m in msgs if rng.random() >= drop]
+                    n_drop += len(msgs) - len(kept)
+                    msgs = kept
+                    if not msgs:
+                        return
+                if scenario.latency_model_s:
+                    time.sleep(scenario.latency_model_s)  # one step/batch
+                if chaos_plan is not None and chaos_plan.probe(
+                        "logic_raise", scenario.name) is not None:
+                    raise chaos.ChaosFault(
+                        f"injected user-logic failure in {scenario.name!r}")
+                outs = logic(msgs)
+                if outs:
+                    out_msgs = [Message(t, ts, d) for t, ts, d in outs]
+                    bus.publish_batch(out_msgs)
+                    n_out += len(out_msgs)
+            finally:
+                if slot is not None:
+                    otrace.Tracer.end(slot)
 
         for t in input_topics:
             bus.subscribe_batch(t, on_batch, **logic_kw)
@@ -550,6 +589,7 @@ def _run_scenario_partition(scenario: Scenario, source: "str | bytes",
             n_in = player.run_batched(scenario.batch_size,
                                       prefetch=2 if staged else 0)
         bus.drain()         # barrier: every stage flushed, errors surface
+        _flush_logic(time.perf_counter_ns())    # close the last logic chunk
         if bridge is not None:
             bridge.drain()  # cross-wire barrier: the collector has the
             #                 full stream before this task can report
@@ -596,11 +636,14 @@ def _run_scenario_aggregate(aggregator: Aggregator, scenario_name: str,
     scheduler's full retry/speculation semantics — spill files outlive
     the task (the backend reaps them at shutdown), so recompute is safe.
     """
-    merged, verdict = aggregator.aggregate(
-        scenario_name, sources, golden=golden_path,
-        messages_in=messages_in, partials=list(partials))
-    image = merged.chunked_file.image()
-    merged.close()
+    with otrace.span("aggregate.merge", "agg",
+                     attrs={"scenario": scenario_name,
+                            "sources": len(sources)}):
+        merged, verdict = aggregator.aggregate(
+            scenario_name, sources, golden=golden_path,
+            messages_in=messages_in, partials=list(partials))
+        image = merged.chunked_file.image()
+        merged.close()
     return image, verdict
 
 
@@ -892,7 +935,19 @@ class ScenarioSuite:
     def run(self, timeout: float = 300.0,
             verdict_log: Optional[str] = None,
             manifest_path: Optional[str] = None,
-            cache=None) -> dict[str, Verdict]:
+            cache=None,
+            trace: Optional[str] = None) -> dict[str, Verdict]:
+        """Drive every scenario to a verdict (see class docstring).
+
+        ``trace=<path>`` records the run with the :mod:`repro.obs`
+        tracer and writes a Chrome/Perfetto-loadable ``trace.json`` to
+        ``path`` when the suite finishes (also on failure — the flight
+        recorder matters most when a run dies): one stitched timeline of
+        driver and worker spans across scheduler, lanes, replay, logic,
+        transport, shm and cache seams.  Per-scenario per-stage
+        durations derived from the trace ride into the verdict JSONL,
+        and a ``repro.obs.metrics`` snapshot into the manifest.
+        """
         for sc in self.scenarios:
             # fail before burning replay time, not at aggregation
             if (sc.golden_bag_path is not None
@@ -902,6 +957,46 @@ class ScenarioSuite:
                     f"{sc.golden_bag_path!r} does not exist")
         plans = [(sc, self._plan(sc)) for sc in self.scenarios]
         needs, consumers = self._plan_routing()
+
+        # -- flight recorder --------------------------------------------
+        # own_trace: this run installed the tracer and tears it down; a
+        # pre-enabled tracer (a benchmark harness) is borrowed instead.
+        # Setup precedes the cache probe so cache.load spans are captured.
+        own_trace = False
+        suite_tracer: Optional[otrace.Tracer] = None
+        suite_slot = None
+        trace_out: dict = {}            # filled once by _finish_trace
+        if trace is not None:
+            own_trace = not otrace.enabled()
+            if own_trace:
+                otrace.enable(root_name="suite")
+            suite_tracer = otrace.get_tracer()
+            suite_slot = suite_tracer.begin(
+                "suite.run", "suite",
+                attrs={"scenarios": [sc.name for sc in self.scenarios]})
+            suite_tracer.push(otrace.Tracer.span_id(suite_slot))
+
+        def _finish_trace() -> None:
+            # idempotent: the normal path calls it after the cache-put
+            # sweep (so the stage breakdown rides into the verdict log);
+            # the crash path reaches it from the finally below — a
+            # partial trace is the whole point of a flight recorder
+            nonlocal suite_tracer
+            if suite_tracer is None:
+                return
+            tr, suite_tracer = suite_tracer, None
+            from repro.obs import export as obs_export
+            tr.pop()
+            otrace.Tracer.end(suite_slot)
+            records = tr.drain_all()
+            trace_out["stages"] = obs_export.stage_breakdown(records)
+            trace_out["spans"] = len(records)
+            try:
+                obs_export.write_trace(trace, records,
+                                       driver_pid=os.getpid())
+            finally:
+                if own_trace:
+                    otrace.disable()
 
         # -- result cache probe (the unchanged-suite hot path) ----------
         # a hit scenario contributes ZERO tasks: its verdict, metrics,
@@ -1301,6 +1396,10 @@ class ScenarioSuite:
             if tracked_spills and reclaim_holder:
                 for p in list(tracked_spills):
                     reclaim_holder[0](p)
+            if sys.exc_info()[0] is not None:
+                # an exception is propagating: write the partial trace
+                # now (the normal-path finalize below is unreachable)
+                _finish_trace()
 
         verdicts: dict[str, Verdict] = {}
         for i, (sc, tasks) in enumerate(plans):
@@ -1384,15 +1483,20 @@ class ScenarioSuite:
                     shards=len(sc.shard_paths), wall_time_s=wall))
         if cache is not None:
             self.last_cache_stats = dict(cache.stats)
+        _finish_trace()
         if verdict_log is not None:
             self._persist_verdicts(verdict_log, manifest_path, verdicts,
-                                   backend_name)
+                                   backend_name,
+                                   stages=trace_out.get("stages"),
+                                   metrics_snapshot=obs_metrics.snapshot())
         return verdicts
 
     @staticmethod
     def _persist_verdicts(verdict_log: str, manifest_path: Optional[str],
                           verdicts: dict[str, Verdict],
-                          backend_name: str) -> None:
+                          backend_name: str, *,
+                          stages: Optional[dict] = None,
+                          metrics_snapshot: Optional[dict] = None) -> None:
         """Append one JSONL record per scenario to ``verdict_log`` and
         rewrite the suite manifest (scenario → golden path → verdict).
 
@@ -1401,13 +1505,16 @@ class ScenarioSuite:
         (``manifest_path``, default ``<verdict_log>.manifest.json``) is
         the current snapshot a gate inspects without parsing history.
         Metric checksums ride along so a PASS can additionally be pinned
-        bit-exactly across runs.
+        bit-exactly across runs.  A traced run adds per-scenario
+        ``stages`` (stage → busy ns, from the span timeline) to each
+        record — what ``verdict_report`` trends — and every run embeds
+        the ``repro.obs.metrics`` snapshot in the manifest.
         """
         now = time.time()
         records = []
         for name, v in verdicts.items():
             r = v.report
-            records.append({
+            rec = {
                 "scenario": name,
                 "status": v.status,
                 "passed": v.passed,
@@ -1426,7 +1533,10 @@ class ScenarioSuite:
                 "transport": v.transport,
                 "error": v.error,
                 "unix_time": now,
-            })
+            }
+            if stages is not None:
+                rec["stages"] = stages.get(name)
+            records.append(rec)
         with open(verdict_log, "a") as f:
             for rec in records:
                 f.write(json.dumps(rec, sort_keys=True) + "\n")
@@ -1444,6 +1554,8 @@ class ScenarioSuite:
                 for r in records
             },
         }
+        if metrics_snapshot is not None:
+            manifest["metrics"] = metrics_snapshot
         mpath = manifest_path or verdict_log + ".manifest.json"
         with open(mpath, "w") as f:
             json.dump(manifest, f, indent=2, sort_keys=True)

@@ -85,6 +85,8 @@ from typing import Callable, Optional, Sequence
 from repro import chaos
 from repro.core.bag import Message
 from repro.core.binpipe import deserialize, serialize
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as otrace
 from repro.shm import (SegmentHandle, new_prefix, read_segment, shm_available,
                        unlink_segment, write_segment)
 from repro.shm.ring import RING_BYTES, ShmRing, boot_id
@@ -119,12 +121,13 @@ class _CreditGate:
     deadlock.  ``abort`` wakes every waiter with the transport's death.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, stall_counter=None) -> None:
         self._avail = 0
         self._err: Optional[BaseException] = None
         self._cond = threading.Condition()
         self.stalls = 0                # acquires that had to wait
         self.granted = 0               # lifetime total for this connection
+        self._stall_counter = stall_counter    # metrics mirror (optional)
 
     def grant(self, n: int) -> None:
         with self._cond:
@@ -157,6 +160,7 @@ class _CreditGate:
 
     def acquire_up_to(self, n: int, timeout: float) -> int:
         deadline = time.monotonic() + timeout
+        t_wait0 = 0
         with self._cond:
             waited = False
             while self._avail == 0:
@@ -169,10 +173,18 @@ class _CreditGate:
                     raise TransportError(
                         f"no credit from peer within {timeout}s "
                         "(remote bus stalled or unreachable)")
-                waited = True
+                if not waited:
+                    waited = True
+                    t_wait0 = time.perf_counter_ns()
                 self._cond.wait(remaining)
             if waited:
                 self.stalls += 1
+                if self._stall_counter is not None:
+                    self._stall_counter.inc()
+                tr = otrace.TRACER
+                if tr is not None:
+                    tr.emit("transport.credit_stall", "transport", t_wait0,
+                            time.perf_counter_ns())
             take = min(n, self._avail)
             self._avail -= take
             return take
@@ -224,7 +236,14 @@ class LaneTransport:
         self._pending_ring: Optional[ShmRing] = None
         self._probe: Optional[SegmentHandle] = None
         self._frame_target = self.FRAME_BYTES_TARGET
-        self.shm_switches = 0
+        # per-instance metrics scope; the old counter attributes survive
+        # as read-only properties below (deprecated shims)
+        self._metrics = obs_metrics.scope("transport")
+        self._m_messages = self._metrics.counter("messages_sent")
+        self._m_frames = self._metrics.counter("frames_sent")
+        self._m_reconnects = self._metrics.counter("reconnects")
+        self._m_shm_switches = self._metrics.counter("shm_switches")
+        self._m_credit_stalls = self._metrics.counter("credit_stalls")
         self._buffer: list[Message] = []
         self._send_lock = threading.Lock()   # buffer + frame-write order
         self._state_lock = threading.Lock()  # _gen / _conn_lost / _error
@@ -235,9 +254,6 @@ class LaneTransport:
         self._conn_lost: Optional[BaseException] = None
         self._closed = False
         self._gen = 0
-        self.messages_sent = 0
-        self.frames_sent = 0
-        self.reconnects = 0
         self._flaps = 0
         # resend source on reconnect; disabled (None) when redialing is
         # impossible/off, so socketpair-style endpoints pay no memory
@@ -267,7 +283,7 @@ class LaneTransport:
         except OSError:
             pass                        # not TCP (e.g. a unix socketpair)
         fs = FrameSocket(sock, chaos_key=self.stream_id)
-        gate = _CreditGate()
+        gate = _CreditGate(stall_counter=self._m_credit_stalls)
         old = getattr(self, "_fs", None)
         if old is not None:
             self._bytes_prior += old.bytes_sent
@@ -362,6 +378,25 @@ class LaneTransport:
     @property
     def credit_stalls(self) -> int:
         return self._credits.stalls
+
+    # deprecated counter shims — the counters now live on the transport's
+    # ``repro.obs.metrics`` scope; these properties keep every existing
+    # caller working
+    @property
+    def messages_sent(self) -> int:
+        return self._m_messages.value
+
+    @property
+    def frames_sent(self) -> int:
+        return self._m_frames.value
+
+    @property
+    def reconnects(self) -> int:
+        return self._m_reconnects.value
+
+    @property
+    def shm_switches(self) -> int:
+        return self._m_shm_switches.value
 
     @property
     def carrier(self) -> str:
@@ -459,7 +494,7 @@ class LaneTransport:
                 # happens strictly after auth, so a rejected peer can't
                 # loop on instantly-"successful" empty-history reconnects
                 self._credits.wait_granted(self._timeout)
-                self.reconnects += 1
+                self._m_reconnects.inc()
                 self._flaps += 1
                 return
             except (TransportError, OSError) as e:
@@ -474,13 +509,16 @@ class LaneTransport:
                 self._error = err
         raise err
 
-    def _send_frame(self, ftype: int, body: bytes = b"") -> None:
+    def _send_frame(self, ftype: int, body: bytes = b"",
+                    trace_ctx: Optional[int] = None) -> None:
         """(Holding ``_send_lock``.)  Emit one sender->receiver frame on
         the active carrier.  A staged ring becomes active *here*: the
         SHM_SWITCH marker is the last TCP frame in this direction, so the
         receiver observes one totally-ordered frame sequence across the
         carrier change.  Raises ``OSError`` on either carrier's death —
-        the caller's reconnect handling is carrier-agnostic."""
+        the caller's reconnect handling is carrier-agnostic.
+        ``trace_ctx`` rides the frame-header annotation to the receiver
+        (see :mod:`repro.net.wire`)."""
         ring = self._ring
         if ring is None:
             if not self._shm_ack_evt.is_set():
@@ -501,11 +539,12 @@ class LaneTransport:
                 # a one-message overshoot still has headroom
                 self._frame_target = min(self.FRAME_BYTES_TARGET,
                                          ring.max_frame // 2)
-                self.shm_switches += 1
+                self._m_shm_switches.inc()
         if ring is not None:
-            ring.send_frame(ftype, body, timeout=self._timeout)
+            ring.send_frame(ftype, body, timeout=self._timeout,
+                            trace_ctx=trace_ctx)
         else:
-            self._fs.send_frame(ftype, body)
+            self._fs.send_frame(ftype, body, trace_ctx=trace_ctx)
 
     def _resend_history_locked(self) -> None:
         """Replay every previously-sent message on the fresh connection
@@ -519,7 +558,7 @@ class LaneTransport:
                                             self._timeout)
             batch = self._history[pos:pos + n]
             self._send_frame(T_DATA, encode_data(batch))
-            self.frames_sent += 1
+            self._m_frames.inc()
             pos += n
 
     def send_message(self, msg: Message) -> None:
@@ -563,15 +602,26 @@ class LaneTransport:
                 # into history *before* the send: if the frame dies on the
                 # wire the reconnect resend already covers this batch
                 self._history.extend(batch)
+            tr = otrace.TRACER
+            slot = None
+            if tr is not None:
+                slot = tr.begin("transport.send", "transport",
+                                attrs={"n": len(batch),
+                                       "stream": self.stream_id})
             try:
-                self._send_frame(T_DATA, encode_data(batch))
+                self._send_frame(T_DATA, encode_data(batch),
+                                 trace_ctx=slot[0] if slot else None)
             except OSError as e:
+                if slot is not None:
+                    tr.end(slot)
                 if self._history is not None:
                     self._note_conn_lost(e)
                     continue        # redial at the top of the loop
                 raise TransportError(f"send failed: {e!r}") from e
-            self.messages_sent += len(batch)
-            self.frames_sent += 1
+            if slot is not None:
+                tr.end(slot)
+            self._m_messages.inc(len(batch))
+            self._m_frames.inc()
 
     def flush(self) -> None:
         """Push every buffered message onto the wire (credit-gated)."""
@@ -586,13 +636,23 @@ class LaneTransport:
         reconnected stream (after the history resend), so a returned
         ``drain()`` always means the receiver committed the complete
         stream — ack'd tokens are only ever sent commit-first."""
+        tr = otrace.TRACER
+        if tr is None:
+            self._drain_impl(None)
+            return
+        with tr.span("transport.drain", "transport",
+                     attrs={"stream": self.stream_id}) as slot:
+            self._drain_impl(slot[0])
+
+    def _drain_impl(self, trace_ctx: Optional[int]) -> None:
         token = next(self._drain_token)
         retries = 0
         while True:
             with self._send_lock:
                 self._flush_locked()
                 try:
-                    self._send_frame(T_DRAIN, encode_u32(token))
+                    self._send_frame(T_DRAIN, encode_u32(token),
+                                     trace_ctx=trace_ctx)
                 except OSError as e:
                     if self._history is not None \
                             and retries <= self._reconnect_attempts:
@@ -919,6 +979,8 @@ class RemoteBus:
                         if stream_id:
                             self.stream_carriers[stream_id] = "shm"
                 elif ftype == T_DATA:
+                    tr = otrace.TRACER
+                    t_rx0 = time.perf_counter_ns() if tr is not None else 0
                     msgs = decode_data(body)
                     self.frames_received += 1
                     self.messages_received += len(msgs)
@@ -939,6 +1001,14 @@ class RemoteBus:
                             self._delivered[stream_id] = max(
                                 self._delivered.get(stream_id, 0), seen)
                     self._grant(fs, stream_id, len(msgs))
+                    if tr is not None:
+                        # parent = the sender-side span id the frame-header
+                        # annotation carried, so the recv stitches under it
+                        carrier = ring if ring is not None else fs
+                        tr.emit("transport.recv", "transport", t_rx0,
+                                time.perf_counter_ns(),
+                                parent=carrier.last_trace_ctx,
+                                attrs={"n": len(msgs), "stream": stream_id})
                 elif ftype == T_DRAIN:
                     if self._bus is not None:
                         try:

@@ -111,6 +111,14 @@ T_SHM_OFFER = 8
 T_SHM_ACK = 9
 T_SHM_SWITCH = 10
 
+#: frame-header trace annotation: a type byte with this bit set means the
+#: body starts with an 8-byte little-endian span id (the sender's trace
+#: context) that the receiver strips before dispatching on the base type.
+#: The CRC trailer covers the annotated body, so integrity is unchanged;
+#: untraced peers never set the bit, so the grammar is backward-compatible.
+CTX_FLAG = 0x80
+CTX_PREFIX = struct.Struct("<Q")
+
 #: refuse to allocate for frames beyond this — a corrupt length prefix must
 #: fail loudly, not OOM the process
 MAX_FRAME_BYTES = 256 << 20
@@ -283,8 +291,16 @@ class FrameSocket:
         self.bytes_sent = 0
         self.bytes_received = 0
         self.chaos_key = chaos_key
+        #: trace context stripped from the last annotated frame received
+        #: (``None`` when the sender was untraced) — single-consumer, like
+        #: ``recv_frame`` itself
+        self.last_trace_ctx: Optional[int] = None
 
-    def send_frame(self, ftype: int, body: bytes = b"") -> None:
+    def send_frame(self, ftype: int, body: bytes = b"",
+                   trace_ctx: Optional[int] = None) -> None:
+        if trace_ctx is not None:
+            ftype |= CTX_FLAG
+            body = b"".join((CTX_PREFIX.pack(trace_ctx), body))
         frame = b"".join((_FRAME_HDR.pack(len(body), ftype), body,
                           _U32.pack(frame_crc(ftype, body))))
         plan = chaos.active_plan()
@@ -357,6 +373,15 @@ class FrameSocket:
             raise WireError(f"CRC mismatch on a type-{ftype} frame of "
                             f"{body_len} bytes: corrupt on the wire")
         self.bytes_received += _FRAME_HDR.size + body_len + _U32.size
+        if ftype & CTX_FLAG:
+            if body_len < CTX_PREFIX.size:
+                raise WireError("annotated frame too short for a trace "
+                                "context prefix")
+            (self.last_trace_ctx,) = CTX_PREFIX.unpack_from(body, 0)
+            ftype &= ~CTX_FLAG
+            body = bytes(memoryview(body)[CTX_PREFIX.size:])
+        else:
+            self.last_trace_ctx = None
         return ftype, body
 
     def eof_seen(self) -> bool:

@@ -1,0 +1,257 @@
+"""Metrics registry: counters/gauges/histograms behind one API.
+
+Components create a private :class:`Scope` from the process-wide
+:data:`REGISTRY` (``metrics.scope("scheduler")``) and increment plain
+metric objects on it — per-instance semantics are preserved (two
+schedulers do not share counters) while :func:`snapshot` aggregates
+every live scope of the same name into one suite-level view, which
+``ScenarioSuite`` persists into the verdict manifest.
+
+Scopes are weakly registered: a component that dies releases its
+metrics with it, so long-lived processes (test sessions, the future
+regression service) don't accumulate dead scopes.
+
+Increments are plain ``+=`` under the GIL — the same tolerance the
+pre-registry ad-hoc counters had; components that already hold a lock
+on the mutating path (scheduler, transport) stay exactly as consistent
+as before.
+
+Cross-process: worker-side scopes live in the worker.  A worker ships
+``snapshot(reset=True)`` deltas home with task results (dicts of
+plain numbers), and the driver folds them in via :func:`absorb`.
+"""
+
+from __future__ import annotations
+
+import threading
+import weakref
+from typing import Dict, List, Optional
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry", "Scope", "REGISTRY",
+    "absorb", "scope", "snapshot",
+]
+
+
+class Counter:
+    """Monotonic count; ``inc(n)`` / ``.value``."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+    def reset(self) -> None:
+        self.value = 0
+
+    def snap(self):
+        return self.value
+
+
+class Gauge:
+    """Last-set level plus high-water mark; ``set(v)`` / ``.value``."""
+
+    __slots__ = ("value", "max")
+
+    def __init__(self):
+        self.value = 0
+        self.max = 0
+
+    def set(self, v) -> None:
+        self.value = v
+        if v > self.max:
+            self.max = v
+
+    def reset(self) -> None:
+        self.value = 0
+        self.max = 0
+
+    def snap(self):
+        return {"value": self.value, "max": self.max}
+
+
+class Histogram:
+    """Power-of-two bucketed distribution of non-negative samples.
+
+    Bucket ``i`` counts samples in ``[2**(i-1), 2**i)`` (bucket 0 is
+    ``< 1``); the top bucket absorbs overflow.  Fixed storage, no
+    allocation per observe.
+    """
+
+    __slots__ = ("count", "total", "min", "max", "buckets")
+
+    N_BUCKETS = 40
+
+    def __init__(self):
+        self.count = 0
+        self.total = 0
+        self.min = None
+        self.max = None
+        self.buckets = [0] * self.N_BUCKETS
+
+    def observe(self, v) -> None:
+        self.count += 1
+        self.total += v
+        if self.min is None or v < self.min:
+            self.min = v
+        if self.max is None or v > self.max:
+            self.max = v
+        i = 0 if v < 1 else min(int(v).bit_length(), self.N_BUCKETS - 1)
+        self.buckets[i] += 1
+
+    def reset(self) -> None:
+        self.count = 0
+        self.total = 0
+        self.min = None
+        self.max = None
+        self.buckets = [0] * self.N_BUCKETS
+
+    def snap(self):
+        return {"count": self.count, "total": self.total,
+                "min": self.min, "max": self.max,
+                "mean": (self.total / self.count) if self.count else None}
+
+
+class Scope:
+    """A named bag of metrics owned by one component instance."""
+
+    __slots__ = ("name", "_metrics", "_lock", "__weakref__")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._metrics: Dict[str, object] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, name: str, cls):
+        m = self._metrics.get(name)
+        if m is None:
+            with self._lock:
+                m = self._metrics.get(name)
+                if m is None:
+                    m = self._metrics[name] = cls()
+        if not isinstance(m, cls):
+            raise TypeError(f"metric {self.name}.{name} already registered "
+                            f"as {type(m).__name__}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    def snapshot(self, reset: bool = False) -> Dict[str, object]:
+        with self._lock:
+            out = {name: m.snap() for name, m in self._metrics.items()}
+            if reset:
+                # reset in place: components cache metric object refs
+                # (e.g. a transport's counter attributes), so swapping in
+                # fresh instances would silently orphan them
+                for m in self._metrics.values():
+                    m.reset()
+        return out
+
+
+def _merge(a, b):
+    """Aggregate two snapshot values of the same metric name."""
+    if isinstance(a, dict) and isinstance(b, dict):
+        out = dict(a)
+        for k, v in b.items():
+            if v is None:
+                continue
+            cur = out.get(k)
+            if cur is None:
+                out[k] = v
+            elif k == "min":
+                out[k] = min(cur, v)
+            elif k == "max":
+                out[k] = max(cur, v)
+            elif k == "mean":
+                pass                    # recomputed below when possible
+            else:
+                out[k] = cur + v
+        if "count" in out and out.get("count"):
+            tot = out.get("total")
+            if tot is not None:
+                out["mean"] = tot / out["count"]
+        return out
+    if isinstance(a, (int, float)) and isinstance(b, (int, float)):
+        return a + b
+    return b
+
+
+class Registry:
+    """Process-wide set of weakly-held scopes."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._scopes: List[weakref.ref] = []
+        #: deltas absorbed from other processes, keyed by scope name
+        self._absorbed: Dict[str, Dict[str, object]] = {}
+
+    def scope(self, name: str) -> Scope:
+        s = Scope(name)
+        with self._lock:
+            self._scopes.append(weakref.ref(s))
+        return s
+
+    def absorb(self, snap: Dict[str, Dict[str, object]]) -> None:
+        """Fold a foreign ``snapshot()`` (e.g. shipped from a worker
+        process with a task result) into this registry's view."""
+        if not snap:
+            return
+        with self._lock:
+            for scope_name, metrics_ in snap.items():
+                cur = self._absorbed.setdefault(scope_name, {})
+                for mname, val in metrics_.items():
+                    prev = cur.get(mname)
+                    cur[mname] = val if prev is None else _merge(prev, val)
+
+    def snapshot(self, reset: bool = False) -> Dict[str, Dict[str, object]]:
+        """Aggregate every live scope (summing same-named scopes from
+        multiple component instances) plus absorbed worker deltas."""
+        out: Dict[str, Dict[str, object]] = {}
+        with self._lock:
+            refs = list(self._scopes)
+            if reset:
+                self._scopes = [r for r in refs if r() is not None]
+            absorbed = {k: dict(v) for k, v in self._absorbed.items()}
+            if reset:
+                self._absorbed = {}
+        for ref in refs:
+            s = ref()
+            if s is None:
+                continue
+            snap = s.snapshot(reset=reset)
+            cur = out.setdefault(s.name, {})
+            for mname, val in snap.items():
+                prev = cur.get(mname)
+                cur[mname] = val if prev is None else _merge(prev, val)
+        for scope_name, metrics_ in absorbed.items():
+            cur = out.setdefault(scope_name, {})
+            for mname, val in metrics_.items():
+                prev = cur.get(mname)
+                cur[mname] = val if prev is None else _merge(prev, val)
+        return out
+
+
+#: the process-wide default registry
+REGISTRY = Registry()
+
+
+def scope(name: str) -> Scope:
+    return REGISTRY.scope(name)
+
+
+def absorb(snap: Optional[Dict[str, Dict[str, object]]]) -> None:
+    REGISTRY.absorb(snap or {})
+
+
+def snapshot(reset: bool = False) -> Dict[str, Dict[str, object]]:
+    return REGISTRY.snapshot(reset=reset)

@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.core.bag import Message
 from repro.kernels.compat import resolve_interpret
+from repro.obs import trace as otrace
 
 #: default topic perception outputs publish on
 OUT_TOPIC = "/perception"
@@ -144,6 +145,10 @@ class PerceptionStep:
         zero-copy frame view stays valid after the call.
         """
         import jax.numpy as jnp
+        tr = otrace.TRACER
+        slot = (tr.begin("perception.step", "logic",
+                         attrs={"rows": len(batch["lengths"])})
+                if tr is not None else None)
         args = [jnp.array(batch["payload"]), jnp.array(batch["scale"]),
                 jnp.array(batch["zero_point"]),
                 jnp.array(np.asarray(batch["lengths"], dtype=np.int32))]
@@ -156,7 +161,10 @@ class PerceptionStep:
             # still applies, and the warning would fire once per trace
             warnings.filterwarnings(
                 "ignore", message="Some donated buffers were not usable")
-            return self._step(self.params, *args)
+            out = self._step(self.params, *args)
+        if slot is not None:
+            otrace.Tracer.end(slot)
+        return out
 
     def run_batch(self, batch: dict) -> dict:
         """Zero-copy face: columnar batch in, columnar output batch out.

@@ -52,7 +52,9 @@ from multiprocessing import shared_memory
 from typing import Callable, Optional, Tuple
 
 from repro import chaos
-from repro.net.wire import MAX_FRAME_BYTES, WireError, frame_crc
+from repro.net.wire import (CTX_FLAG, CTX_PREFIX, MAX_FRAME_BYTES, WireError,
+                            frame_crc)
+from repro.obs import trace as otrace
 from repro.shm.segments import _shm_unlink, _untrack, new_prefix
 
 __all__ = ["ShmRing", "RING_BYTES", "boot_id"]
@@ -113,6 +115,8 @@ class ShmRing:
         self.bytes_sent = 0
         self.frames_received = 0
         self.bytes_received = 0
+        #: trace context stripped from the last annotated frame received
+        self.last_trace_ctx: Optional[int] = None
 
     # -- construction -------------------------------------------------------
 
@@ -163,7 +167,8 @@ class ShmRing:
     # -- writer side --------------------------------------------------------
 
     def send_frame(self, ftype: int, body=b"",
-                   timeout: Optional[float] = 30.0) -> None:
+                   timeout: Optional[float] = 30.0,
+                   trace_ctx: Optional[int] = None) -> None:
         """Publish one frame; blocks while the ring is full.  Raises
         ``OSError`` if the ring is closed or the reader stops draining
         (the transport's reconnect path treats it like a dead socket).
@@ -171,9 +176,18 @@ class ShmRing:
         Unlike the socket path there is no joined frame allocation:
         header, body and CRC trailer are placed straight into the ring
         region (the chaos seam still materialises full frame bytes — it
-        has to damage them)."""
+        has to damage them).  ``trace_ctx`` applies the same
+        frame-header annotation as :meth:`FrameSocket.send_frame`."""
         if not isinstance(body, (bytes, bytearray, memoryview)):
             body = bytes(body)
+        tr = otrace.TRACER
+        if tr is not None:
+            if trace_ctx is None:
+                trace_ctx = tr.ctx()
+            _t0 = otrace.perf_counter_ns()
+        if trace_ctx is not None:
+            ftype |= CTX_FLAG
+            body = b"".join((CTX_PREFIX.pack(trace_ctx), bytes(body)))
         plan = chaos.active_plan()
         if plan is not None:
             fault = plan.probe("wire_corrupt", self.chaos_key)
@@ -197,6 +211,9 @@ class ShmRing:
         _U64.pack_into(buf, _HEAD_OFF, self._head)
         self.frames_sent += 1
         self.bytes_sent += need
+        if tr is not None:
+            tr.emit("shm.send", "shm", _t0, otrace.perf_counter_ns(),
+                    attrs={"bytes": need})
 
     def _send_tampered(self, frame: bytes, fault, plan,
                        timeout: Optional[float]) -> None:
@@ -329,6 +346,7 @@ class ShmRing:
                     body_len = first
                     need = hdr_size + body_len + 4
                     if avail >= need:
+                        t_parse = time.perf_counter_ns()
                         ftype = buf[DATA_OFF + r + 4]
                         start = DATA_OFF + r + hdr_size
                         body = buf[start:start + body_len]
@@ -342,6 +360,23 @@ class ShmRing:
                         self._pending_view = body
                         self.frames_received += 1
                         self.bytes_received += need
+                        if ftype & CTX_FLAG:
+                            if body_len < CTX_PREFIX.size:
+                                raise WireError(
+                                    "annotated frame too short for a trace "
+                                    "context prefix")
+                            (self.last_trace_ctx,) = CTX_PREFIX.unpack_from(
+                                body, 0)
+                            ftype &= ~CTX_FLAG
+                            body = body[CTX_PREFIX.size:]
+                        else:
+                            self.last_trace_ctx = None
+                        tr = otrace.TRACER
+                        if tr is not None:
+                            tr.emit("shm.recv", "shm", t_parse,
+                                    time.perf_counter_ns(),
+                                    parent=self.last_trace_ctx,
+                                    attrs={"bytes": need})
                         return ftype, body
             # no complete frame yet: closed flag, dead peer, then wait
             if buf[_CLOSED_OFF]:

@@ -53,6 +53,8 @@ from dataclasses import dataclass
 from multiprocessing import shared_memory
 from typing import Dict, List, Optional, Union
 
+from repro.obs import metrics as obs_metrics
+
 __all__ = [
     "SHM_PREFIX_BASE", "SegmentError", "SegmentHandle", "MappedSegment",
     "SegmentPool", "shm_available", "new_prefix", "write_segment",
@@ -346,9 +348,24 @@ class SegmentPool:
         self._free_bytes = 0
         self._gen = 0
         self._closed = False
-        self.puts = 0
-        self.bytes_in = 0
-        self.recycled = 0
+        # counters live in the repro.obs.metrics registry; the old
+        # attribute names remain as read-only property shims
+        self._metrics = obs_metrics.scope("shm_pool")
+        self._m_puts = self._metrics.counter("puts")
+        self._m_bytes_in = self._metrics.counter("bytes_in")
+        self._m_recycled = self._metrics.counter("recycled")
+
+    @property
+    def puts(self) -> int:
+        return self._m_puts.value
+
+    @property
+    def bytes_in(self) -> int:
+        return self._m_bytes_in.value
+
+    @property
+    def recycled(self) -> int:
+        return self._m_recycled.value
 
     def _pop_free(self, size: int) -> Optional[shared_memory.SharedMemory]:
         """Smallest parked segment that fits ``size`` without hoarding
@@ -365,7 +382,7 @@ class SegmentPool:
             return None
         seg = self._free.pop(best)
         self._free_bytes -= seg.size
-        self.recycled += 1
+        self._m_recycled.inc()
         return seg
 
     def put(self, data, refs: int = 1) -> SegmentHandle:
@@ -399,8 +416,8 @@ class SegmentPool:
                 closing = False
                 self._refs[handle] = max(1, refs)
                 self._open[handle.name] = seg
-                self.puts += 1
-                self.bytes_in += size
+                self._m_puts.inc()
+                self._m_bytes_in.inc(size)
         if closing:
             seg.close()
             unlink_segment(handle)

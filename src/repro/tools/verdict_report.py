@@ -26,7 +26,13 @@ and wall time to the median of all earlier runs):
                     (``"cache": "hit"`` from ``run(cache=...)``) are
                     excluded on both sides: a hit's near-zero wall would
                     poison the median and a hit can never *be* a wall-time
-                    regression, so hits neither flag nor count as baseline
+                    regression, so hits neither flag nor count as baseline.
+                    Traced runs (``run(trace=...)``) additionally carry a
+                    per-stage busy-time dict (``"stages"``, from the span
+                    timeline) and trend **per stage** against the same
+                    factor — so "wall time is flat but the logic stage
+                    doubled while read halved" still flags, attributed to
+                    the stage that actually moved
 ``CARRIER-SHIFT``   the export transport changed between the last two
                     runs that recorded one (e.g. ``shm`` -> ``wire``:
                     the same-host ring stopped negotiating — bit-exact
@@ -47,6 +53,9 @@ suite is a red build even though the run "completed".
 ``--strict`` exits 1 when any flag fires or any scenario is currently
 ERROR — the CI trip-wire shape.
 ``--json out.json`` additionally writes the full analysis.
+``--metrics [manifest.json]`` appends the suite metrics snapshot the
+manifest embeds (scheduler/cache/transport/lane/shm counters) — the
+path defaults to ``<log>.manifest.json``.
 """
 
 from __future__ import annotations
@@ -59,6 +68,10 @@ from typing import Optional, Sequence
 
 #: wall times below this are scheduling noise, never a regression signal
 WALL_FLOOR_S = 0.05
+
+#: per-stage busy times below this (20 ms) never flag — a stage that
+#: cheap regressing is noise, not a bottleneck shift
+STAGE_FLOOR_NS = 20_000_000
 
 
 def load_records(path: str) -> list[dict]:
@@ -168,6 +181,28 @@ def analyze(records: Sequence[dict],
                 flag(name, "WALLTIME",
                      f"{wall:.3f}s vs median {baseline:.3f}s "
                      f"(> {wall_factor:.2f}x)")
+        # per-stage trending (traced runs only): the span-derived busy
+        # times attribute a wall regression to the stage that moved
+        last_stages = last.get("stages")
+        if (last_stages and last.get("cache") != "hit"
+                and last.get("status") != "ERROR"):
+            entry["stages_ns"] = last_stages
+            earlier_staged = [r["stages"] for r in runs[:-1]
+                              if r.get("stages")
+                              and r.get("cache") != "hit"
+                              and r.get("status") != "ERROR"]
+            for stage_name in sorted(last_stages):
+                samples = [s[stage_name] for s in earlier_staged
+                           if s.get(stage_name) is not None]
+                if not samples:
+                    continue
+                base_ns = max(_median(samples), STAGE_FLOOR_NS)
+                cur_ns = last_stages[stage_name]
+                if cur_ns > wall_factor * base_ns:
+                    flag(name, "WALLTIME",
+                         f"stage {stage_name}: {cur_ns / 1e9:.3f}s vs "
+                         f"median {base_ns / 1e9:.3f}s "
+                         f"(> {wall_factor:.2f}x)")
     return {"scenarios": scenarios, "flags": flags, "errors": errors,
             "runs": len(records)}
 
@@ -195,6 +230,25 @@ def render(report: dict) -> str:
     return "\n".join(lines)
 
 
+def render_metrics(manifest: dict) -> str:
+    """The suite metrics snapshot a traced/verdict-logged run embedded
+    in its manifest, one scope per line as ``name=value`` columns."""
+    snap = manifest.get("metrics") or {}
+    if not snap:
+        return "no metrics snapshot in manifest"
+    lines = ["metrics snapshot:"]
+    for scope_name in sorted(snap):
+        cols = []
+        for mname in sorted(snap[scope_name]):
+            val = snap[scope_name][mname]
+            if isinstance(val, dict):
+                # gauge {value,max} / histogram {count,...}: lead value
+                val = val.get("value", val.get("count"))
+            cols.append(f"{mname}={val}")
+        lines.append(f"  {scope_name:<12} " + "  ".join(cols))
+    return "\n".join(lines)
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m repro.tools.verdict_report",
@@ -210,9 +264,17 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     parser.add_argument("--strict", action="store_true",
                         help="exit 1 when any flag fires or any scenario "
                              "is currently ERROR (CI trip-wire)")
+    parser.add_argument("--metrics", nargs="?", const="", default=None,
+                        metavar="MANIFEST",
+                        help="also print the suite metrics snapshot from "
+                             "the manifest (default <log>.manifest.json)")
     args = parser.parse_args(argv)
     report = analyze(load_records(args.log), wall_factor=args.wall_factor)
     print(render(report))
+    if args.metrics is not None:
+        mpath = args.metrics or args.log + ".manifest.json"
+        with open(mpath) as f:
+            print(render_metrics(json.load(f)))
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)
